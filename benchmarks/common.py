@@ -1,0 +1,66 @@
+"""Shared benchmark utilities: the paper's experimental setup (Appendix C)
+at configurable scale, timing helpers, CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CompKK, EFBV, run, tune_for
+from repro.problems import LogReg, make_synthetic
+
+KEY = jax.random.key(0)
+
+# synthetic stand-ins for the paper's LibSVM datasets (same d; N scaled down
+# so the full figure reproduces in CPU-minutes; the theory constants -- Tab. 3
+# -- depend only on d, k, k', n and reproduce exactly)
+DATASETS = {
+    "mushrooms": dict(N=2000, d=112),
+    "phishing": dict(N=2000, d=68),
+    "a9a": dict(N=2400, d=123),
+    "w8a": dict(N=2400, d=300),
+}
+
+
+def make_problem(name: str, n: int, overlap: int = 1, mu: float = 0.1,
+                 lam_nc: float = 0.0) -> LogReg:
+    spec = DATASETS[name]
+    A, b = make_synthetic(jax.random.fold_in(KEY, hash(name) % 2**31),
+                          N=spec["N"], d=spec["d"])
+    return LogReg.split(A, b, n=n, mu_reg=mu, overlap=overlap,
+                        key=jax.random.key(1), lam_nc=lam_nc)
+
+
+def run_algorithm(prob: LogReg, mode: str, k: int, steps: int,
+                  fstar: float) -> jnp.ndarray:
+    """One EF-BV/EF21/DIANA run with the paper's parametrization (Tab. 3);
+    returns the f(x^t) - f* trajectory."""
+    d = prob.d
+    comp = CompKK(k, d // 2)
+    t = tune_for(comp, d, prob.n, mode=mode, L=prob.L(), Ltilde=prob.L_tilde())
+    algo = EFBV(comp, lam=t.lam, nu=t.nu)
+    _, _, m = run(algo=algo, grad_fn=prob.grads, x0=jnp.zeros(d),
+                  gamma=t.gamma, steps=steps, key=KEY, n=prob.n,
+                  record=lambda x: prob.f(x) - fstar)
+    return m
+
+
+def timeit(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median microseconds per call (blocks on jax outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(rows: List[Dict]) -> None:
+    for r in rows:
+        print(f"{r['name']},{r.get('us_per_call', '')},{r.get('derived', '')}")

@@ -1,0 +1,41 @@
+"""Compressor micro-benchmarks (us/call on this host) incl. the Pallas
+block-top-k kernel (interpret mode on CPU) vs its XLA oracle."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import KEY, timeit
+from repro.core import BlockTopK, CompKK, Natural, QSGD, RandK, TopK
+from repro.kernels import ops, ref
+
+
+def run(fast: bool = True):
+    d = 1 << 16
+    x = jax.random.normal(KEY, (d,))
+    rows = []
+    cases = [
+        ("topk_1pc", jax.jit(lambda k, v: TopK(d // 100)(k, v))),
+        ("randk_1pc", jax.jit(lambda k, v: RandK(d // 100)(k, v))),
+        ("comp_k_kp", jax.jit(lambda k, v: CompKK(d // 100, d // 2)(k, v))),
+        ("block_topk_core", jax.jit(lambda k, v: BlockTopK(1024, 16)(k, v))),
+        ("natural", jax.jit(lambda k, v: Natural()(k, v))),
+        ("qsgd_s16", jax.jit(lambda k, v: QSGD(16)(k, v))),
+        ("block_topk_ref", jax.jit(lambda k, v: ref.block_topk_ref(v, 1024, 16))),
+    ]
+    iters = 5 if fast else 30
+    for name, fn in cases:
+        us = timeit(fn, KEY, x, iters=iters)
+        rows.append({"name": f"compressor/{name}", "us_per_call": f"{us:.1f}",
+                     "derived": f"d={d}"})
+    # pallas kernel (interpret on CPU -- not a speed claim, a parity check)
+    us = timeit(lambda v: ops.block_topk(v, block=1024, kb=16), x, iters=3)
+    rows.append({"name": "compressor/block_topk_pallas_interpret",
+                 "us_per_call": f"{us:.1f}", "derived": "interpret=True"})
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run(fast=True))

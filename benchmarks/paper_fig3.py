@@ -1,0 +1,41 @@
+"""Paper Figure 3 / Appendix C.3: nonconvex logistic regression with the
+regularizer lam * sum_j x_j^2 / (1 + x_j^2); EF-BV vs EF21 under Theorem 3
+stepsizes.  Metric: best gradient norm reached (Thm 3 bounds E||grad f||^2)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import KEY, make_problem
+from repro.core import CompKK, EFBV, run, tune_for
+
+
+def run_bench(fast: bool = True, n: int = 200):
+    steps = 1200 if fast else 8000
+    rows = []
+    for name in (["mushrooms"] if fast else ["mushrooms", "phishing", "a9a", "w8a"]):
+        prob = make_problem(name, n=n, mu=0.0, lam_nc=0.1)
+        d = prob.d
+        comp = CompKK(1, d // 2)
+        res = {}
+        for mode in ["efbv", "ef21"]:
+            t = tune_for(comp, d, prob.n, mode=mode, regime="nonconvex",
+                         L=prob.L(), Ltilde=prob.L_tilde())
+            algo = EFBV(comp, lam=t.lam, nu=t.nu)
+            _, _, m = run(algo=algo, grad_fn=prob.grads, x0=jnp.zeros(d),
+                          gamma=t.gamma, steps=steps, key=KEY, n=prob.n,
+                          record=lambda x: jnp.sum(prob.grad(x) ** 2))
+            res[mode] = float(np.min(np.asarray(m)))
+        rows.append({
+            "name": f"fig3/{name}/min_grad_norm2",
+            "us_per_call": "",
+            "derived": f"efbv={res['efbv']:.3e};ef21={res['ef21']:.3e};"
+                       f"efbv_better={bool(res['efbv'] <= res['ef21'] * 1.05)}",
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run_bench(fast=True))

@@ -1,0 +1,73 @@
+"""§Perf hillclimb harness: compile a VARIANT of one (arch × shape) pair and
+report the roofline-term deltas against the recorded baseline.
+
+    PYTHONPATH=src python -m benchmarks.perf_iter --arch dbrx-132b \
+        --shape train_4k --agg sparse_allgather --tag "sparse wire"
+
+Each invocation = one hypothesis→change→measure cycle; results append to
+results/perf_iters.jsonl for the EXPERIMENTS §Perf log.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+import time      # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--agg", default="dense_psum")
+    ap.add_argument("--compressor", default="block_topk:4096,64")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--trainer", default="shard_map",
+                    choices=["shard_map", "fsdp"])
+    ap.add_argument("--param-dtype", default=None)
+    ap.add_argument("--attn-impl", default=None,
+                    choices=[None, "direct", "chunked"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--hypothesis", default="")
+    ap.add_argument("--out", default="results/perf_iters.jsonl")
+    ap.add_argument("--baseline", default="results/dryrun_results.jsonl")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_one
+
+    tag = "_" + args.tag.replace(" ", "-") if args.tag else ""
+    rec = run_one(args.arch, args.shape, multi_pod=args.multi_pod,
+                  agg_mode=args.agg, compressor=args.compressor,
+                  hlo_dir="results/hlo_perf", trainer=args.trainer,
+                  param_dtype=args.param_dtype, attn_impl=args.attn_impl,
+                  hlo_tag=tag)
+    rec["tag"] = args.tag
+    rec["hypothesis"] = args.hypothesis
+
+    # diff vs baseline
+    base = None
+    if os.path.exists(args.baseline):
+        for line in open(args.baseline):
+            r = json.loads(line)
+            if (r["arch"] == args.arch and r["shape"] == args.shape
+                    and r["mesh"] == rec["mesh"] and r.get("status") == "ok"):
+                base = r
+    if base and rec.get("status") == "ok":
+        b, v = base["roofline"], rec["roofline"]
+        print(f"\n=== {args.arch} x {args.shape} [{args.tag}] ===")
+        for term in ["t_compute_s", "t_memory_s", "t_collective_s"]:
+            delta = (v[term] - b[term]) / max(b[term], 1e-30) * 100
+            print(f"  {term:16s} {b[term]:.4e} -> {v[term]:.4e}  ({delta:+.1f}%)")
+        print(f"  bottleneck       {b['bottleneck']} -> {v['bottleneck']}")
+        rec["baseline"] = {k: b[k] for k in
+                           ["t_compute_s", "t_memory_s", "t_collective_s",
+                            "bottleneck"]}
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

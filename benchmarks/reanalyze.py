@@ -1,0 +1,55 @@
+"""Re-derive roofline terms from the stored HLO dumps (no recompiles).
+
+    PYTHONPATH=src python -m benchmarks.reanalyze
+
+Rewrites the 'roofline' field of every record in results/dryrun_results.jsonl
+using the current repro.launch.hlo_cost model and the gzipped HLO in
+results/hlo/.  Lets cost-model fixes iterate in seconds instead of re-running
+the 80-compile sweep.
+"""
+
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+
+from repro.launch import hlo_cost as HC
+from repro.launch.hlo_analysis import Roofline
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(REPO, "results", "dryrun_results.jsonl")
+HLO_DIR = os.path.join(REPO, "results", "hlo")
+
+
+def main():
+    recs = [json.loads(l) for l in open(RESULTS)]
+    n_done = 0
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        fname = os.path.join(
+            HLO_DIR, f"{r['arch']}_{r['shape']}_{r['mesh']}_{r['agg_mode']}.hlo.gz")
+        if not os.path.exists(fname):
+            continue
+        with gzip.open(fname, "rt") as f:
+            txt = f.read()
+        c = HC.hlo_cost(txt)
+        roof = Roofline(
+            hlo_flops=c.flops, hlo_bytes=c.hbm_bytes, coll_bytes=c.coll_bytes,
+            coll_breakdown={k: int(v) for k, v in c.coll_breakdown.items()},
+            n_chips=r.get("n_devices", 256),
+            xla_flops=r["roofline"].get("xla_cost_analysis_flops", 0.0),
+            xla_bytes=r["roofline"].get("xla_cost_analysis_bytes", 0.0),
+        )
+        r["roofline"] = roof.as_dict()
+        n_done += 1
+    with open(RESULTS, "w") as f:
+        for r in recs:
+            f.write(json.dumps(r) + "\n")
+    print(f"re-analyzed {n_done}/{len(recs)} records")
+
+
+if __name__ == "__main__":
+    main()

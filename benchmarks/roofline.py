@@ -1,0 +1,90 @@
+"""Roofline table from the dry-run artifacts (assignment deliverable g).
+
+Reads results/dryrun_results.jsonl (written by repro.launch.dryrun) and
+prints, per (arch x shape) on the single-pod mesh: the three roofline terms,
+the dominant bottleneck, MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference) and
+the useful-compute ratio MODEL_FLOPS / HLO_FLOPS.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.launch.hlo_analysis import PEAK_FLOPS_BF16
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "results", "dryrun_results.jsonl")
+
+SHAPE_TOKENS = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (1, 128, "decode"),
+    "long_500k": (1, 1, "decode"),
+}
+
+
+def model_flops(rec: dict) -> Optional[float]:
+    shape = rec.get("shape")
+    n_active = rec.get("active_params")
+    if shape not in SHAPE_TOKENS or not n_active:
+        return None
+    seq, batch, kind = SHAPE_TOKENS[shape]
+    tokens = seq * batch
+    per_tok = 6.0 * n_active if kind == "train" else 2.0 * n_active
+    return per_tok * tokens
+
+
+def load(path: str = RESULTS, mesh: str = "16x16") -> List[dict]:
+    recs: Dict[tuple, dict] = {}
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if r.get("mesh") == mesh:
+                recs[(r["arch"], r["shape"], r.get("agg_mode"))] = r  # last write wins
+    return list(recs.values())
+
+
+def rows_from_records(recs: List[dict]) -> List[dict]:
+    out = []
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        if r.get("status") == "skipped":
+            out.append({"name": name, "us_per_call": "",
+                        "derived": f"skipped:{r.get('note', r.get('skip', ''))}"})
+            continue
+        if r.get("status") != "ok":
+            out.append({"name": name, "us_per_call": "",
+                        "derived": f"ERROR:{r.get('error', '?')[:80]}"})
+            continue
+        roof = r["roofline"]
+        mf = model_flops(r)
+        hlo_total = roof["hlo_flops_per_device"] * roof["n_chips"]
+        useful = (mf / hlo_total) if (mf and hlo_total) else None
+        out.append({
+            "name": name,
+            "us_per_call": f"{max(roof['t_compute_s'], roof['t_memory_s'], roof['t_collective_s']) * 1e6:.1f}",
+            "derived": (
+                f"t_comp={roof['t_compute_s']:.3e};t_mem={roof['t_memory_s']:.3e};"
+                f"t_coll={roof['t_collective_s']:.3e};bound={roof['bottleneck']};"
+                f"useful_flops_ratio={useful:.3f}" if useful is not None else
+                f"t_comp={roof['t_compute_s']:.3e};t_mem={roof['t_memory_s']:.3e};"
+                f"t_coll={roof['t_collective_s']:.3e};bound={roof['bottleneck']}"),
+        })
+    return out
+
+
+def run(fast: bool = True):
+    recs = load()
+    if not recs:
+        return [{"name": "roofline/missing", "us_per_call": "",
+                 "derived": "run `python -m repro.launch.dryrun` first"}]
+    return rows_from_records(recs)
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

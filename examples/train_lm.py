@@ -1,0 +1,76 @@
+"""End-to-end driver: train a ~100M-parameter LM with EF-BV compressed
+gradient aggregation on a data x model mesh.
+
+    # few-hundred-step run (~100M params; several hours of CPU -- this is the
+    # deployment-shaped entry point; on TPU the same command runs per pod):
+    PYTHONPATH=src python examples/train_lm.py
+
+    # quick demo (~8M params, minutes on CPU):
+    PYTHONPATH=src python examples/train_lm.py --tiny
+
+Everything routes through repro.launch.train: the EF-BV layer (block-top-k
+compressor, sparse all-gather wire), the WSD/cosine schedules, synthetic
+heterogeneous LM data, and npz checkpointing.
+"""
+
+import argparse
+import dataclasses
+import math
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+# force enough XLA host devices for the mesh BEFORE jax initializes
+if "XLA_FLAGS" not in os.environ:
+    _mesh = "4x1"
+    if "--mesh" in sys.argv:
+        _mesh = sys.argv[sys.argv.index("--mesh") + 1]
+    _n = math.prod(int(x) for x in _mesh.split("x"))
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_n}"
+
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+
+
+def lm100m() -> ModelConfig:
+    """~100M-param llama-style config (qwen2-family reduced)."""
+    return ModelConfig(
+        name="lm100m", family="dense",
+        n_layers=12, d_model=512, n_heads=8, n_kv_heads=2,
+        d_ff=2048, vocab=32768, head_dim=64,
+        qkv_bias=True, tie_embeddings=True,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true", help="~8M params demo")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--mesh", default="4x1")
+    args = ap.parse_args()
+
+    # register the 100M config under a patched smoke lookup, then delegate to
+    # the production driver
+    import repro.launch.train as T
+    cfg = lm100m()
+    steps = args.steps or (300 if not args.tiny else 60)
+    if args.tiny:
+        cfg = dataclasses.replace(cfg, n_layers=4, d_model=256, d_ff=1024,
+                                  vocab=4096, name="lm8m")
+
+    orig = T.get_smoke_config
+    T.get_smoke_config = lambda name: cfg  # the driver sees our config
+    try:
+        T.main(["--arch", "qwen2-0.5b", "--smoke", "--mesh", args.mesh,
+                "--steps", str(steps), "--global-batch", "16", "--seq", "256",
+                "--lr", "1e-3", "--algo", "efbv",
+                "--compressor", "block_topk:1024,64",
+                "--agg", "sparse_allgather", "--log-every", "10",
+                "--ckpt-dir", "/tmp/lm100m_ckpt", "--ckpt-every", "100"])
+    finally:
+        T.get_smoke_config = orig
+
+
+if __name__ == "__main__":
+    main()

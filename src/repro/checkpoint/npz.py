@@ -1,0 +1,74 @@
+"""Flat-npz pytree checkpointing (no external deps).
+
+Leaves are addressed by their tree path ('params/layers/attn/wq', ...);
+restore validates structure against a template pytree.  Arrays are pulled to
+host (sharded arrays are fully gathered -- fine at the scales this repo
+executes on CPU; a production TPU deployment would swap in per-shard writes
+behind the same interface).
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "|"
+
+
+def _flatten(tree: PyTree):
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves_with_paths:
+        key = _SEP.join(_path_str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: PyTree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step:08d}.npz")
+    np.savez(tmp, **_flatten(tree))  # .npz suffix keeps numpy from renaming
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, template: PyTree) -> PyTree:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    data = np.load(path)
+    flat = _flatten(template)
+    missing = set(flat) - set(data.files)
+    extra = set(data.files) - set(flat)
+    if missing or extra:
+        raise ValueError(f"checkpoint mismatch: missing={sorted(missing)[:5]} "
+                         f"extra={sorted(extra)[:5]}")
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    new_leaves = []
+    for path_t, leaf in leaves_with_paths:
+        key = _SEP.join(_path_str(p) for p in path_t)
+        arr = data[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {leaf.shape}")
+        new_leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

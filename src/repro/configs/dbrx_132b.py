@@ -1,0 +1,25 @@
+"""dbrx-132b [hf:databricks/dbrx-base]: fine-grained MoE, 16 experts top-4.
+
+40L x d6144, 48 heads GQA kv=8, per-expert ff=10752, vocab 100352.  16
+experts map one-per-shard onto the 16-way model axis (pure expert
+parallelism) -- the biggest collective load in the assignment set."""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="dbrx-132b", family="moe",
+        n_layers=40, d_model=6144, n_heads=48, n_kv_heads=8,
+        d_ff=10752, vocab=100352, head_dim=128,
+        n_experts=16, experts_per_tok=4,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="dbrx-smoke", family="moe",
+        n_layers=2, d_model=256, n_heads=4, n_kv_heads=2,
+        d_ff=256, vocab=1024, head_dim=64,
+        n_experts=4, experts_per_tok=2,
+    )

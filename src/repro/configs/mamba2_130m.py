@@ -1,0 +1,27 @@
+"""mamba2-130m: SSD / state-space duality [arXiv:2405.21060].
+
+Attention-free: 24 SSD blocks, d_model=768 (d_inner=1536, 24 ssm heads of 64),
+state=128, tied embeddings, vocab 50280.  Runs long_500k natively (O(1)/token
+recurrent decode)."""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-130m", family="ssm",
+        n_layers=24, d_model=768, n_heads=0, n_kv_heads=0,
+        d_ff=0, vocab=50280,
+        ssm_state=128, ssm_head_dim=64, ssm_expand=2, ssm_conv=4, ssm_chunk=128,
+        tie_embeddings=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-smoke", family="ssm",
+        n_layers=2, d_model=128, n_heads=0, n_kv_heads=0,
+        d_ff=0, vocab=1024,
+        ssm_state=16, ssm_head_dim=32, ssm_expand=2, ssm_conv=4, ssm_chunk=32,
+        tie_embeddings=True,
+    )

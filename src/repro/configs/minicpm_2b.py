@@ -1,0 +1,27 @@
+"""minicpm-2b [arXiv:2404.06395]: llama-like dense arch trained with the WSD
+(warmup-stable-decay) schedule -- wired to repro.optim.schedules.wsd in the
+train driver.
+
+40L x d2304, 36 heads MHA (kv=36: neither divides the 16-way model axis, so
+attention projections shard on their divisible dim per auto_spec), ff=5760,
+vocab 122753, tied embeddings."""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm-2b", family="dense",
+        n_layers=40, d_model=2304, n_heads=36, n_kv_heads=36,
+        d_ff=5760, vocab=122753, head_dim=64,
+        tie_embeddings=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm-smoke", family="dense",
+        n_layers=2, d_model=256, n_heads=4, n_kv_heads=4,
+        d_ff=512, vocab=1024, head_dim=64,
+        tie_embeddings=True,
+    )

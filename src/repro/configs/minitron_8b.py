@@ -1,0 +1,24 @@
+"""minitron-8b: width-pruned Nemotron-4 [arXiv:2407.14679].
+
+Dense decoder, 32L x d4096, 32 query heads with GQA kv=8, SwiGLU ff=16384,
+256k vocabulary (the large vocab makes the LM head / embedding the dominant
+memory term -- good roofline stressor)."""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="minitron-8b", family="dense",
+        n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+        d_ff=16384, vocab=256000, head_dim=128,
+        rope_theta=1e4, attn_window=0,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="minitron-8b-smoke", family="dense",
+        n_layers=2, d_model=256, n_heads=4, n_kv_heads=2,
+        d_ff=512, vocab=1024, head_dim=64,
+    )

@@ -1,0 +1,23 @@
+"""phi3-medium-14b [arXiv:2404.14219]: RoPE + SwiGLU + GQA dense decoder.
+
+40L x d5120, 40 heads GQA kv=10 (kv heads don't divide the 16-way model axis
+-> kv projections replicate, q/o shard), ff=17920, vocab 100352.  The largest
+dense arch: the remat + microbatch + ZeRO-1 memory path is sized for it."""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="phi3-medium-14b", family="dense",
+        n_layers=40, d_model=5120, n_heads=40, n_kv_heads=10,
+        d_ff=17920, vocab=100352, head_dim=128,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="phi3-smoke", family="dense",
+        n_layers=2, d_model=256, n_heads=4, n_kv_heads=2,
+        d_ff=512, vocab=1024, head_dim=64,
+    )

@@ -1,0 +1,28 @@
+"""qwen2-vl-2b [arXiv:2409.12191]: M-RoPE + dynamic-resolution VLM.
+
+Language decoder only (vision tower is a stub per the assignment carve-out):
+28L x d1536, 12 heads GQA kv=2, ff=8960, vocab 151936.  M-RoPE sections
+(16, 24, 24) over head_dim/2 = 64 frequency channels; batches carry
+precomputed patch embeddings interleaved before the text tokens."""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-2b", family="vlm",
+        n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2,
+        d_ff=8960, vocab=151936, head_dim=128,
+        qkv_bias=True, mrope_sections=(16, 24, 24),
+        frontend="vision", vision_patches=1024,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-smoke", family="vlm",
+        n_layers=2, d_model=256, n_heads=4, n_kv_heads=2,
+        d_ff=512, vocab=1024, head_dim=64,
+        qkv_bias=True, mrope_sections=(8, 12, 12),
+        frontend="vision", vision_patches=16,
+    )

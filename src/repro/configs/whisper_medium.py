@@ -1,0 +1,31 @@
+"""whisper-medium [arXiv:2212.04356]: encoder-decoder audio model.
+
+24 encoder + 24 decoder layers, d1024, 16 heads (MHA: kv=16), ff=4096,
+vocab 51865.  The conv/mel frontend is a stub per the assignment carve-out:
+batches carry (B, 1500, d) precomputed frame embeddings.  Adaptations noted
+in DESIGN.md: SwiGLU MLP + RMSNorm in place of GELU/LayerNorm, sinusoidal
+positions both sides.  long_500k is skipped for this arch (enc-dec with
+cross-attention; see DESIGN §6)."""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-medium", family="encdec",
+        n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+        d_ff=4096, vocab=51865, head_dim=64,
+        encoder_layers=24, encoder_frames=1500,
+        rope_theta=0.0,  # sinusoidal absolute positions, no RoPE
+        frontend="audio",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-smoke", family="encdec",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+        d_ff=256, vocab=1024, head_dim=32,
+        encoder_layers=2, encoder_frames=64,
+        rope_theta=0.0, frontend="audio",
+    )

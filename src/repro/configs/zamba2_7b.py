@@ -1,0 +1,29 @@
+"""zamba2-7b [arXiv:2411.15242]: Mamba2 backbone + one *shared* attention
+block applied every 6 layers (hybrid).
+
+81 mamba2 layers, d3584 (d_inner 7168, 112 ssm heads of 64, state 64); the
+shared block is 32-head MHA (kv=32) + SwiGLU ff=14336, vocab 32000.  Runs
+long_500k with the recurrent mamba cache + sliding-window KV for the shared
+attention block (DESIGN §6)."""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-7b", family="hybrid",
+        n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32,
+        d_ff=14336, vocab=32000, head_dim=112,
+        ssm_state=64, ssm_head_dim=64, ssm_expand=2, ssm_conv=4, ssm_chunk=128,
+        attn_every=6,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-smoke", family="hybrid",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+        d_ff=256, vocab=1024, head_dim=32,
+        ssm_state=16, ssm_head_dim=32, ssm_expand=2, ssm_conv=4, ssm_chunk=32,
+        attn_every=2,
+    )

@@ -1,0 +1,13 @@
+"""The paper's primary contribution: the C(eta, omega) compressor class,
+EF-BV (with EF21 / DIANA as parametrizations) and its tuning theory."""
+
+from repro.core.contract import Compressor, Wire, bias_variance_estimate  # noqa: F401
+from repro.core.compressors import (  # noqa: F401
+    Identity, TopK, RandK, ScaledRandK, CompKK, MixKK, BlockTopK,
+    SignNorm, Natural, QSGD, FracTopK, FracCompKK, MNice, make_compressor,
+)
+from repro.core.efbv import (  # noqa: F401
+    EFBV, EFBVState, proximal_step, prox_zero, prox_l1, prox_l2, run, run_bidirectional,
+)
+from repro.core import theory  # noqa: F401
+from repro.core.theory import Tuning, tune, tune_for  # noqa: F401

@@ -1,0 +1,513 @@
+"""The C(eta, omega) compressor zoo (Sect. 2 + Appendix A of the paper).
+
+All compressors take (key, x) and return a dense tensor of x's shape with the
+non-kept coordinates zeroed.  ``x`` may have any shape; compression constants
+are computed for d = x.size.  Deterministic compressors ignore the key (it may
+be None).
+
+Certified constants (all proved in the paper or the cited literature):
+
+  top-k        : B(k/d)            -> eta = sqrt(1 - k/d),        omega = 0
+  rand-k       : U(d/k - 1)        -> eta = 0,                    omega = d/k - 1
+  comp-(k,k')  : Prop. 5           -> eta = sqrt((d-k')/d),       omega = (k'-k)/k
+  mix-(k,k')   : Prop. 4           -> eta = (d-k-k')/sqrt((d-k)d) omega = k'(d-k-k')/((d-k)d)
+  block-top-k  : B(kb/b) per block -> eta = sqrt(1 - kb/b),       omega = 0
+  sign (norm)  : B(1/d) worst case -> eta = sqrt(1 - 1/d),        omega = 0
+  natural      : U(1/8)            -> eta = 0,                    omega = 1/8
+  qsgd (s lvls): U(min(d/s^2, sqrt(d)/s))
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.contract import Compressor, Wire
+
+Array = jax.Array
+
+
+def _flat(x: Array) -> Array:
+    return x.reshape(-1)
+
+
+def _topk_mask(xf: Array, k: int) -> Array:
+    """0/1 mask of the k largest-|.| entries of the flat vector xf."""
+    _, idx = jax.lax.top_k(jnp.abs(xf), k)
+    return jnp.zeros_like(xf).at[idx].set(1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Identity(Compressor):
+    def eta(self, d):
+        return 0.0
+
+    def omega(self, d):
+        return 0.0
+
+    def is_random(self):
+        return False
+
+    def __call__(self, key, x):
+        return x
+
+    def wire(self, d):
+        return Wire(words=d, sparse=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK(Compressor):
+    """Deterministic top-k by magnitude (Sect. 2.2): in B(k/d)."""
+
+    k: int
+
+    def eta(self, d):
+        return math.sqrt(max(0.0, 1.0 - self.k / d))
+
+    def omega(self, d):
+        return 0.0
+
+    def is_random(self):
+        return False
+
+    def __call__(self, key, x):
+        xf = _flat(x)
+        return (xf * _topk_mask(xf, self.k)).reshape(x.shape)
+
+    def wire(self, d):
+        return Wire(words=2 * self.k, sparse=True)  # (index, value) pairs
+
+    def encode(self, key, x):
+        xf = _flat(x)
+        vals, idx = jax.lax.top_k(jnp.abs(xf), self.k)
+        return xf[idx], idx
+
+    def decode(self, payload, d):
+        vals, idx = payload
+        return jnp.zeros((d,), vals.dtype).at[idx.reshape(-1)].add(vals.reshape(-1))
+
+
+@dataclasses.dataclass(frozen=True)
+class RandK(Compressor):
+    """Unbiased rand-k (Sect. 2.1): keeps k random coords scaled by d/k; U(d/k-1)."""
+
+    k: int
+
+    def eta(self, d):
+        return 0.0
+
+    def omega(self, d):
+        return d / self.k - 1.0
+
+    def __call__(self, key, x):
+        xf = _flat(x)
+        d = xf.shape[0]
+        idx = jax.random.choice(key, d, shape=(self.k,), replace=False)
+        mask = jnp.zeros_like(xf).at[idx].set(1.0)
+        return (xf * mask * (d / self.k)).reshape(x.shape)
+
+    def wire(self, d):
+        return Wire(words=2 * self.k, sparse=True)
+
+    def encode(self, key, x):
+        xf = _flat(x)
+        d = xf.shape[0]
+        idx = jax.random.choice(key, d, shape=(self.k,), replace=False)
+        return xf[idx] * (d / self.k), idx
+
+    def decode(self, payload, d):
+        vals, idx = payload
+        return jnp.zeros((d,), vals.dtype).at[idx.reshape(-1)].add(vals.reshape(-1))
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaledRandK(Compressor):
+    """rand-k without the d/k blow-up (== (k/d) * RandK; Sect. 2.5): in B(k/d)."""
+
+    k: int
+
+    def eta(self, d):
+        return 1.0 - self.k / d  # Prop. 1 with lam = k/d, eta0 = 0
+
+    def omega(self, d):
+        return (self.k / d) * (1.0 - self.k / d)
+
+    def __call__(self, key, x):
+        xf = _flat(x)
+        d = xf.shape[0]
+        idx = jax.random.choice(key, d, shape=(self.k,), replace=False)
+        mask = jnp.zeros_like(xf).at[idx].set(1.0)
+        return (xf * mask).reshape(x.shape)
+
+    def wire(self, d):
+        return Wire(words=2 * self.k, sparse=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompKK(Compressor):
+    """comp-(k, k') = rand-k o top-k' (Appendix A.2, Prop. 5).
+
+    Keeps k coords among the k' largest, scaled by k'/k.  Requires k <= k'.
+    This is the compressor of the paper's experiments: biased (eta > 0) AND
+    random with omega that can exceed 1 -- not in B(alpha) for any alpha, so
+    neither plain EF21 nor DIANA theory covers it, but EF-BV does.
+    """
+
+    k: int
+    kp: int  # k'
+
+    def __post_init__(self):
+        assert self.k <= self.kp
+
+    def eta(self, d):
+        return math.sqrt((d - self.kp) / d)
+
+    def omega(self, d):
+        return (self.kp - self.k) / self.k
+
+    def __call__(self, key, x):
+        xf = _flat(x)
+        _, top_idx = jax.lax.top_k(jnp.abs(xf), self.kp)  # k' largest
+        sub = jax.random.choice(key, self.kp, shape=(self.k,), replace=False)
+        keep = top_idx[sub]
+        mask = jnp.zeros_like(xf).at[keep].set(1.0)
+        return (xf * mask * (self.kp / self.k)).reshape(x.shape)
+
+    def wire(self, d):
+        return Wire(words=2 * self.k, sparse=True)
+
+    def encode(self, key, x):
+        xf = _flat(x)
+        _, top_idx = jax.lax.top_k(jnp.abs(xf), self.kp)
+        sub = jax.random.choice(key, self.kp, shape=(self.k,), replace=False)
+        keep = top_idx[sub]
+        return xf[keep] * (self.kp / self.k), keep
+
+    def decode(self, payload, d):
+        vals, idx = payload
+        return jnp.zeros((d,), vals.dtype).at[idx.reshape(-1)].add(vals.reshape(-1))
+
+
+@dataclasses.dataclass(frozen=True)
+class MixKK(Compressor):
+    """mix-(k, k'): top-k plus k' uniformly-random others (Appendix A.1, Prop. 4)."""
+
+    k: int
+    kp: int  # k'
+
+    def eta(self, d):
+        assert self.k + self.kp <= d
+        return (d - self.k - self.kp) / math.sqrt((d - self.k) * d)
+
+    def omega(self, d):
+        return self.kp * (d - self.k - self.kp) / ((d - self.k) * d)
+
+    def __call__(self, key, x):
+        xf = _flat(x)
+        top_mask = _topk_mask(xf, self.k)
+        # choose k' of the remaining d-k uniformly: random scores, masked top-k'
+        scores = jax.random.uniform(key, xf.shape)
+        scores = jnp.where(top_mask > 0, -1.0, scores)  # exclude already-kept
+        _, rnd_idx = jax.lax.top_k(scores, self.kp)
+        mask = top_mask.at[rnd_idx].set(1.0)
+        return (xf * mask).reshape(x.shape)
+
+    def wire(self, d):
+        return Wire(words=2 * (self.k + self.kp), sparse=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockTopK(Compressor):
+    """TPU-native block-local top-k: each contiguous block of size ``block``
+    keeps its own ``kb`` largest-|.| entries (DESIGN §3.4).
+
+    Deterministic contraction: per block E||C(xb)-xb||^2 <= (1-kb/b)||xb||^2,
+    hence globally in B(kb/b).  The Pallas kernel in repro/kernels/block_topk.py
+    implements exactly this operator; this class is the jnp oracle with the
+    same semantics (used on the convex path and as the kernel's spec holder).
+    """
+
+    block: int
+    kb: int
+
+    def eta(self, d):
+        return math.sqrt(max(0.0, 1.0 - self.kb / self.block))
+
+    def omega(self, d):
+        return 0.0
+
+    def is_random(self):
+        return False
+
+    def __call__(self, key, x):
+        xf = _flat(x)
+        d = xf.shape[0]
+        nb = -(-d // self.block)
+        pad = nb * self.block - d
+        xp = jnp.pad(xf, (0, pad)).reshape(nb, self.block)
+        _, idx = jax.lax.top_k(jnp.abs(xp), self.kb)  # (nb, kb)
+        mask = jnp.zeros_like(xp)
+        mask = jax.vmap(lambda m, i: m.at[i].set(1.0))(mask, idx)
+        return (xp * mask).reshape(-1)[:d].reshape(x.shape)
+
+    def wire(self, d):
+        nb = -(-d // self.block)
+        return Wire(words=2 * nb * self.kb, sparse=True)
+
+    def encode(self, key, x):
+        """Payload: per-block (values, block-LOCAL indices), shapes (nb, kb).
+
+        Local indices keep the wire payload at log2(block) bits per index and
+        -- critically -- avoid int32 overflow on giant leaves (dbrx's stacked
+        expert tensor has 4.2e10 elements; a global flat index cannot be an
+        int32)."""
+        xf = _flat(x)
+        d = xf.shape[0]
+        nb = -(-d // self.block)
+        pad = nb * self.block - d
+        xp = jnp.pad(xf, (0, pad)).reshape(nb, self.block)
+        _, idx = jax.lax.top_k(jnp.abs(xp), self.kb)  # (nb, kb) local
+        vals = jnp.take_along_axis(xp, idx, axis=1)
+        return vals, idx
+
+    def decode(self, payload, d):
+        """Accepts (vals, idx) of shape (nb, kb) or worker-stacked
+        (n, nb, kb); the stacked form is scatter-summed per block (the
+        sparse_allgather combine path)."""
+        vals, idx = payload
+        if vals.ndim == 3:  # (n, nb, kb) -> (nb, n*kb)
+            vals = jnp.moveaxis(vals, 0, 1).reshape(vals.shape[1], -1)
+            idx = jnp.moveaxis(idx, 0, 1).reshape(idx.shape[1], -1)
+        nb = vals.shape[0]
+        rows = jnp.arange(nb)[:, None]
+        out = jnp.zeros((nb, self.block), vals.dtype).at[rows, idx].add(vals)
+        return out.reshape(-1)[:d]
+
+
+@dataclasses.dataclass(frozen=True)
+class SignNorm(Compressor):
+    """L1-norm-scaled sign: C(x) = (||x||_1 / d) * sign(x); B(1/d) worst case."""
+
+    def eta(self, d):
+        return math.sqrt(max(0.0, 1.0 - 1.0 / d))
+
+    def omega(self, d):
+        return 0.0
+
+    def is_random(self):
+        return False
+
+    def __call__(self, key, x):
+        xf = _flat(x)
+        scale = jnp.sum(jnp.abs(xf)) / xf.shape[0]
+        return (scale * jnp.sign(xf)).reshape(x.shape)
+
+    def wire(self, d):
+        return Wire(words=1 + (d + 31) // 32, sparse=False)  # norm + bitmap
+
+
+@dataclasses.dataclass(frozen=True)
+class Natural(Compressor):
+    """Natural compression (Horvath et al. 2019): stochastic rounding of the
+    magnitude to a power of two.  Unbiased with omega = 1/8."""
+
+    def eta(self, d):
+        return 0.0
+
+    def omega(self, d):
+        return 1.0 / 8.0
+
+    def __call__(self, key, x):
+        xf = _flat(x)
+        a = jnp.abs(xf)
+        safe = jnp.where(a > 0, a, 1.0)
+        e = jnp.floor(jnp.log2(safe))
+        lo = jnp.exp2(e)
+        p = safe / lo - 1.0  # in [0,1): prob of rounding up to 2*lo
+        up = jax.random.uniform(key, xf.shape) < p
+        mag = jnp.where(up, 2.0 * lo, lo)
+        out = jnp.where(a > 0, jnp.sign(xf) * mag, 0.0)
+        return out.reshape(x.shape)
+
+    def wire(self, d):
+        return Wire(words=(9 * d + 31) // 32, sparse=False)  # 9 bits/coord
+
+
+@dataclasses.dataclass(frozen=True)
+class QSGD(Compressor):
+    """QSGD stochastic quantization with s levels (Alistarh et al. 2017).
+
+    Unbiased with omega = min(d/s^2, sqrt(d)/s).
+    """
+
+    s: int
+
+    def eta(self, d):
+        return 0.0
+
+    def omega(self, d):
+        return min(d / self.s**2, math.sqrt(d) / self.s)
+
+    def __call__(self, key, x):
+        xf = _flat(x)
+        norm = jnp.linalg.norm(xf)
+        safe_norm = jnp.where(norm > 0, norm, 1.0)
+        level = jnp.abs(xf) / safe_norm * self.s  # in [0, s]
+        low = jnp.floor(level)
+        p = level - low
+        up = jax.random.uniform(key, xf.shape) < p
+        q = (low + up.astype(xf.dtype)) / self.s
+        out = jnp.where(norm > 0, norm * jnp.sign(xf) * q, 0.0)
+        return out.reshape(x.shape)
+
+    def wire(self, d):
+        bits = max(1, math.ceil(math.log2(2 * self.s + 1)))
+        return Wire(words=1 + (bits * d + 31) // 32, sparse=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class FracTopK(Compressor):
+    """top-k with k = max(1, round(frac*d)) -- size-adaptive for per-leaf use
+    on parameter pytrees whose leaves have heterogeneous sizes."""
+
+    frac: float
+
+    def _k(self, d: int) -> int:
+        return max(1, int(round(self.frac * d)))
+
+    def eta(self, d):
+        return math.sqrt(max(0.0, 1.0 - self._k(d) / d))
+
+    def omega(self, d):
+        return 0.0
+
+    def is_random(self):
+        return False
+
+    def __call__(self, key, x):
+        xf = _flat(x)
+        return (xf * _topk_mask(xf, self._k(xf.shape[0]))).reshape(x.shape)
+
+    def wire(self, d):
+        return Wire(words=2 * self._k(d), sparse=True)
+
+    def encode(self, key, x):
+        xf = _flat(x)
+        _, idx = jax.lax.top_k(jnp.abs(xf), self._k(xf.shape[0]))
+        return xf[idx], idx
+
+    def decode(self, payload, d):
+        vals, idx = payload
+        return jnp.zeros((d,), vals.dtype).at[idx.reshape(-1)].add(vals.reshape(-1))
+
+
+@dataclasses.dataclass(frozen=True)
+class FracCompKK(Compressor):
+    """comp-(k,k') with k = frac*d, k' = fracp*d (size-adaptive CompKK)."""
+
+    frac: float
+    fracp: float
+
+    def _kk(self, d):
+        k = max(1, int(round(self.frac * d)))
+        kp = max(k, int(round(self.fracp * d)))
+        return k, kp
+
+    def eta(self, d):
+        _, kp = self._kk(d)
+        return math.sqrt((d - kp) / d)
+
+    def omega(self, d):
+        k, kp = self._kk(d)
+        return (kp - k) / k
+
+    def __call__(self, key, x):
+        xf = _flat(x)
+        return CompKK(*self._kk(xf.shape[0]))(key, xf).reshape(x.shape)
+
+    def wire(self, d):
+        k, _ = self._kk(d)
+        return Wire(words=2 * k, sparse=True)
+
+    def encode(self, key, x):
+        return CompKK(*self._kk(x.size)).encode(key, _flat(x))
+
+    def decode(self, payload, d):
+        vals, idx = payload
+        return jnp.zeros((d,), vals.dtype).at[idx.reshape(-1)].add(vals.reshape(-1))
+
+
+@dataclasses.dataclass(frozen=True)
+class MNice(Compressor):
+    """m-nice sampling (Sect. 2.4): models partial participation of m of n
+    workers per round.  The workers' compressors are *jointly* defined --
+    every worker must sample the SAME subset Omega from the round key -- so
+    this is a ``joint`` compressor: EFBV.step calls ``joint_call(round_key,
+    worker_idx, x)`` instead of splitting per-worker keys.
+
+    Constants (paper + Condat & Richtarik 2022, Prop. 1):
+        omega    = (n - m) / m
+        omega_av = (n - m) / (m (n - 1))   (= omega / (n-1); 0 if n = m = 1)
+    """
+
+    n: int
+    m: int
+
+    joint = True
+
+    def eta(self, d):
+        return 0.0  # unbiased: E[C_i(x)] = (m/n)*(n/m) x = x
+
+    def omega(self, d):
+        return (self.n - self.m) / self.m
+
+    def omega_av(self, d, n):
+        if self.n == 1:
+            return 0.0
+        return (self.n - self.m) / (self.m * (self.n - 1))
+
+    def joint_call(self, round_key, worker_idx, x):
+        member = jax.random.permutation(round_key, self.n)[: self.m]
+        keep = jnp.any(member == worker_idx)
+        return jnp.where(keep, (self.n / self.m) * x, jnp.zeros_like(x))
+
+    def __call__(self, key, x):
+        # marginal law of one worker (for property tests): participate w.p. m/n
+        keep = jax.random.uniform(key, ()) < self.m / self.n
+        return jnp.where(keep, (self.n / self.m) * x, jnp.zeros_like(x))
+
+    def wire(self, d):
+        return Wire(words=d * self.m // self.n, sparse=False)  # amortized
+
+
+# ----------------------------------------------------------------------------
+# registry / parsing ("topk:64", "comp:1,56", ...) used by configs & CLI
+# ----------------------------------------------------------------------------
+
+def make_compressor(spec: str) -> Compressor:
+    """Parse 'name[:a[,b]]' into a Compressor."""
+    name, _, args = spec.partition(":")
+    argv = [int(a) for a in args.split(",") if a]
+    table = {
+        "identity": lambda: Identity(),
+        "none": lambda: Identity(),
+        "topk": lambda: TopK(*argv),
+        "randk": lambda: RandK(*argv),
+        "scaled_randk": lambda: ScaledRandK(*argv),
+        "comp": lambda: CompKK(*argv),
+        "mix": lambda: MixKK(*argv),
+        "block_topk": lambda: BlockTopK(*argv),
+        "sign": lambda: SignNorm(),
+        "natural": lambda: Natural(),
+        "qsgd": lambda: QSGD(*argv),
+        # fraction-style specs use per-mille integers: "frac_topk:50" = 5%
+        "frac_topk": lambda: FracTopK(argv[0] / 1000.0),
+        "frac_comp": lambda: FracCompKK(argv[0] / 1000.0, argv[1] / 1000.0),
+    }
+    if name not in table:
+        raise ValueError(f"unknown compressor {name!r}; known: {sorted(table)}")
+    return table[name]()

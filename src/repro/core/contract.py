@@ -1,0 +1,103 @@
+"""Compressor contract: the paper's class C(eta, omega).
+
+A compressor is a (possibly randomized) map R^d -> R^d with two certified
+constants:
+
+  (i)  || E[C(x)] - x ||            <= eta   * ||x||        (relative bias)
+  (ii) E[ ||C(x) - E[C(x)]||^2 ]    <= omega * ||x||^2      (relative variance)
+
+(Sect. 2.3 of the paper.)  ``C(eta, 0)`` are the deterministic contractive
+compressors B(alpha) with ``1 - alpha = eta**2``; ``C(0, omega)`` are the
+unbiased compressors U(omega).  When ``eta**2 + omega < 1`` the compressor is
+contractive with ``alpha = 1 - eta**2 - omega`` (eq. (5)).
+
+Every compressor here is jit-compatible: static shapes, explicit PRNG keys.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Wire:
+    """Wire-format accounting for one compressed message of a d-vector.
+
+    ``words`` counts 32-bit words sent per worker per message, which is the
+    unit the paper plots ("number of bits sent by each node ... proportional
+    to t*k", Sect. 6).
+    """
+
+    words: int
+    sparse: bool  # True if the message is a fixed-size (indices, values) list
+
+
+class Compressor:
+    """Base class.  Subclasses must be pure / hashable (frozen dataclasses)."""
+
+    # --- certified constants -------------------------------------------------
+    def eta(self, d: int) -> float:
+        raise NotImplementedError
+
+    def omega(self, d: int) -> float:
+        raise NotImplementedError
+
+    def alpha(self, d: int) -> float:
+        """Contraction factor when in B(alpha); eq. (5)."""
+        return 1.0 - self.eta(d) ** 2 - self.omega(d)
+
+    def omega_av(self, d: int, n: int) -> float:
+        """Average relative variance of n independent copies (Sect. 2.4)."""
+        return self.omega(d) / max(n, 1)
+
+    def is_random(self) -> bool:
+        return True
+
+    # --- application ----------------------------------------------------------
+    def __call__(self, key: Optional[Array], x: Array) -> Array:
+        """Dense application: returns C(x) with the same shape as x."""
+        raise NotImplementedError
+
+    # --- wire format -----------------------------------------------------------
+    def wire(self, d: int) -> Wire:
+        """Words-on-the-wire for one message (default: dense)."""
+        return Wire(words=d, sparse=False)
+
+    # sparse encode/decode (optional; top-k family overrides)
+    def encode(self, key: Optional[Array], x: Array):
+        raise NotImplementedError(f"{type(self).__name__} has no sparse encoding")
+
+    def decode(self, payload, d: int) -> Array:
+        raise NotImplementedError(f"{type(self).__name__} has no sparse encoding")
+
+
+def scaled(c: Compressor, lam: float) -> Callable[[Optional[Array], Array], Array]:
+    """lam * C  (Prop. 1: eta' = lam*eta + 1 - lam, omega' = lam^2 omega)."""
+
+    def apply(key, x):
+        return lam * c(key, x)
+
+    return apply
+
+
+def bias_variance_estimate(
+    c: Compressor, key: Array, x: Array, n_samples: int = 256
+) -> Tuple[float, float]:
+    """Monte-Carlo estimate of (bias, variance) of C at the point x.
+
+    Returns (||E C(x) - x|| / ||x||,  E||C(x) - E C(x)||^2 / ||x||^2).
+    Used by the property tests to check class membership empirically.
+    """
+    keys = jax.random.split(key, n_samples)
+    ys = jax.vmap(lambda k: c(k, x))(keys)
+    mean = jnp.mean(ys, axis=0)
+    nx2 = jnp.sum(x * x)
+    bias = jnp.sqrt(jnp.sum((mean - x) ** 2) / nx2)
+    var = jnp.mean(jnp.sum((ys - mean) ** 2, axis=-1)) / nx2
+    return float(bias), float(var)

@@ -1,0 +1,264 @@
+"""EF-BV (Algorithm 1) over pytrees, with EF21 / DIANA as parametrizations.
+
+Two execution styles share this module:
+
+* the *reference* style used by the convex benchmarks and tests: all n
+  workers' control variates are materialized with a leading worker axis and
+  the per-worker compressors run under ``vmap`` -- bit-exact semantics of
+  Algorithm 1 incl. the master-side bookkeeping;
+
+* the *distributed* style (repro/distributed/aggregate.py) runs the same
+  per-worker math inside ``shard_map`` where the leading worker axis is the
+  mesh's (pod, data) axes and the master aggregation is a collective.
+
+Both call into :func:`worker_update` / :func:`master_update` below so the
+algorithm lives in exactly one place.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.contract import Compressor
+from repro.core import theory
+
+Array = jax.Array
+PyTree = Any
+
+
+class EFBVState(NamedTuple):
+    """State of Algorithm 1.
+
+    h:      per-worker control variates h_i -- leading axis n in the reference
+            impl; local (no leading axis) inside shard_map.
+    h_avg:  the master's running average h^t = (1/n) sum_i h_i^t.
+    step:   iteration counter t.
+    """
+
+    h: PyTree
+    h_avg: PyTree
+    step: Array
+
+
+@dataclasses.dataclass(frozen=True)
+class EFBV:
+    """The algorithm, frozen so it can be a static jit argument.
+
+    lam/nu are the two scaling parameters (Sect. 3): lam controls the control-
+    variate update (variance reduction), nu the gradient-estimate update
+    (error feedback).  nu = lam -> EF21; nu = 1 -> DIANA.
+    """
+
+    compressor: Compressor
+    lam: float
+    nu: float
+
+    # ---- constructors -------------------------------------------------------
+
+    @staticmethod
+    def make(compressor: Compressor, d: int, n: int, mode: theory.Mode = "efbv",
+             independent: bool = True) -> "EFBV":
+        t = theory.tune_for(compressor, d, n, independent=independent, mode=mode)
+        return EFBV(compressor, lam=t.lam, nu=t.nu)
+
+    @staticmethod
+    def ef21(compressor: Compressor, d: int, n: int) -> "EFBV":
+        return EFBV.make(compressor, d, n, mode="ef21")
+
+    @staticmethod
+    def diana(compressor: Compressor, d: int, n: int) -> "EFBV":
+        return EFBV.make(compressor, d, n, mode="diana")
+
+    # ---- state --------------------------------------------------------------
+
+    def init(self, params: PyTree, n: int, stacked: bool = True) -> EFBVState:
+        """h_i^0 = 0 (any init works; 0 matches the paper's experiments)."""
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        if stacked:
+            h = jax.tree.map(lambda z: jnp.zeros((n,) + z.shape, z.dtype), params)
+        else:
+            h = zeros
+        return EFBVState(h=h, h_avg=zeros, step=jnp.zeros((), jnp.int32))
+
+    # ---- algorithm core (shared by reference and distributed paths) ----------
+
+    def compress_delta(self, key: Optional[Array], grad: PyTree, h: PyTree) -> PyTree:
+        """d_i = C_i(grad_i - h_i), leaf-wise with decorrelated keys."""
+        leaves, treedef = jax.tree.flatten(grad)
+        h_leaves = treedef.flatten_up_to(h)
+        outs = []
+        for j, (g, hj) in enumerate(zip(leaves, h_leaves)):
+            kj = None if key is None else jax.random.fold_in(key, j)
+            outs.append(self.compressor(kj, g - hj))
+        return jax.tree.unflatten(treedef, outs)
+
+    def worker_update(self, h: PyTree, d: PyTree) -> PyTree:
+        """h_i <- h_i + lam d_i."""
+        return jax.tree.map(lambda hj, dj: hj + self.lam * dj, h, d)
+
+    def master_update(self, h_avg: PyTree, d_bar: PyTree) -> Tuple[PyTree, PyTree]:
+        """g <- h + nu d_bar ; h <- h + lam d_bar.  Returns (g, new h_avg)."""
+        g = jax.tree.map(lambda hj, dj: hj + self.nu * dj, h_avg, d_bar)
+        h_new = jax.tree.map(lambda hj, dj: hj + self.lam * dj, h_avg, d_bar)
+        return g, h_new
+
+    # ---- reference (vmap-over-workers) step ----------------------------------
+
+    def step(self, key: Array, grads: PyTree, state: EFBVState
+             ) -> Tuple[PyTree, EFBVState]:
+        """One round of Algorithm 1.
+
+        grads: per-worker gradients with leading axis n on every leaf
+               (grads_i = nabla f_i(x^t)).
+        Returns (g^{t+1}, new state); the caller applies
+        x^{t+1} = prox_{gamma R}(x^t - gamma g^{t+1}).
+        """
+        n = jax.tree.leaves(grads)[0].shape[0]
+
+        if getattr(self.compressor, "joint", False):
+            # jointly-defined compressors (m-nice partial participation,
+            # Sect. 2.4): every worker samples from the SAME round key
+            def one_worker(i, g_i, h_i):
+                return jax.tree.map(
+                    lambda g, h: self.compressor.joint_call(key, i, g - h),
+                    g_i, h_i)
+
+            d = jax.vmap(one_worker)(jnp.arange(n), grads, state.h)
+            h_new = jax.vmap(self.worker_update)(state.h, d)
+            d_bar = jax.tree.map(lambda dj: jnp.mean(dj, axis=0), d)
+            g, h_avg_new = self.master_update(state.h_avg, d_bar)
+            return g, EFBVState(h=h_new, h_avg=h_avg_new, step=state.step + 1)
+
+        keys = jax.random.split(key, n)
+
+        def one_worker(k, g_i, h_i):
+            d_i = self.compress_delta(k, g_i, h_i)
+            return d_i
+
+        d = jax.vmap(one_worker)(keys, grads, state.h)
+        h_new = jax.vmap(self.worker_update)(state.h, d)
+        d_bar = jax.tree.map(lambda dj: jnp.mean(dj, axis=0), d)
+        g, h_avg_new = self.master_update(state.h_avg, d_bar)
+        return g, EFBVState(h=h_new, h_avg=h_avg_new, step=state.step + 1)
+
+
+# ------------------------------------------------------------------------------
+# proximal operators for the composite term R (problem (1))
+# ------------------------------------------------------------------------------
+
+def prox_zero(gamma: float, x: PyTree) -> PyTree:
+    return x
+
+
+def prox_l2(mu_reg: float) -> Callable[[float, PyTree], PyTree]:
+    """R = (mu_reg/2)||x||^2  ->  prox = x / (1 + gamma mu_reg)."""
+
+    def prox(gamma, x):
+        return jax.tree.map(lambda v: v / (1.0 + gamma * mu_reg), x)
+
+    return prox
+
+
+def prox_l1(lam_reg: float) -> Callable[[float, PyTree], PyTree]:
+    """R = lam_reg ||x||_1  ->  soft threshold."""
+
+    def prox(gamma, x):
+        t = gamma * lam_reg
+        return jax.tree.map(lambda v: jnp.sign(v) * jnp.maximum(jnp.abs(v) - t, 0.0), x)
+
+    return prox
+
+
+def proximal_step(x: PyTree, g: PyTree, gamma: float,
+                  prox: Callable[[float, PyTree], PyTree] = prox_zero) -> PyTree:
+    """x^{t+1} = prox_{gamma R}(x^t - gamma g^{t+1})."""
+    y = jax.tree.map(lambda xv, gv: xv - gamma * gv, x, g)
+    return prox(gamma, y)
+
+
+# ------------------------------------------------------------------------------
+# beyond-paper: bidirectional compression (server-side model broadcast)
+# ------------------------------------------------------------------------------
+
+def run_bidirectional(
+    *,
+    algo: "EFBV",
+    server_comp: Compressor,
+    grad_fn: Callable[[PyTree], PyTree],
+    x0: PyTree,
+    gamma: float,
+    steps: int,
+    key: Array,
+    n: int,
+    record: Optional[Callable[[PyTree], Array]] = None,
+) -> Tuple[PyTree, Optional[Array]]:
+    """EF-BV with *bidirectional* compression (EF21-BC-style server side,
+    Fatkhullin et al. 2021 -- referenced by the paper as an extension).
+
+    The server broadcasts C_s(x^{t+1} - x_hat^t) instead of x^{t+1}; all
+    workers maintain the shared reconstruction x_hat (identical everywhere,
+    so one copy suffices).  Workers evaluate gradients at x_hat -- the
+    worker->server direction is Algorithm 1 unchanged.  With a contractive
+    C_s, x_hat -> x and the method inherits EF-BV's fixed-point.
+    """
+    state = algo.init(x0, n)
+    x = x0
+    x_hat = x0  # workers' reconstruction of the model
+
+    def body(carry, k):
+        x, x_hat, st = carry
+        k_g, k_s = jax.random.split(k)
+        grads = grad_fn(x_hat)                      # workers see x_hat
+        g, st = algo.step(k_g, grads, st)
+        x = jax.tree.map(lambda xv, gv: xv - gamma * gv, x, g)
+        # server-side EF: broadcast the compressed model innovation
+        leaves, treedef = jax.tree.flatten(jax.tree.map(
+            lambda a, b: a - b, x, x_hat))
+        qs = [server_comp(jax.random.fold_in(k_s, j), l)
+              for j, l in enumerate(leaves)]
+        q = jax.tree.unflatten(treedef, qs)
+        x_hat = jax.tree.map(lambda hv, qv: hv + qv, x_hat, q)
+        m = record(x_hat) if record is not None else jnp.zeros(())
+        return (x, x_hat, st), m
+
+    keys = jax.random.split(key, steps)
+    (x, x_hat, _), metrics = jax.lax.scan(body, (x, x_hat, state), keys)
+    return x_hat, (metrics if record is not None else None)
+
+
+# ------------------------------------------------------------------------------
+# driver: full Algorithm 1 loop on an explicit finite-sum problem
+# ------------------------------------------------------------------------------
+
+def run(
+    *,
+    algo: EFBV,
+    grad_fn: Callable[[PyTree], PyTree],  # x -> per-worker grads (n-leading)
+    x0: PyTree,
+    gamma: float,
+    steps: int,
+    key: Array,
+    prox: Callable[[float, PyTree], PyTree] = prox_zero,
+    n: int,
+    record: Optional[Callable[[PyTree], Array]] = None,
+) -> Tuple[PyTree, EFBVState, Optional[Array]]:
+    """jit-compiled lax.scan over Algorithm 1; optionally records a scalar
+    metric (e.g. f(x)-f*) per iteration for the benchmark plots."""
+
+    state0 = algo.init(x0, n)
+
+    def body(carry, k):
+        x, st = carry
+        grads = grad_fn(x)
+        g, st = algo.step(k, grads, st)
+        x = proximal_step(x, g, gamma, prox)
+        m = record(x) if record is not None else jnp.zeros(())
+        return (x, st), m
+
+    keys = jax.random.split(key, steps)
+    (x, state), metrics = jax.lax.scan(body, (x0, state0), keys)
+    return x, state, (metrics if record is not None else None)

@@ -1,0 +1,194 @@
+"""Paper theory: optimal scalings, contraction factors, stepsizes, rates.
+
+Implements Sect. 2.5 (Props 1-2), Sect. 4 (Thms 1-2, Remarks 1-3) and Sect. 5
+(Thm 3) so that EF-BV can run fully auto-tuned: given (eta, omega, omega_av)
+of the compressors and (L, Ltilde) of the objective there is *no* free
+parameter left (Remark 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal, Optional
+
+Mode = Literal["efbv", "ef21", "diana"]
+Regime = Literal["pl", "kl", "nonconvex"]
+
+
+# --- Prop. 1: effect of scaling ------------------------------------------------
+
+def scaled_eta(lam: float, eta: float) -> float:
+    return lam * eta + 1.0 - lam
+
+
+def scaled_omega(lam: float, omega: float) -> float:
+    return lam * lam * omega
+
+
+def r_of(lam: float, eta: float, omega: float) -> float:
+    """r = (1 - lam + lam*eta)^2 + lam^2 * omega  (Sect. 4)."""
+    return scaled_eta(lam, eta) ** 2 + scaled_omega(lam, omega)
+
+
+# --- Prop. 2: optimal scaling --------------------------------------------------
+
+def lambda_star(eta: float, omega: float) -> float:
+    """argmin_lam r(lam) clipped to (0, 1]:  min((1-eta)/((1-eta)^2+omega), 1)."""
+    if eta >= 1.0:
+        raise ValueError(f"eta must be < 1, got {eta}")
+    return min((1.0 - eta) / ((1.0 - eta) ** 2 + omega), 1.0)
+
+
+def nu_star(eta: float, omega_av: float) -> float:
+    """Same formula with omega replaced by omega_av (Sect. 2.5 / Sect. 4)."""
+    return lambda_star(eta, omega_av)
+
+
+# --- rate ingredients -----------------------------------------------------------
+
+def s_star(r: float) -> float:
+    """s* = sqrt((1+r)/(2r)) - 1, so that (1+s*)^2 r = (r+1)/2 (proof of Thm 1).
+
+    r -> 0 (no compression error, Remark 2): s* -> inf and 1/s* -> 0, so the
+    stepsize bound reverts to plain gradient descent's 1/L."""
+    if r <= 0.0:
+        return math.inf
+    return math.sqrt((1.0 + r) / (2.0 * r)) - 1.0
+
+
+def s_nonconvex(r: float) -> float:
+    """s = 1/sqrt(r) - 1, so that (1+s)^2 r = 1 (Thm 3)."""
+    if r <= 0.0:
+        return math.inf
+    return 1.0 / math.sqrt(r) - 1.0
+
+
+def theta_of(s: float, r: float, r_av: float) -> float:
+    """theta = s (1+s) r / r_av."""
+    if r_av <= 0.0:
+        return math.inf
+    return s * (1.0 + s) * r / r_av
+
+
+# --- stepsizes -------------------------------------------------------------------
+
+def gamma_max(L: float, Ltilde: float, r: float, r_av: float, regime: Regime = "pl") -> float:
+    """Largest stepsize allowed by Thm 1 (pl / nonconvex, eq. 8/13) or Thm 2 (kl, eq. 10)."""
+    if r >= 1.0:
+        raise ValueError(f"need r < 1 for convergence, got r={r}")
+    if r <= 0.0:  # identity compression: plain (prox-)GD stepsizes (Remark 2)
+        return 1.0 / (2.0 * L) if regime == "kl" else 1.0 / L
+    if regime == "nonconvex":
+        s = s_nonconvex(r)
+        return 1.0 / (L + Ltilde * math.sqrt(r_av / r) / s)
+    s = s_star(r)
+    if regime == "kl":
+        return 1.0 / (2.0 * L + Ltilde * math.sqrt(r_av / r) / s)
+    return 1.0 / (L + Ltilde * math.sqrt(r_av / r) / s)
+
+
+def linear_rate(gamma: float, mu: float, r: float, regime: Regime = "pl") -> float:
+    """Per-iteration contraction factor of the Lyapunov function (Thms 1-2)."""
+    if regime == "kl":
+        return max(1.0 / (1.0 + 0.5 * gamma * mu), (r + 1.0) / 2.0)
+    return max(1.0 - gamma * mu, (r + 1.0) / 2.0)
+
+
+# --- one-stop tuning --------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Tuning:
+    """Everything EF-BV needs, derived per Remark 1."""
+
+    mode: Mode
+    eta: float
+    omega: float
+    omega_av: float
+    lam: float
+    nu: float
+    r: float
+    r_av: float
+    s: float
+    theta: float
+    gamma: Optional[float]  # None if L/Ltilde not supplied
+    rate: Optional[float]  # None if mu not supplied
+
+    @property
+    def speedup_vs_ef21(self) -> float:
+        """The paper's headline factor sqrt(r_av / r) (Sect. 4.1): gamma scales
+        by its inverse relative to EF21's choice nu = lam."""
+        return math.sqrt(self.r_av / self.r)
+
+
+def tune(
+    eta: float,
+    omega: float,
+    omega_av: Optional[float] = None,
+    *,
+    n: Optional[int] = None,
+    mode: Mode = "efbv",
+    regime: Regime = "pl",
+    L: Optional[float] = None,
+    Ltilde: Optional[float] = None,
+    mu: Optional[float] = None,
+) -> Tuning:
+    """Derive (lam, nu, gamma) for EF-BV / EF21 / DIANA.
+
+    - mode='efbv' : lam = lam*, nu = nu*          (Remark 1 -- recommended)
+    - mode='ef21' : nu = lam = lam*               (Sect. 3.1; r_av := r)
+    - mode='diana': nu = 1, lam = lam*            (Sect. 3.2)
+    """
+    if omega_av is None:
+        if n is None:
+            raise ValueError("need omega_av or n (independent compressors)")
+        omega_av = omega / n
+    if not 0.0 <= eta < 1.0:
+        raise ValueError(f"eta in [0,1) required, got {eta}")
+
+    lam = lambda_star(eta, omega)
+    if mode == "efbv":
+        nu = nu_star(eta, omega_av)
+    elif mode == "ef21":
+        nu = lam
+    elif mode == "diana":
+        nu = 1.0
+    else:
+        raise ValueError(mode)
+
+    r = r_of(lam, eta, omega)
+    if mode == "ef21":
+        # EF21 analysis does not see omega_av: it treats the aggregate like a
+        # single worker, i.e. r_av = r (Sect. 4.1).
+        r_av = r
+    else:
+        r_av = r_of(nu, eta, omega_av)
+
+    s = s_nonconvex(r) if regime == "nonconvex" else s_star(r)
+    theta = theta_of(s, r, r_av)
+
+    gamma = None
+    if L is not None and Ltilde is not None:
+        gamma = gamma_max(L, Ltilde, r, r_av, regime)
+    rate = None
+    if gamma is not None and mu is not None and regime != "nonconvex":
+        rate = linear_rate(gamma, mu, r, regime)
+
+    return Tuning(
+        mode=mode, eta=eta, omega=omega, omega_av=omega_av,
+        lam=lam, nu=nu, r=r, r_av=r_av, s=s, theta=theta,
+        gamma=gamma, rate=rate,
+    )
+
+
+def tune_for(compressor, d: int, n: int, *, independent: bool = True, **kw) -> Tuning:
+    """Convenience: read (eta, omega) off a Compressor instance."""
+    eta = compressor.eta(d)
+    omega = compressor.omega(d)
+    omega_av = compressor.omega_av(d, n) if independent else omega
+    return tune(eta, omega, omega_av, **kw)
+
+
+def iteration_complexity(L: float, Ltilde: float, mu: float, t: Tuning) -> float:
+    """Asymptotic O(.) iteration count to eps-accuracy, eq. (12) (without log)."""
+    return L / mu + (Ltilde / mu * math.sqrt(t.r_av / t.r) + 1.0) / (1.0 - t.r)

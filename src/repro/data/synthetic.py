@@ -1,0 +1,65 @@
+"""Deterministic synthetic LM data pipeline.
+
+Mirrors the paper's heterogeneous-data regime: each worker's shard is drawn
+from a *worker-specific* Zipf-ish distribution (heterogeneity > 0 skews the
+per-worker vocabulary slice), so the per-worker gradients nabla f_i genuinely
+differ -- the setting where EF-BV's control variates matter.
+
+Sequences have local bigram structure (token t+1 = t * A + noise mod V) so a
+~100M model visibly learns within a few hundred steps in the end-to-end
+example.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.distributed.spec import batch_spec
+from repro.launch.mesh import num_workers
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    n_workers: int = 1
+    seed: int = 0
+    heterogeneity: float = 0.5  # 0 = iid workers, 1 = disjoint vocab slices
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        # per-worker vocab offsets create heterogeneous token marginals
+        self._offsets = rng.integers(0, self.vocab, size=self.n_workers)
+        self._mult = 6364136223846793005 % self.vocab
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        """Global batch for one step: tokens + next-token labels."""
+        B, S, V = self.global_batch, self.seq_len, self.vocab
+        per_w = B // self.n_workers
+        rng = np.random.default_rng((self.seed, step))
+        rows = []
+        for w in range(self.n_workers):
+            span = max(int(V * (1.0 - self.heterogeneity)), V // 16)
+            base = rng.integers(0, span, size=(per_w, 1))
+            start = (base + self._offsets[w]) % V
+            noise = rng.integers(0, 7, size=(per_w, S))
+            seqs = np.zeros((per_w, S), np.int64)
+            seqs[:, 0] = start[:, 0]
+            for t in range(1, S):
+                seqs[:, t] = (seqs[:, t - 1] * 3 + noise[:, t] + self._offsets[w]) % V
+            rows.append(seqs)
+        tokens = np.concatenate(rows, 0).astype(np.int32)
+        labels = np.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1).astype(np.int32)
+        labels[:, -1] = -1  # no loss on the wrap position
+        return {"tokens": tokens, "labels": labels}
+
+
+def make_batch_shardings(mesh, batch: Dict[str, np.ndarray]):
+    spec = batch_spec(mesh)
+    return {k: jax.device_put(v, NamedSharding(mesh, spec)) for k, v in batch.items()}

@@ -1,0 +1,6 @@
+from repro.distributed.spec import (  # noqa: F401
+    to_named_sharding, stack_worker_spec, batch_spec, replicated,
+)
+from repro.distributed.aggregate import (  # noqa: F401
+    compress_local, combine_global, efbv_aggregate_reference, AGG_MODES,
+)

@@ -1,0 +1,52 @@
+"""Sharding-spec utilities.
+
+Models declare their own parameter PartitionSpecs (over the 'model' axis
+only); these helpers lift them to meshes, to worker-stacked EF-BV state, and
+to NamedShardings for jit in_shardings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import worker_axes
+
+PyTree = Any
+
+
+def replicated(tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda _: P(), tree)
+
+
+def to_named_sharding(mesh, specs: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        specs, is_leaf=lambda s: isinstance(s, P))
+
+
+def stack_worker_spec(mesh, specs: PyTree) -> PyTree:
+    """EF-BV control-variate sharding: prepend the worker axes to each leaf's
+    spec (h has a leading per-worker axis of size n)."""
+    w = worker_axes(mesh)
+    return jax.tree.map(lambda s: P(w, *s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def batch_spec(mesh) -> P:
+    """Global batch is sharded over every non-model axis."""
+    return P(worker_axes(mesh))
+
+
+def param_sharding_tree(mesh, specs: PyTree) -> PyTree:
+    return to_named_sharding(mesh, specs)
+
+
+def linear_worker_index(mesh) -> jax.Array:
+    """Linearized (pod, data) worker index, valid inside shard_map."""
+    w = worker_axes(mesh)
+    idx = jax.lax.axis_index(w[0])
+    for a in w[1:]:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx

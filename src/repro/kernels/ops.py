@@ -1,0 +1,53 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handle arbitrary input shapes (flatten + pad to (nb, block) slabs), pick
+interpret mode automatically off-TPU, and expose the same signatures as the
+jnp oracles in ref.py (tests assert allclose between the two).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import block_topk as K
+
+Array = jax.Array
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_slabs(x: Array, block: int) -> Tuple[Array, int, Tuple[int, ...]]:
+    xf = x.reshape(-1)
+    d = xf.shape[0]
+    nb = -(-d // block)
+    nb_pad = -(-nb // K.TILE_NB) * K.TILE_NB
+    xp = jnp.pad(xf, (0, nb_pad * block - d)).reshape(nb_pad, block)
+    return xp, d, x.shape
+
+
+@functools.partial(jax.jit, static_argnames=("block", "kb", "interpret"))
+def block_topk(x: Array, block: int = 1024, kb: int = 64,
+               interpret: bool | None = None) -> Array:
+    """Dense block-top-k compression of an arbitrary-shape tensor."""
+    interpret = _interpret_default() if interpret is None else interpret
+    xp, d, shape = _to_slabs(x, block)
+    out = K.block_topk_pallas(xp, kb, interpret=interpret)
+    return out.reshape(-1)[:d].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "kb", "lam", "interpret"))
+def efbv_update(g: Array, h: Array, lam: float, block: int = 1024, kb: int = 64,
+                interpret: bool | None = None) -> Tuple[Array, Array]:
+    """Fused worker update: d = C(g - h); h' = h + lam d.  Returns (d, h')."""
+    interpret = _interpret_default() if interpret is None else interpret
+    gp, d_len, shape = _to_slabs(g, block)
+    hp, _, _ = _to_slabs(h.astype(g.dtype), block)
+    d_out, h_out = K.efbv_update_pallas(gp, hp, lam, kb, interpret=interpret)
+    unpad = lambda a: a.reshape(-1)[:d_len].reshape(shape)
+    return unpad(d_out), unpad(h_out).astype(h.dtype)

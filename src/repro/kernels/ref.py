@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Semantics of block-top-k (shared by kernel and oracle): within each
+contiguous block of size ``block``, keep the ``kb`` largest-|.| entries;
+ties are broken toward the *lowest index* (matching iterative max
+extraction).  This is the TPU-native compressor of DESIGN §3.4 -- a
+deterministic member of B(kb/block).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _select_topk_rows(xa: Array, kb: int) -> Array:
+    """xa: (nb, block) magnitudes -> 0/1 mask keeping kb per row with
+    first-index tie-breaking (iterative max extraction, vectorized)."""
+    nb, block = xa.shape
+
+    def body(_, carry):
+        selected = carry
+        score = jnp.where(selected > 0, -jnp.inf, xa)
+        m = jnp.max(score, axis=1, keepdims=True)
+        is_m = (score == m) & jnp.isfinite(m)
+        first = (jnp.cumsum(is_m.astype(jnp.int32), axis=1) == 1) & is_m
+        return selected + first.astype(xa.dtype)
+
+    selected = jax.lax.fori_loop(0, kb, body, jnp.zeros_like(xa))
+    return selected
+
+
+def block_topk_ref(x: Array, block: int, kb: int) -> Array:
+    """Dense block-top-k: zero all but the kb largest-|.| per block."""
+    xf = x.reshape(-1)
+    d = xf.shape[0]
+    nb = -(-d // block)
+    pad = nb * block - d
+    xp = jnp.pad(xf, (0, pad)).reshape(nb, block)
+    mask = _select_topk_rows(jnp.abs(xp).astype(jnp.float32), kb)
+    out = xp * mask.astype(xp.dtype)
+    return out.reshape(-1)[:d].reshape(x.shape)
+
+
+def efbv_update_ref(g: Array, h: Array, lam: float, block: int, kb: int
+                    ) -> Tuple[Array, Array]:
+    """Fused worker-side EF-BV update:
+        d = block_topk(g - h);  h_new = h + lam * d.
+    Returns (d, h_new).  The subtraction is done in f32 (kernel-identical)."""
+    delta = g.astype(jnp.float32) - h.astype(jnp.float32)
+    d = block_topk_ref(delta, block, kb).astype(g.dtype)
+    return d, (h.astype(jnp.float32) + lam * d.astype(jnp.float32)).astype(h.dtype)

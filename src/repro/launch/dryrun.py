@@ -1,0 +1,202 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax (the two lines above MUST come first:
+# jax locks the device count on first backend init) -------------------------
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from typing import Optional  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, get_config  # noqa: E402
+from repro.core import BlockTopK, EFBV, make_compressor  # noqa: E402
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.mesh import make_production_mesh, num_workers  # noqa: E402
+from repro.launch.shapes import (  # noqa: E402
+    SHAPES, ShapeSpec, adapt_config, batch_struct, decode_structs,
+)
+from repro.models import build_model  # noqa: E402
+from repro.optim import adamw, cosine  # noqa: E402
+from repro.train import init_train_state, make_train_step, train_state_shardings  # noqa: E402
+
+SDS = jax.ShapeDtypeStruct
+
+DEFAULT_COMPRESSOR = "block_topk:4096,64"  # ~1.6% density, paper-style k << d
+
+
+def _with_shardings(sds_tree, sharding_tree):
+    return jax.tree.map(
+        lambda sds, sh: SDS(sds.shape, sds.dtype, sharding=sh),
+        sds_tree, sharding_tree)
+
+
+def _params_sds(model, mesh):
+    params = model.init_abstract()
+    specs = model.param_specs()
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda s: isinstance(s, P))
+    return _with_shardings(params, shardings), specs
+
+
+def build_lowered(arch: str, shape_name: str, *, multi_pod: bool,
+                  agg_mode: str = "dense_psum",
+                  compressor: str = DEFAULT_COMPRESSOR,
+                  remat: Optional[bool] = None,
+                  trainer: str = "shard_map",
+                  param_dtype: Optional[str] = None,
+                  attn_impl: Optional[str] = None):
+    """Lower one (arch x shape x mesh) combination; returns (lowered, meta)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    cfg, note = adapt_config(cfg, shape)
+    if cfg is None:
+        return None, {"skip": note}
+    if remat is not None:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    if param_dtype is not None:
+        cfg = dataclasses.replace(cfg, param_dtype=param_dtype)
+    if attn_impl is not None:
+        cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+    model = build_model(cfg)
+    n = num_workers(mesh)
+    comp = make_compressor(compressor)
+    algo = EFBV.make(comp, d=cfg.d_model * cfg.d_ff if cfg.d_ff else cfg.d_model ** 2,
+                     n=n, mode="efbv")
+
+    params_sds, param_specs = _params_sds(model, mesh)
+    meta = {"note": note, "n_workers": n, "n_devices": mesh.size,
+            "params": cfg.param_count(), "active_params": cfg.active_param_count()}
+
+    if shape.kind == "train":
+        from repro.train.trainer import fsdp_state_shardings, make_train_step_fsdp
+
+        opt = adamw(cosine(3e-4, total_steps=10_000, warmup_steps=200))
+        state_sds = jax.eval_shape(
+            lambda p: init_train_state(p, opt, mesh), params_sds)
+        if trainer == "fsdp":
+            shardings = fsdp_state_shardings(mesh, param_specs, state_sds)
+            step_fn = make_train_step_fsdp(model.loss, opt, algo, mesh,
+                                           agg_mode=agg_mode)
+        else:
+            shardings = train_state_shardings(mesh, param_specs, state_sds)
+            step_fn = make_train_step(model.loss, opt, algo, mesh,
+                                      agg_mode=agg_mode)
+        state_sds = _with_shardings(state_sds, shardings)
+        batch_sds = batch_struct(cfg, shape, mesh)
+        key_sds = jax.eval_shape(lambda: jax.random.key(0))
+        with jax.set_mesh(mesh):
+            lowered = step_fn.lower(state_sds, batch_sds, key_sds)
+        return lowered, meta
+
+    if shape.kind == "prefill":
+        batch_sds = batch_struct(cfg, shape, mesh)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(model.prefill).lower(params_sds, batch_sds)
+        return lowered, meta
+
+    # decode
+    cache_sds, token_sds, pos_sds = decode_structs(cfg, shape, mesh, model)
+
+    def serve_step(params, cache, token, pos):
+        logits, cache = model.decode_step(params, cache, token, pos)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cache
+
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(serve_step, donate_argnums=(1,)).lower(
+            params_sds, cache_sds, token_sds, pos_sds)
+    return lowered, meta
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            agg_mode: str = "dense_psum", compressor: str = DEFAULT_COMPRESSOR,
+            verbose: bool = True, hlo_dir: Optional[str] = None,
+            trainer: str = "shard_map",
+            param_dtype: Optional[str] = None,
+            attn_impl: Optional[str] = None,
+            hlo_tag: str = "") -> dict:
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "agg_mode": agg_mode, "compressor": compressor,
+           "trainer": trainer, "param_dtype": param_dtype,
+           "attn_impl": attn_impl}
+    t0 = time.time()
+    try:
+        lowered, meta = build_lowered(arch, shape_name, multi_pod=multi_pod,
+                                      agg_mode=agg_mode, compressor=compressor,
+                                      trainer=trainer, param_dtype=param_dtype,
+                                      attn_impl=attn_impl)
+        rec.update(meta)
+        if lowered is None:
+            rec["status"] = "skipped"
+            return rec
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+        hlo_text = compiled.as_text()
+        if hlo_dir:
+            import gzip
+            import os as _os
+            _os.makedirs(hlo_dir, exist_ok=True)
+            fname = f"{arch}_{shape_name}_{rec['mesh']}_{agg_mode}{hlo_tag}.hlo.gz"
+            with gzip.open(_os.path.join(hlo_dir, fname), "wt") as gz:
+                gz.write(hlo_text)
+        roof = hlo_analysis.analyze(compiled, n_chips=rec.get("n_devices", 256),
+                                    hlo_text=hlo_text)
+        rec["roofline"] = roof.as_dict()
+        rec["memory"] = hlo_analysis.memory_stats(compiled)
+        rec["status"] = "ok"
+        if verbose:
+            m = rec["memory"] or {}
+            print(f"[dryrun] {arch:22s} {shape_name:12s} {rec['mesh']:8s} OK "
+                  f"lower={rec['lower_s']:.1f}s compile={rec['compile_s']:.1f}s "
+                  f"bottleneck={roof.bottleneck} "
+                  f"args={m.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+                  f"temp={m.get('temp_size_in_bytes', 0)/2**30:.2f}GiB")
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        if verbose:
+            print(f"[dryrun] {arch:22s} {shape_name:12s} {rec['mesh']:8s} FAIL {rec['error'][:200]}")
+            traceback.print_exc(limit=6)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run: lower+compile "
+                                 "every (arch x shape x mesh) and extract roofline terms")
+    ap.add_argument("--arch", default="all", help=f"one of {ARCHS} or 'all'")
+    ap.add_argument("--shape", default="all", help=f"one of {list(SHAPES)} or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--agg", default="dense_psum")
+    ap.add_argument("--compressor", default=DEFAULT_COMPRESSOR)
+    ap.add_argument("--out", default="dryrun_results.jsonl")
+    ap.add_argument("--hlo-dir", default="", help="dump gzipped HLO per combo")
+    args = ap.parse_args()
+
+    archs = ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    with open(args.out, "a") as f:
+        for arch in archs:
+            for shape in shapes:
+                for mp in meshes:
+                    rec = run_one(arch, shape, multi_pod=mp, agg_mode=args.agg,
+                                  compressor=args.compressor,
+                                  hlo_dir=args.hlo_dir or None)
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+
+
+if __name__ == "__main__":
+    main()

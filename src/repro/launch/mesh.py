@@ -1,0 +1,53 @@
+"""Production mesh geometry.
+
+Defined as FUNCTIONS so that importing this module never touches jax device
+state (jax locks the device count on first backend init -- see
+launch/dryrun.py which must set XLA_FLAGS before anything else).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+POD_CHIPS = 256  # one v5e pod slice: 16 x 16
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+POD_AXIS = "pod"
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16) ('data','model') single pod; (2,16,16) ('pod','data','model')
+    across two pods."""
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: Sequence[int], axes: Optional[Sequence[str]] = None):
+    """Arbitrary mesh for tests/smoke runs; axes default to trailing names of
+    ('pod','data','model')."""
+    import jax
+
+    if axes is None:
+        axes = ("pod", "data", "model")[-len(shape):]
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+
+
+def worker_axes(mesh) -> Tuple[str, ...]:
+    """The EF-BV 'worker' axes of a mesh = every axis except 'model'.
+
+    The paper's n = product of these axis sizes."""
+    return tuple(a for a in mesh.axis_names if a != MODEL_AXIS)
+
+
+def num_workers(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in worker_axes(mesh)]))

@@ -1,0 +1,75 @@
+"""Batched serving driver: greedy decode with a KV (or SSM-state) cache.
+
+Example (CPU, reduced config):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --smoke \
+        --batch 4 --prompt-len 16 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models import build_model
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b", choices=ARCHS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    return ap.parse_args(argv)
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    key = jax.random.key(args.seed)
+    params = model.init(key)
+    B = args.batch
+
+    prompts = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab)
+    cache = model.init_cache(B, args.max_len)
+    if cfg.family == "encdec":
+        frames = jax.random.normal(key, (B, cfg.encoder_frames, cfg.d_model)) * 0.1
+        cache = model.encode_cross_cache(params, frames, cache)
+
+    @jax.jit
+    def step(params, cache, token, pos):
+        logits, cache = model.decode_step(params, cache, token, pos)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cache
+
+    # prefill via teacher-forced decode (exercises the same serve_step the
+    # dry-run lowers; a production deployment would use model.prefill + cache)
+    tok = prompts[:, :1]
+    t0 = time.time()
+    for t in range(args.prompt_len):
+        nxt, cache = step(params, cache, prompts[:, t:t + 1], jnp.int32(t))
+    generated = []
+    tok = nxt
+    for t in range(args.prompt_len, args.prompt_len + args.gen):
+        tok, cache = step(params, cache, tok, jnp.int32(t))
+        generated.append(np.asarray(tok[:, 0]))
+    dt = time.time() - t0
+    gen = np.stack(generated, 1)
+    total_tokens = B * (args.prompt_len + args.gen)
+    print(f"[serve] arch={cfg.name} batch={B} prompt={args.prompt_len} "
+          f"gen={args.gen}: {total_tokens / dt:.1f} tok/s (CPU)")
+    print(f"[serve] sample continuation (req 0): {gen[0][:16].tolist()}")
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Assigned input shapes and their batch ShapeDtypeStructs.
+
+Shapes (assignment):
+  train_4k     seq=4,096    global_batch=256   -> train_step
+  prefill_32k  seq=32,768   global_batch=32    -> prefill (full forward)
+  decode_32k   seq=32,768   global_batch=128   -> serve_step (1 token, KV cache)
+  long_500k    seq=524,288  global_batch=1     -> serve_step, sub-quadratic only
+
+Applicability policy (DESIGN §6): long_500k runs for ssm/hybrid natively and
+for every attention arch through a sliding-window(4096) variant -- except
+whisper (enc-dec; skipped, see DESIGN).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.spec import batch_spec
+from repro.launch.mesh import num_workers, worker_axes
+from repro.models.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+LONG_CTX_WINDOW = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def adapt_config(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[Optional[ModelConfig], str]:
+    """Returns (possibly-adapted config, note) or (None, skip reason)."""
+    if shape.name != "long_500k":
+        return cfg, ""
+    if cfg.family == "encdec":
+        return None, "skip: enc-dec decoder is not a 500k-token generator (DESIGN §6)"
+    if cfg.family in ("ssm",):
+        return cfg, "native sub-quadratic (recurrent state)"
+    # attention families: sliding-window variant
+    if cfg.attn_window == 0:
+        cfg = dataclasses.replace(cfg, attn_window=LONG_CTX_WINDOW,
+                                  name=cfg.name + "-swa")
+        return cfg, f"sliding-window({LONG_CTX_WINDOW}) variant"
+    return cfg, "windowed"
+
+
+def _maybe_worker_sharded(mesh, dim0: int) -> P:
+    """Shard the leading batch dim over the worker axes when divisible."""
+    return batch_spec(mesh) if dim0 % num_workers(mesh) == 0 else P()
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeSpec, mesh) -> Dict[str, SDS]:
+    """ShapeDtypeStructs (with shardings) for the train/prefill global batch."""
+    B, S = shape.global_batch, shape.seq
+    sh = lambda spec: NamedSharding(mesh, spec)
+    bspec = _maybe_worker_sharded(mesh, B)
+    out: Dict[str, SDS] = {}
+
+    S_text = S
+    if cfg.family == "vlm":
+        S_text = S - cfg.vision_patches
+        out["vision_embeds"] = SDS((B, cfg.vision_patches, cfg.d_model),
+                                   jnp.float32, sharding=sh(bspec))
+    if cfg.family == "encdec":
+        out["frames"] = SDS((B, cfg.encoder_frames, cfg.d_model), jnp.float32,
+                            sharding=sh(bspec))
+    out["tokens"] = SDS((B, S_text), jnp.int32, sharding=sh(bspec))
+    if shape.kind == "train":
+        out["labels"] = SDS((B, S_text), jnp.int32, sharding=sh(bspec))
+    return out
+
+
+def decode_structs(cfg: ModelConfig, shape: ShapeSpec, mesh, model):
+    """(cache SDS tree, token SDS, pos SDS) for serve_step lowering."""
+    B, S = shape.global_batch, shape.seq
+    sh = lambda spec: NamedSharding(mesh, spec)
+    bspec = _maybe_worker_sharded(mesh, B)
+
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(B, S))
+    cache_specs = model.cache_specs()
+
+    waxes = worker_axes(mesh)
+
+    def lift(sds, spec):
+        # cache leaves: (L, B, ...): shard B over workers when divisible
+        parts = list(spec) + [None] * (len(sds.shape) - len(spec))
+        if sds.shape[1] % num_workers(mesh) == 0 and parts[1] is None:
+            parts[1] = waxes
+        return SDS(sds.shape, sds.dtype, sharding=sh(P(*parts)))
+
+    def lift_tree(shapes, specs):
+        return jax.tree.map(
+            lambda sds, spec: lift(sds, spec), shapes, specs,
+            is_leaf=lambda x: isinstance(x, SDS))
+
+    # match spec tree structure to cache structure (specs are per-leaf-group)
+    if cfg.family in ("dense", "vlm", "moe"):
+        cache = {k: lift(cache_shapes[k], cache_specs[k]) for k in cache_shapes}
+    elif cfg.family == "ssm":
+        cache = {k: lift(cache_shapes[k], cache_specs[k]) for k in cache_shapes}
+    elif cfg.family == "hybrid":
+        cache = {
+            "mamba": {k: lift(cache_shapes["mamba"][k], cache_specs["mamba"][k])
+                      for k in cache_shapes["mamba"]},
+            "shared": {k: lift(cache_shapes["shared"][k], cache_specs["shared"][k])
+                       for k in cache_shapes["shared"]},
+        }
+    elif cfg.family == "encdec":
+        cache = {
+            "self": {k: lift(cache_shapes["self"][k], cache_specs["self"][k])
+                     for k in cache_shapes["self"]},
+            "cross_k": lift(cache_shapes["cross_k"], cache_specs["cross_k"]),
+            "cross_v": lift(cache_shapes["cross_v"], cache_specs["cross_v"]),
+        }
+    else:
+        raise ValueError(cfg.family)
+
+    token = SDS((B, 1), jnp.int32, sharding=sh(bspec))
+    pos = SDS((), jnp.int32, sharding=sh(P()))
+    return cache, token, pos

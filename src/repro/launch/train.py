@@ -1,0 +1,151 @@
+"""End-to-end training driver.
+
+Example (CPU, reduced config):
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
+        --mesh 2x2 --steps 50 --compressor block_topk:256,16 --algo efbv
+
+On a real cluster the same entry point takes --arch <id> (full config) and
+--mesh 16x16 / 2x16x16.  The EF-BV layer is selected with --algo
+{efbv, ef21, diana, none} and --agg {dense_psum, sparse_allgather}.
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import os
+import sys
+import time
+
+# On CPU hosts, force enough XLA host devices for the requested mesh BEFORE
+# jax initializes (same constraint as launch/dryrun.py).
+if "--mesh" in sys.argv and "XLA_FLAGS" not in os.environ:
+    _shape = sys.argv[sys.argv.index("--mesh") + 1]
+    _n = math.prod(int(x) for x in _shape.split("x"))
+    if _n > 1:
+        os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_n}"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.core import EFBV, Identity, make_compressor
+from repro.data import SyntheticLM, make_batch_shardings
+from repro.launch.mesh import make_mesh, num_workers
+from repro.models import build_model
+from repro.optim import adamw, cosine, wsd
+from repro.train import init_train_state, make_train_step, train_state_shardings
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b", choices=ARCHS)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--mesh", default="2x2", help="e.g. 2x2, 16x16, 2x16x16")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default="auto", choices=["auto", "cosine", "wsd"])
+    ap.add_argument("--algo", default="efbv", choices=["efbv", "ef21", "diana", "none"])
+    ap.add_argument("--compressor", default="block_topk:256,16")
+    ap.add_argument("--agg", default="dense_psum",
+                    choices=["dense_psum", "sparse_allgather"])
+    ap.add_argument("--trainer", default="shard_map",
+                    choices=["shard_map", "fsdp"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--heterogeneity", type=float, default=0.5)
+    return ap.parse_args(argv)
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    mesh = make_mesh([int(x) for x in args.mesh.split("x")])
+    n = num_workers(mesh)
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+
+    # WSD schedule for minicpm (its assigned training recipe), cosine otherwise
+    sched_kind = args.schedule
+    if sched_kind == "auto":
+        sched_kind = "wsd" if args.arch.startswith("minicpm") else "cosine"
+    if sched_kind == "wsd":
+        sched = wsd(args.lr, warmup_steps=max(args.steps // 20, 1),
+                    stable_steps=int(args.steps * 0.7),
+                    decay_steps=max(int(args.steps * 0.25), 1))
+    else:
+        sched = cosine(args.lr, total_steps=args.steps,
+                       warmup_steps=max(args.steps // 20, 1))
+    opt = adamw(sched, weight_decay=0.01)
+
+    if args.algo == "none":
+        algo = EFBV(Identity(), lam=1.0, nu=1.0)
+    else:
+        comp = make_compressor(args.compressor)
+        algo = EFBV.make(comp, d=max(cfg.d_model * max(cfg.d_ff, 1), 1), n=n,
+                         mode=args.algo)
+    print(f"[train] arch={cfg.name} family={cfg.family} params~{cfg.param_count():,} "
+          f"workers={n} algo={args.algo} lam={algo.lam:.4g} nu={algo.nu:.4g} "
+          f"agg={args.agg}")
+
+    key = jax.random.key(args.seed)
+    params = model.init(key)
+    state = init_train_state(params, opt, mesh)
+    if args.trainer == "fsdp":
+        from repro.train import fsdp_state_shardings
+        shardings = fsdp_state_shardings(mesh, model.param_specs(), state)
+    else:
+        shardings = train_state_shardings(mesh, model.param_specs(), state)
+    state = jax.tree.map(lambda x, s: jax.device_put(x, s), state, shardings)
+
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq,
+                       global_batch=args.global_batch, n_workers=n,
+                       seed=args.seed, heterogeneity=args.heterogeneity)
+
+    def loss_fn(p, batch):
+        return model.loss(p, batch)
+
+    if args.trainer == "fsdp":
+        from repro.train import make_train_step_fsdp
+        step_fn = make_train_step_fsdp(loss_fn, opt, algo, mesh,
+                                       agg_mode=args.agg)
+    else:
+        step_fn = make_train_step(loss_fn, opt, algo, mesh, agg_mode=args.agg)
+
+    t_start = time.time()
+    for step in range(args.steps):
+        batch = make_batch_shardings(mesh, data.batch(step))
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = jax.device_put(
+                np.random.default_rng(step).standard_normal(
+                    (args.global_batch, cfg.vision_patches, cfg.d_model),
+                    dtype=np.float32))
+        if cfg.family == "encdec":
+            batch["frames"] = jax.device_put(
+                np.random.default_rng(step).standard_normal(
+                    (args.global_batch, cfg.encoder_frames, cfg.d_model),
+                    dtype=np.float32))
+        state, metrics = step_fn(state, batch, jax.random.fold_in(key, step))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            print(f"[train] step {step:5d} loss={m['loss']:.4f} "
+                  f"|g|={m['g_norm']:.3f} |upd|={m['update_norm']:.4f} "
+                  f"h_res={m['h_residual']:.3f} "
+                  f"({(time.time()-t_start)/(step+1):.2f}s/step)")
+        if args.ckpt_dir and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, step + 1, {"params": state.params})
+            print(f"[train] checkpoint @ {step + 1}")
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, args.steps, {"params": state.params})
+    print(f"[train] done: final loss {float(metrics['loss']):.4f}")
+    return float(metrics["loss"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Minimal optax-like optimizer substrate (no external deps).
+
+An Optimizer is a pair (init, update):
+    state            = init(params)
+    updates, state   = update(grads, state, params)   # updates are *deltas*
+    params           = apply_updates(params, updates)
+
+The trainer feeds the EF-BV-aggregated gradient estimate g^{t+1} in as
+``grads`` -- the optimizer is agnostic to how the gradient was communicated,
+which is exactly the paper's layering (Algorithm 1 wraps "Distributed
+proximal SGD"; any first-order method can consume g).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(tree)))
+
+
+# ---------------------------------------------------------------------------
+
+
+def sgd(schedule, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        mom = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return {"count": jnp.zeros((), jnp.int32), "mom": mom}
+
+    def update(grads, state, params):
+        lr = schedule(state["count"])
+        if momentum:
+            mom = jax.tree.map(lambda m, g: momentum * m + g, state["mom"], grads)
+            eff = (jax.tree.map(lambda m, g: momentum * m + g, mom, grads)
+                   if nesterov else mom)
+        else:
+            mom, eff = None, grads
+        updates = jax.tree.map(lambda g: -lr * g, eff)
+        return updates, {"count": state["count"] + 1, "mom": mom}
+
+    return Optimizer(init, update)
+
+
+def adamw(schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {
+            "count": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        lr = schedule(state["count"])
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            step = m_ / c1 / (jnp.sqrt(v_ / c2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype)
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"count": count, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+
+
+def clip_by_global_norm(max_norm: float) -> Optimizer:
+    """Gradient transform: rescale so ||g|| <= max_norm (chainable)."""
+
+    def init(params):
+        return {}
+
+    def update(grads, state, params):
+        norm = global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+        return jax.tree.map(lambda g: g * scale, grads), state
+
+    return Optimizer(init, update)
+
+
+def chain(*transforms: Optimizer) -> Optimizer:
+    """Compose gradient transforms; the last one produces the final deltas."""
+
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params):
+        new_states = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_states.append(s)
+        return grads, tuple(new_states)
+
+    return Optimizer(init, update)

@@ -1,0 +1,51 @@
+"""Learning-rate schedules.  A schedule is a pure fn: step (int32 array) -> lr.
+
+Includes WSD (warmup-stable-decay) from MiniCPM [arXiv:2404.06395], assigned
+to the minicpm-2b config.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.full((), lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup_steps: int) -> Schedule:
+    def f(step):
+        w = jnp.minimum(step.astype(jnp.float32) / max(warmup_steps, 1), 1.0)
+        return lr * w
+
+    return f
+
+
+def cosine(lr: float, total_steps: int, warmup_steps: int = 0, final_frac: float = 0.1) -> Schedule:
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(warmup_steps, 1), 1.0) if warmup_steps else 1.0
+        t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1.0 - final_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return lr * warm * cos
+
+    return f
+
+
+def wsd(lr: float, warmup_steps: int, stable_steps: int, decay_steps: int,
+        final_frac: float = 0.01) -> Schedule:
+    """Warmup-Stable-Decay (MiniCPM): linear warmup, flat plateau, then an
+    exponential-style decay over the last ``decay_steps``."""
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(warmup_steps, 1), 1.0)
+        t = jnp.clip((s - warmup_steps - stable_steps) / max(decay_steps, 1), 0.0, 1.0)
+        decay = jnp.power(jnp.asarray(final_frac, jnp.float32), t)
+        return lr * warm * decay
+
+    return f

@@ -1,0 +1,1 @@
+from repro.problems.logreg import LogReg, make_synthetic  # noqa: F401

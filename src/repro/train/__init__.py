@@ -1,0 +1,4 @@
+from repro.train.trainer import (  # noqa: F401
+    TrainState, make_train_step, init_train_state, train_state_shardings,
+    make_train_step_fsdp, fsdp_state_shardings, fsdp_specs,
+)

@@ -1,0 +1,264 @@
+"""Distributed training step: forward/backward under GSPMD (model axis) +
+EF-BV compressed gradient aggregation over the worker axes (pod, data).
+
+This is the integration point of the paper into the framework, in two phases
+(see distributed/aggregate.py for why):
+
+    phase 1 -- shard_map( manual = worker axes, auto = 'model' ):
+        grads_i  = grad( mean loss over the *local* data shard )   # nabla f_i
+        message_i, h_i = compress_local(...)                       # Algorithm 1, worker side
+    phase 2 -- plain GSPMD:
+        g, h_avg = combine_global(stacked messages, ...)           # the wire collective
+        params  <- optimizer(params, g)                            # replicated over workers
+
+Per-worker control variates h_i live in the TrainState with a leading worker
+axis sharded over (pod, data); inside phase 1 each worker sees its own h_i.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.efbv import EFBV
+from repro.distributed.aggregate import combine_global, compress_local
+from repro.distributed.spec import (
+    batch_spec, linear_worker_index, stack_worker_spec, to_named_sharding,
+)
+from repro.launch.mesh import num_workers, worker_axes
+from repro.optim.optimizers import Optimizer, apply_updates, global_norm
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt_state: PyTree
+    h: PyTree        # per-worker control variates, leading axis n
+    h_avg: PyTree    # master control variate
+    step: jax.Array
+
+
+def init_train_state(params: PyTree, optimizer: Optimizer, mesh) -> TrainState:
+    n = num_workers(mesh)
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    h = jax.tree.map(lambda p: jnp.zeros((n,) + p.shape, jnp.float32), params)
+    return TrainState(
+        params=params,
+        opt_state=optimizer.init(params),
+        h=h,
+        h_avg=zeros,
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def train_state_shardings(mesh, param_specs: PyTree, state: TrainState) -> TrainState:
+    """NamedShardings for every TrainState leaf (params/opt sharded over
+    'model', h additionally over the worker axes, scalars replicated)."""
+    p_shard = to_named_sharding(mesh, param_specs)
+
+    # momenta share param shapes; match by shape against the param specs
+    params_flat = jax.tree.leaves(state.params)
+    specs_flat = jax.tree.leaves(param_specs, is_leaf=lambda s: isinstance(s, P))
+    shape_to_spec = {}
+    for leaf, spec in zip(params_flat, specs_flat):
+        shape_to_spec.setdefault(leaf.shape, spec)
+
+    def spec_for(leaf):
+        return shape_to_spec.get(leaf.shape, P())
+
+    opt_sh = jax.tree.map(lambda l: NamedSharding(mesh, spec_for(l)), state.opt_state)
+    h_sh = to_named_sharding(mesh, stack_worker_spec(mesh, param_specs))
+    havg_sh = jax.tree.map(lambda l: NamedSharding(mesh, spec_for(l)), state.h_avg)
+    rep = NamedSharding(mesh, P())
+    return TrainState(params=p_shard, opt_state=opt_sh, h=h_sh, h_avg=havg_sh,
+                      step=rep)
+
+
+def make_train_step(
+    loss_fn: Callable[[PyTree, Any], Tuple[jax.Array, dict]],
+    optimizer: Optimizer,
+    algo: EFBV,
+    mesh,
+    *,
+    agg_mode: str = "dense_psum",
+    remat: bool = False,
+) -> Callable[[TrainState, Any, jax.Array], Tuple[TrainState, dict]]:
+    """Build the jitted multi-pod train step.
+
+    loss_fn(params, batch) -> (scalar loss, metrics dict); it sees the LOCAL
+    batch shard (the worker's f_i) and may use GSPMD-auto 'model' collectives.
+    """
+    waxes = worker_axes(mesh)
+    n = num_workers(mesh)
+
+    if remat:
+        loss_fn = jax.checkpoint(loss_fn)
+
+    # ---- phase 1: worker-local grad + compress (manual over worker axes) ----
+    def local_phase(params, h, batch, key):
+        widx = linear_worker_index(mesh)
+        kw = jax.random.fold_in(key, widx)
+
+        # Differentiate w.r.t. a *worker-varying* view of the params: without
+        # the pcast, jax's VMA machinery would treat the cotangent of the
+        # worker-invariant params as invariant and psum it over the worker
+        # axes -- giving sum_i grad f_i instead of this worker's grad f_i.
+        params_v = jax.lax.pcast(params, tuple(waxes), to="varying")
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params_v, batch)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        h_loc = jax.tree.map(lambda a: a[0], h)
+        message, h_loc_new = compress_local(algo, kw, grads, h_loc, mode=agg_mode)
+
+        local_metrics = {
+            "loss": loss,
+            "grad_norm": global_norm(grads),
+            "h_residual": global_norm(
+                jax.tree.map(lambda a, b: a - b, grads, h_loc_new)),
+            **aux,
+        }
+        # stack everything on the worker axis
+        stack = lambda t: jax.tree.map(lambda a: a[None], t)
+        return stack(message), stack(h_loc_new), stack(local_metrics)
+
+    local_sharded = jax.shard_map(
+        local_phase,
+        mesh=mesh,
+        in_specs=(P(), P(waxes), batch_spec(mesh), P()),
+        out_specs=(P(waxes), P(waxes), P(waxes)),
+        axis_names=set(waxes),
+    )
+
+    # ---- full step: phase 1 + phase 2 under one jit ---------------------------
+    def train_step(state: TrainState, batch, key):
+        message, h_new, local_metrics = local_sharded(
+            state.params, state.h, batch, key)
+
+        g, h_avg_new = combine_global(
+            algo, message, state.h_avg, n_workers=n, mode=agg_mode)
+
+        updates, opt_state = optimizer.update(g, state.opt_state, state.params)
+        params = apply_updates(state.params, updates)
+
+        metrics = {k: jnp.mean(v, axis=0) for k, v in local_metrics.items()}
+        metrics["g_norm"] = global_norm(g)
+        metrics["update_norm"] = global_norm(updates)
+
+        new_state = TrainState(
+            params=params,
+            opt_state=opt_state,
+            h=h_new,
+            h_avg=h_avg_new,
+            step=state.step + 1,
+        )
+        return new_state, metrics
+
+    return jax.jit(train_step, donate_argnums=(0,))
+
+
+# ---------------------------------------------------------------------------
+# FSDP variant (beyond-paper, §Perf): pure-GSPMD trainer where parameters and
+# optimizer state are additionally sharded over the worker axes (ZeRO-3
+# style).  Per-worker gradients come from vmap over a worker-major batch
+# reshape instead of shard_map -- XLA's partitioner then emits the FSDP
+# all-gathers per layer and keeps every state shard at 1/(data*model) size.
+# Required for dbrx-132b-class models: at 16-way TP alone the fp32 params are
+# 33 GiB/device; FSDP brings params+adam+h to ~9 GiB/device.
+# ---------------------------------------------------------------------------
+
+
+def fsdp_specs(mesh, param_specs: PyTree, shapes: PyTree) -> PyTree:
+    """Add the worker axes to the first divisible, unsharded dim of each
+    param spec (classic FSDP weight sharding on top of tensor parallelism)."""
+    w = worker_axes(mesh)
+    n = num_workers(mesh)
+
+    def one(spec, leaf):
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for i, (p, dim) in enumerate(zip(parts, leaf.shape)):
+            if p is None and dim % n == 0 and dim > 0:
+                parts[i] = w
+                break
+        return P(*parts)
+
+    return jax.tree.map(one, param_specs, shapes,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def fsdp_state_shardings(mesh, param_specs: PyTree, state: TrainState
+                         ) -> TrainState:
+    fspecs = fsdp_specs(mesh, param_specs, state.params)
+    p_sh = to_named_sharding(mesh, fspecs)
+
+    shape_to_spec = {}
+    for leaf, spec in zip(jax.tree.leaves(state.params),
+                          jax.tree.leaves(fspecs, is_leaf=lambda s: isinstance(s, P))):
+        shape_to_spec.setdefault(leaf.shape, spec)
+
+    def spec_for(leaf):
+        return shape_to_spec.get(leaf.shape, P())
+
+    opt_sh = jax.tree.map(lambda l: NamedSharding(mesh, spec_for(l)), state.opt_state)
+    # h has the worker axis on dim 0; inner dims keep only the 'model' sharding
+    h_sh = to_named_sharding(mesh, stack_worker_spec(mesh, param_specs))
+    havg_sh = jax.tree.map(lambda l: NamedSharding(mesh, spec_for(l)), state.h_avg)
+    rep = NamedSharding(mesh, P())
+    return TrainState(params=p_sh, opt_state=opt_sh, h=h_sh, h_avg=havg_sh,
+                      step=rep)
+
+
+def make_train_step_fsdp(
+    loss_fn: Callable[[PyTree, Any], Tuple[jax.Array, dict]],
+    optimizer: Optimizer,
+    algo: EFBV,
+    mesh,
+    *,
+    agg_mode: str = "dense_psum",
+) -> Callable[[TrainState, Any, jax.Array], Tuple[TrainState, dict]]:
+    """Pure-GSPMD train step: vmap over the worker axis for per-worker grads,
+    FSDP-sharded params/optimizer state, same EF-BV wire as the shard_map
+    trainer (compress_local / combine_global are shared)."""
+    waxes = worker_axes(mesh)
+    n = num_workers(mesh)
+
+    def worker_grads(params, batch, key):
+        # batch leaves: (B, ...) -> (n, B/n, ...) worker-major
+        wb = jax.tree.map(lambda a: a.reshape((n, a.shape[0] // n) + a.shape[1:]),
+                          batch)
+        wb = jax.lax.with_sharding_constraint(
+            wb, jax.tree.map(lambda _: NamedSharding(mesh, P(waxes)), wb))
+        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n))
+
+        def one(wbatch):
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, wbatch)
+            return loss, aux, jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        loss, aux, grads = jax.vmap(one)(wb)
+        return loss, aux, grads, keys
+
+    def train_step(state: TrainState, batch, key):
+        loss, aux, grads, keys = worker_grads(state.params, batch, key)
+        # pin the stacked grads to (worker, model)-sharding
+        gspec = stack_worker_spec(mesh, jax.tree.map(
+            lambda g: P(*([None] * (g.ndim - 1))), state.h_avg))
+        message, h_new = jax.vmap(
+            lambda k, g, h: compress_local(algo, k, g, h, mode=agg_mode)
+        )(keys, grads, state.h)
+        g, h_avg_new = combine_global(algo, message, state.h_avg,
+                                      n_workers=n, mode=agg_mode)
+        updates, opt_state = optimizer.update(g, state.opt_state, state.params)
+        params = apply_updates(state.params, updates)
+        metrics = {"loss": jnp.mean(loss), "g_norm": global_norm(g),
+                   "update_norm": global_norm(updates),
+                   **{k: jnp.mean(v) for k, v in aux.items()}}
+        new_state = TrainState(params=params, opt_state=opt_state, h=h_new,
+                               h_avg=h_avg_new, step=state.step + 1)
+        return new_state, metrics
+
+    return jax.jit(train_step, donate_argnums=(0,))

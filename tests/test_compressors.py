@@ -1,0 +1,200 @@
+"""Property tests: every compressor is a certified member of C(eta, omega).
+
+For each compressor we Monte-Carlo estimate the relative bias and variance at
+random points (hypothesis generates the points) and assert the certified
+constants hold up to sampling error; deterministic compressors are checked
+pointwise and exactly.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BlockTopK, CompKK, FracCompKK, FracTopK, Identity, MixKK, Natural, QSGD,
+    RandK, ScaledRandK, SignNorm, TopK, bias_variance_estimate, make_compressor,
+)
+
+D = 64
+N_SAMPLES = 512
+
+
+def vec(seed, d=D):
+    x = jax.random.normal(jax.random.key(seed), (d,))
+    return x
+
+
+DETERMINISTIC = [TopK(8), TopK(1), BlockTopK(16, 4), BlockTopK(32, 1),
+                 SignNorm(), FracTopK(0.1), Identity()]
+RANDOM = [RandK(8), RandK(1), ScaledRandK(8), CompKK(2, 32), CompKK(1, 32),
+          MixKK(2, 8), Natural(), QSGD(4), FracCompKK(0.02, 0.5)]
+
+
+@pytest.mark.parametrize("comp", DETERMINISTIC, ids=lambda c: repr(c))
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_deterministic_contraction(comp, seed):
+    """Deterministic members: ||C(x) - x|| <= eta ||x|| exactly, zero variance."""
+    x = vec(seed)
+    y = comp(None, x)
+    err = float(jnp.linalg.norm(y - x))
+    nx = float(jnp.linalg.norm(x))
+    assert err <= comp.eta(D) * nx * (1 + 1e-5)
+    assert comp.omega(D) == 0.0
+    # determinism
+    y2 = comp(jax.random.key(0), x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+
+
+@pytest.mark.parametrize("comp", RANDOM, ids=lambda c: repr(c))
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=5, deadline=None)
+def test_random_class_membership(comp, seed):
+    """(i) bias <= eta ||x||, (ii) variance <= omega ||x||^2, within MC error."""
+    x = vec(seed)
+    bias, var = bias_variance_estimate(comp, jax.random.key(seed ^ 0x5eed), x,
+                                       n_samples=N_SAMPLES)
+    omega = comp.omega(D)
+    eta = comp.eta(D)
+    mc_bias = 4.0 * math.sqrt(max(omega, 1e-4) / N_SAMPLES)  # CLT band
+    assert bias <= eta + mc_bias, (bias, eta, mc_bias)
+    assert var <= omega * (1 + 6.0 / math.sqrt(N_SAMPLES)) + 1e-6, (var, omega)
+
+
+def test_unbiasedness_exact():
+    """U(omega) members are exactly unbiased in expectation (large-sample)."""
+    x = vec(3)
+    for comp in [RandK(8), Natural(), QSGD(8)]:
+        keys = jax.random.split(jax.random.key(0), 4096)
+        mean = jnp.mean(jax.vmap(lambda k: comp(k, x))(keys), axis=0)
+        rel = float(jnp.linalg.norm(mean - x) / jnp.linalg.norm(x))
+        assert rel < 0.1, (type(comp).__name__, rel)
+
+
+def test_topk_keeps_largest():
+    x = jnp.asarray([0.1, -5.0, 2.0, 0.01, 3.0, -0.2, 0.0, 1.0])
+    y = TopK(3)(None, x)
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray([0.0, -5.0, 2.0, 0.0, 3.0, 0.0, 0.0, 0.0]))
+
+
+def test_prop4_mix_constants():
+    """Prop. 4: mix-(k,k') in B((k+k')/d): empirical contraction matches."""
+    k, kp = 2, 8
+    comp = MixKK(k, kp)
+    alpha = comp.alpha(D)
+    assert abs(alpha - (k + kp) / D) < 1e-9  # closed form from the paper
+    x = vec(7)
+    keys = jax.random.split(jax.random.key(1), 2048)
+    errs = jax.vmap(lambda kk: jnp.sum((comp(kk, x) - x) ** 2))(keys)
+    emp = float(jnp.mean(errs) / jnp.sum(x * x))
+    assert emp <= (1 - alpha) * 1.05
+
+
+def test_prop5_comp_constants():
+    """Prop. 5: comp-(k,k') has eta = sqrt((d-k')/d), omega = (k'-k)/k."""
+    k, kp = 2, 32
+    comp = CompKK(k, kp)
+    assert abs(comp.eta(D) - math.sqrt((D - kp) / D)) < 1e-12
+    assert abs(comp.omega(D) - (kp - k) / k) < 1e-12
+    # E[C(x)] keeps top-k' coords scaled by 1 (k/k' chance * k'/k scale)
+    x = vec(11)
+    keys = jax.random.split(jax.random.key(2), 8192)
+    mean = jnp.mean(jax.vmap(lambda kk: comp(kk, x))(keys), axis=0)
+    _, top_idx = jax.lax.top_k(jnp.abs(x), kp)
+    expected = jnp.zeros_like(x).at[top_idx].set(x[top_idx])
+    assert float(jnp.linalg.norm(mean - expected)) < 0.15 * float(jnp.linalg.norm(x))
+
+
+def test_omega_av_independent():
+    """Sect 2.4: for n independent compressors the averaged variance is
+    omega/n -- checked empirically for rand-1."""
+    n, d = 16, 32
+    comp = RandK(1)
+    xs = jax.random.normal(jax.random.key(0), (n, d))
+
+    def avg_err(key):
+        keys = jax.random.split(key, n)
+        ys = jax.vmap(lambda k, x: comp(k, x) - x)(keys, xs)
+        return jnp.sum(jnp.mean(ys, axis=0) ** 2)
+
+    errs = jax.vmap(avg_err)(jax.random.split(jax.random.key(1), 4096))
+    emp = float(jnp.mean(errs))
+    bound = comp.omega(d) / n * float(jnp.mean(jnp.sum(xs**2, axis=1)))
+    assert emp <= bound * 1.1, (emp, bound)
+
+
+def test_encode_decode_roundtrip():
+    """Sparse wire format reproduces the dense compressor output exactly."""
+    x = vec(5, d=100)
+    for comp in [TopK(7), BlockTopK(16, 4), FracTopK(0.05), RandK(9), CompKK(3, 20)]:
+        key = jax.random.key(3)
+        dense = comp(key, x)
+        payload = comp.encode(key, x)
+        rec = comp.decode(payload, x.size).reshape(x.shape)
+        np.testing.assert_allclose(np.asarray(rec), np.asarray(dense), atol=1e-6)
+
+
+def test_make_compressor_parsing():
+    assert isinstance(make_compressor("topk:8"), TopK)
+    assert isinstance(make_compressor("comp:1,32"), CompKK)
+    assert isinstance(make_compressor("block_topk:256,16"), BlockTopK)
+    assert make_compressor("frac_topk:50").frac == 0.05
+    with pytest.raises(ValueError):
+        make_compressor("nope")
+
+
+def test_mnice_partial_participation():
+    """Sect. 2.4: m-nice sampling has omega = (n-m)/m and the JOINT average
+    variance omega_av = (n-m)/(m(n-1)) << omega/1 -- dependent compressors
+    whose average is much tamer than any individual one."""
+    from repro.core.compressors import MNice
+    n, m, d = 16, 4, 8
+    comp = MNice(n, m)
+    assert abs(comp.omega(d) - (n - m) / m) < 1e-12
+    assert abs(comp.omega_av(d, n) - (n - m) / (m * (n - 1))) < 1e-12
+
+    xs = jax.random.normal(jax.random.key(0), (n, d))
+
+    def avg_err(key):
+        ys = jax.vmap(lambda i, x: comp.joint_call(key, i, x))(
+            jnp.arange(n), xs)
+        return jnp.sum((jnp.mean(ys, axis=0) - jnp.mean(xs, axis=0)) ** 2)
+
+    errs = jax.vmap(avg_err)(jax.random.split(jax.random.key(1), 4096))
+    emp = float(jnp.mean(errs))
+    bound = comp.omega_av(d, n) / n * float(jnp.sum(xs**2))
+    assert emp <= bound * 1.1, (emp, bound)
+    # exactly m workers participate each round
+    ys = jax.vmap(lambda i, x: comp.joint_call(jax.random.key(7), i, x))(
+        jnp.arange(n), xs)
+    participating = int(jnp.sum(jnp.any(ys != 0, axis=1)))
+    assert participating == m
+
+
+def test_mnice_efbv_converges():
+    """EF-BV under partial participation (DIANA-style nu=1, lam=1/(1+omega))
+    still converges linearly on a strongly convex problem."""
+    from repro.core.compressors import MNice
+    from repro.core import EFBV, run, tune
+    import numpy as np
+    n, d = 8, 12
+    key = jax.random.key(2)
+    A = jax.random.normal(key, (n, d, d)) / np.sqrt(d)
+    Q = jnp.einsum("nij,nkj->nik", A, A) + 0.5 * jnp.eye(d)
+    b = jax.random.normal(jax.random.key(3), (n, d))
+    x_star = jnp.linalg.solve(jnp.mean(Q, 0), jnp.mean(b, 0))
+    grads = lambda x: jnp.einsum("nij,j->ni", Q, x) - b
+
+    comp = MNice(n, 2)
+    t = tune(comp.eta(d), comp.omega(d), comp.omega_av(d, n), mode="diana",
+             L=4.0, Ltilde=4.0)
+    algo = EFBV(comp, lam=t.lam, nu=t.nu)
+    x, _, m = run(algo=algo, grad_fn=grads, x0=jnp.zeros(d), gamma=t.gamma,
+                  steps=4000, key=jax.random.key(4), n=n,
+                  record=lambda x: jnp.sum((x - x_star) ** 2))
+    assert float(m[-1]) < 1e-6 * float(jnp.sum(x_star**2)), float(m[-1])

@@ -1,0 +1,191 @@
+"""Algorithm tests: EF21 / DIANA recovery, variance reduction, linear
+convergence at the paper's rate, nonconvex behavior."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompKK, EFBV, Identity, RandK, TopK, prox_l1, prox_l2, proximal_step,
+    run, tune_for,
+)
+from repro.problems import LogReg, make_synthetic
+
+KEY = jax.random.key(0)
+
+
+def quad_problem(n=8, d=16, seed=0):
+    """Strongly convex quadratic finite sum with known solution."""
+    key = jax.random.key(seed)
+    A = jax.random.normal(key, (n, d, d)) / jnp.sqrt(d)
+    Q = jnp.einsum("nij,nkj->nik", A, A) + 0.5 * jnp.eye(d)  # PD per worker
+    b = jax.random.normal(jax.random.key(seed + 1), (n, d))
+    Qbar = jnp.mean(Q, 0)
+    bbar = jnp.mean(b, 0)
+    x_star = jnp.linalg.solve(Qbar, bbar)
+
+    def grads(x):
+        return jnp.einsum("nij,j->ni", Q, x) - b
+
+    mu = float(jnp.linalg.eigvalsh(Qbar)[0])
+    L = float(jnp.linalg.eigvalsh(Qbar)[-1])
+    Li = jax.vmap(lambda q: jnp.linalg.eigvalsh(q)[-1])(Q)
+    Lt = float(jnp.sqrt(jnp.mean(Li**2)))
+    return grads, x_star, mu, L, Lt
+
+
+def test_identity_compressor_is_gd():
+    """With C = Id, EF-BV reverts to exact gradient descent (Remark 2)."""
+    grads, x_star, mu, L, Lt = quad_problem()
+    algo = EFBV(Identity(), lam=1.0, nu=1.0)
+    x, _, _ = run(algo=algo, grad_fn=grads, x0=jnp.zeros(16), gamma=1.0 / L,
+                  steps=300, key=KEY, n=8)
+    assert float(jnp.linalg.norm(x - x_star)) < 1e-4
+
+
+def test_ef21_equals_efbv_nu_lambda():
+    """EF-BV with nu = lam produces the EXACT EF21 iterates (Sect. 3.1)."""
+    grads, *_ = quad_problem()
+    comp = TopK(3)
+    a1 = EFBV(comp, lam=0.7, nu=0.7)
+
+    # hand-rolled EF21 (Algorithm 2): h_i <- h_i + d_i with scaled compressor
+    def ef21_run(steps, gamma):
+        x = jnp.zeros(16)
+        h = jnp.zeros((8, 16))
+        traj = []
+        for t in range(steps):
+            g_i = grads(x)
+            d = jax.vmap(lambda gg, hh: 0.7 * comp(None, gg - hh))(g_i, h)
+            h = h + d
+            g = jnp.mean(h, 0)
+            x = x - gamma * g
+            traj.append(x)
+        return jnp.stack(traj)
+
+    gamma = 0.05
+    t_ref = ef21_run(20, gamma)
+    x = jnp.zeros(16)
+    st = a1.init(x, 8)
+    traj = []
+    for t in range(20):
+        g, st = a1.step(jax.random.fold_in(KEY, t), grads(x), st)
+        x = x - gamma * g
+        traj.append(x)
+    np.testing.assert_allclose(np.asarray(jnp.stack(traj)), np.asarray(t_ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_diana_equals_efbv_nu_one():
+    """EF-BV with nu = 1 produces the EXACT DIANA iterates (Sect. 3.2)."""
+    grads, *_ = quad_problem()
+    comp = RandK(4)
+    lam = 1.0 / (1.0 + comp.omega(16))
+    a = EFBV(comp, lam=lam, nu=1.0)
+
+    def diana_run(steps, gamma, key):
+        x = jnp.zeros(16)
+        h = jnp.zeros((8, 16))
+        h_avg = jnp.zeros(16)
+        traj = []
+        for t in range(steps):
+            kt = jax.random.fold_in(key, t)
+            keys = jax.random.split(kt, 8)
+            g_i = grads(x)
+            # leaf index 0 fold matches EFBV.compress_delta's per-leaf key
+            d = jax.vmap(lambda k, gg, hh: comp(jax.random.fold_in(k, 0), gg - hh)
+                         )(keys, g_i, h)
+            dbar = jnp.mean(d, 0)
+            g = h_avg + dbar            # nu = 1
+            h = h + lam * d
+            h_avg = h_avg + lam * dbar
+            x = x - gamma * g
+            traj.append(x)
+        return jnp.stack(traj)
+
+    gamma = 0.02
+    ref = diana_run(15, gamma, KEY)
+    x = jnp.zeros(16)
+    st = a.init(x, 8)
+    traj = []
+    for t in range(15):
+        g, st = a.step(jax.random.fold_in(KEY, t), grads(x), st)
+        x = x - gamma * g
+        traj.append(x)
+    np.testing.assert_allclose(np.asarray(jnp.stack(traj)), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_linear_convergence_at_theory_rate():
+    """Theorem 1: the Lyapunov-bounded quantity f(x^t)-f* decays at least as
+    fast as the proven rate."""
+    grads, x_star, mu, L, Lt = quad_problem()
+    comp = TopK(4)
+    t = tune_for(comp, 16, n=8, mode="efbv", L=L, Ltilde=Lt, mu=mu)
+    algo = EFBV(comp, lam=t.lam, nu=t.nu)
+    steps = 2500
+    x, _, metrics = run(algo=algo, grad_fn=grads, x0=jnp.zeros(16),
+                        gamma=t.gamma, steps=steps, key=KEY, n=8,
+                        record=lambda x: jnp.sum((x - x_star) ** 2))
+    final = float(metrics[-1])
+    initial = float(jnp.sum(x_star**2))
+    assert final < 1e-8 * initial, (final, initial)
+
+
+def test_variance_reduction_h_tracks_gradients():
+    """Control variates converge to nabla f_i(x*): the compressed messages
+    C(grad - h) vanish, i.e. the method is variance-reduced."""
+    grads, x_star, mu, L, Lt = quad_problem()
+    comp = CompKK(2, 8)
+    t = tune_for(comp, 16, n=8, mode="efbv", L=L, Ltilde=Lt)
+    algo = EFBV(comp, lam=t.lam, nu=t.nu)
+    x, st, _ = run(algo=algo, grad_fn=grads, x0=jnp.zeros(16), gamma=t.gamma,
+                   steps=8000, key=KEY, n=8)
+    res = float(jnp.mean(jnp.sum((grads(x) - st.h) ** 2, -1)))
+    assert res < 1e-6, res
+
+
+def test_prox_operators():
+    x = {"a": jnp.asarray([3.0, -0.5])}
+    y = proximal_step(x, {"a": jnp.zeros(2)}, 1.0, prox_l1(1.0))
+    np.testing.assert_allclose(np.asarray(y["a"]), [2.0, 0.0])
+    y2 = proximal_step(x, {"a": jnp.zeros(2)}, 1.0, prox_l2(1.0))
+    np.testing.assert_allclose(np.asarray(y2["a"]), [1.5, -0.25])
+
+
+def test_logreg_efbv_beats_ef21_bits():
+    """The paper's experimental claim (Sect. 6): with comp-(k, d/2) and many
+    workers, EF-BV reaches lower loss than EF21 after the same number of
+    rounds (same bits sent)."""
+    d = 32
+    A, b = make_synthetic(jax.random.key(2), N=600, d=d)
+    prob = LogReg.split(A, b, n=50, mu_reg=0.1)
+    _, fstar = prob.solve()
+    comp = CompKK(1, d // 2)
+    res = {}
+    for mode in ["efbv", "ef21"]:
+        t = tune_for(comp, d, prob.n, mode=mode, L=prob.L(),
+                     Ltilde=prob.L_tilde())
+        algo = EFBV(comp, lam=t.lam, nu=t.nu)
+        _, _, m = run(algo=algo, grad_fn=prob.grads, x0=jnp.zeros(d),
+                      gamma=t.gamma, steps=4000, key=KEY, n=prob.n,
+                      record=lambda x: prob.f(x) - fstar)
+        res[mode] = float(m[-1])
+    assert res["efbv"] < res["ef21"], res
+
+
+def test_bidirectional_compression_converges():
+    """Beyond-paper: server-side broadcast compression (EF21-BC-style) on top
+    of EF-BV still converges to the exact solution."""
+    from repro.core import run_bidirectional, TopK
+    grads, x_star, mu, L, Lt = quad_problem()
+    comp = TopK(4)
+    t = tune_for(comp, 16, n=8, mode="efbv", L=L, Ltilde=Lt)
+    algo = EFBV(comp, lam=t.lam, nu=t.nu)
+    x_hat, m = run_bidirectional(
+        algo=algo, server_comp=TopK(6), grad_fn=grads, x0=jnp.zeros(16),
+        gamma=t.gamma * 0.5,  # broadcast error feedback tolerates a smaller step
+        steps=6000, key=KEY, n=8,
+        record=lambda x: jnp.sum((x - x_star) ** 2))
+    assert float(m[-1]) < 1e-7 * float(jnp.sum(x_star**2)), float(m[-1])

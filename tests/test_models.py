@@ -1,0 +1,232 @@
+"""Per-architecture smoke tests (assignment deliverable f): every assigned
+arch instantiates a REDUCED same-family config and runs one forward/train
+step on CPU, asserting output shapes and finiteness; plus decode-vs-forward
+consistency per family and layer-level unit tests."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models import build_model
+from repro.models import layers as L
+from repro.optim import adamw, constant
+from repro.optim.optimizers import apply_updates
+
+KEY = jax.random.key(0)
+B, S = 2, 64
+
+
+def make_batch(cfg, key=KEY, with_labels=True):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+    if with_labels:
+        batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.random.normal(
+            key, (B, cfg.vision_patches, cfg.d_model)) * 0.1
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.encoder_frames, cfg.d_model)) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    """Reduced config: forward shapes + one optimizer step, no NaNs."""
+    cfg = get_smoke_config(arch)
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512 and cfg.n_experts <= 4
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = make_batch(cfg)
+
+    logits, aux = jax.jit(model.forward)(params, batch)
+    S_total = S + (cfg.vision_patches if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, S_total, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    opt = adamw(constant(1e-3))
+    opt_state = opt.init(params)
+    (loss, _), grads = jax.jit(
+        jax.value_and_grad(model.loss, has_aux=True))(params, batch)
+    assert bool(jnp.isfinite(loss))
+    g_leaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in g_leaves)
+    updates, opt_state = opt.update(grads, opt_state, params)
+    new_params = apply_updates(params, updates)
+    loss2, _ = jax.jit(model.loss)(new_params, batch)
+    assert bool(jnp.isfinite(loss2))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    cache = model.init_cache(B, 32)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, cache2 = jax.jit(model.decode_step)(params, cache, tok, jnp.int32(0))
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "mamba2-130m", "zamba2-7b",
+                                  "granite-moe-3b-a800m", "whisper-medium",
+                                  "qwen2-vl-2b"])
+def test_decode_matches_forward(arch):
+    """Token-by-token decode reproduces the full forward logits (fp32)."""
+    S_ = 16
+    cfg = get_smoke_config(arch)
+    # capacity large enough that no token is dropped: capacity-bounded MoE
+    # otherwise legitimately differs between batched prefill (tokens compete
+    # for expert slots) and one-token decode (they don't).
+    cfg = dataclasses.replace(cfg, remat=False, activation_dtype="float32",
+                              ssm_chunk=8, capacity_factor=float(cfg.n_experts))
+    model = build_model(cfg)
+    params = model.init(KEY)
+    toks = jax.random.randint(KEY, (B, S_), 0, cfg.vocab)
+    batch = {"tokens": toks}
+    if cfg.family == "vlm":
+        batch.pop("vision_embeds", None)  # text-only decode path
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(KEY, (B, cfg.encoder_frames,
+                                                  cfg.d_model)) * 0.1
+    full, _ = jax.jit(model.forward)(params, batch)
+    cache = model.init_cache(B, S_)
+    if cfg.family == "encdec":
+        cache = model.encode_cross_cache(params, batch["frames"], cache)
+    dec = jax.jit(model.decode_step)
+    outs = []
+    for t in range(S_):
+        lg, cache = dec(params, cache, toks[:, t:t + 1], jnp.int32(t))
+        outs.append(lg[:, 0])
+    got = jnp.stack(outs, 1)
+    ref = full[:, -S_:] if cfg.family == "vlm" else full
+    rel = float(jnp.max(jnp.abs(got - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9))
+    assert rel < 2e-2, rel
+
+
+def test_sliding_window_masks_old_tokens():
+    """A token beyond the window must not influence attention output."""
+    cfg = dataclasses.replace(get_smoke_config("qwen2-0.5b"), attn_window=8,
+                              remat=False, activation_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    toks = jax.random.randint(KEY, (1, 24), 0, cfg.vocab)
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 7) % cfg.vocab)  # mutate pos 0
+    l1, _ = model.forward(params, {"tokens": toks})
+    l2, _ = model.forward(params, {"tokens": toks2})
+    # last position is > window away from position 0: logits identical
+    np.testing.assert_allclose(np.asarray(l1[0, -1]), np.asarray(l2[0, -1]),
+                               atol=1e-5)
+    # but an in-window position does change
+    assert float(jnp.max(jnp.abs(l1[0, 4] - l2[0, 4]))) > 1e-6
+
+
+def test_gqa_head_grouping():
+    """GQA: with n_kv < n_heads, groups of queries share one kv head."""
+    d, H, K, hd = 32, 4, 2, 8
+    p, _ = L.attention_init(jax.random.key(1), d, H, K, hd, qkv_bias=False)
+    x = jax.random.normal(KEY, (1, 6, d))
+    pos = jnp.broadcast_to(jnp.arange(6), (1, 6))
+    out = L.attention(p, x, n_heads=H, n_kv=K, hd=hd, positions=pos,
+                      theta=1e4)
+    assert out.shape == (1, 6, d)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_rope_is_relative():
+    """RoPE: q.k depends only on relative offsets."""
+    hd = 16
+    q = jax.random.normal(KEY, (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.key(1), (1, 1, 1, hd))
+    def score(pq, pk):
+        qr = L.apply_rope(q, jnp.asarray([[pq]]), 1e4)
+        kr = L.apply_rope(k, jnp.asarray([[pk]]), 1e4)
+        return float(jnp.sum(qr * kr))
+    assert abs(score(3, 1) - score(10, 8)) < 1e-4
+    assert abs(score(3, 1) - score(5, 1)) > 1e-4
+
+
+def test_mrope_sections_rotate_independently():
+    """M-RoPE: changing only the h-position stream must not affect the
+    temporal-section channels."""
+    hd = 16
+    secs = (3, 3, 2)
+    x = jax.random.normal(KEY, (1, 1, 1, hd))
+    p1 = jnp.zeros((3, 1, 1), jnp.int32).at[0].set(5)
+    p2 = p1.at[1].set(9)
+    y1 = L.apply_mrope(x, p1, 1e4, secs)
+    y2 = L.apply_mrope(x, p2, 1e4, secs)
+    # temporal section channels: 0:3 and 8:11 (paired halves)
+    np.testing.assert_allclose(np.asarray(y1[..., 0:3]), np.asarray(y2[..., 0:3]),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(y1[..., 8:11]), np.asarray(y2[..., 8:11]),
+                               atol=1e-6)
+    assert float(jnp.max(jnp.abs(y1 - y2))) > 1e-6
+
+
+def test_moe_router_balance_loss():
+    from repro.models.moe import moe_apply, moe_init
+    p, _ = moe_init(jax.random.key(2), 16, 32, 4)
+    x = jax.random.normal(KEY, (2, 8, 16))
+    out, aux = moe_apply(p, x, n_experts=4, k=2)
+    assert out.shape == x.shape
+    assert float(aux) >= 1.0 - 1e-3  # >= 1 by Cauchy-Schwarz, == 1 at balance
+
+
+def test_moe_capacity_drop():
+    """Tokens over capacity are dropped, not duplicated."""
+    from repro.models.moe import moe_apply, moe_init
+    p, _ = moe_init(jax.random.key(2), 8, 16, 2)
+    x = jax.random.normal(KEY, (1, 4, 8))
+    out_small, _ = moe_apply(p, x, n_experts=2, k=1, capacity_factor=0.25)
+    out_big, _ = moe_apply(p, x, n_experts=2, k=1, capacity_factor=4.0)
+    # with tiny capacity some outputs are zeroed
+    assert float(jnp.sum(jnp.abs(out_small))) < float(jnp.sum(jnp.abs(out_big)))
+
+
+def test_mamba2_chunk_invariance():
+    """SSD output must not depend on the chunk size (pure algebra identity)."""
+    from repro.models.mamba2 import mamba2_apply, mamba2_init
+    d, di, st, nh = 16, 32, 8, 4
+    p, _ = mamba2_init(jax.random.key(3), d, d_inner=di, d_state=st,
+                       n_heads=nh, d_conv=4)
+    x = jax.random.normal(KEY, (2, 32, d))
+    y1 = mamba2_apply(p, x, d_inner=di, d_state=st, n_heads=nh, chunk=8)
+    y2 = mamba2_apply(p, x, d_inner=di, d_state=st, n_heads=nh, chunk=32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-3,
+                               atol=2e-4)
+
+
+def test_param_specs_structure_matches_params():
+    for arch in ARCHS:
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg)
+        params = jax.eval_shape(model.init, KEY)
+        specs = model.param_specs()
+        # tree structures must match leaf-for-leaf
+        jax.tree.map(lambda p, s: None, params, specs,
+                     is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def test_full_config_param_counts():
+    """Full (non-smoke) configs match their published parameter scale."""
+    expect = {
+        "minitron-8b": (7e9, 10e9),
+        "phi3-medium-14b": (12e9, 15.5e9),
+        "dbrx-132b": (120e9, 140e9),
+        "mamba2-130m": (0.1e9, 0.2e9),
+        "qwen2-0.5b": (0.4e9, 0.7e9),
+        "minicpm-2b": (2.2e9, 3.3e9),
+        "zamba2-7b": (6e9, 8.5e9),
+        "qwen2-vl-2b": (1.2e9, 2.3e9),
+        "whisper-medium": (0.6e9, 1.1e9),  # SwiGLU MLP (3 mats) vs GELU (2)
+        "granite-moe-3b-a800m": (2.5e9, 4e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, f"{n:,}", lo, hi)

@@ -1,0 +1,141 @@
+"""Substrate unit tests: optimizers, schedules, data pipeline, checkpointing,
+logreg problem layer."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.data import SyntheticLM
+from repro.optim import adamw, cosine, constant, linear_warmup, sgd, wsd
+from repro.optim.optimizers import apply_updates, chain, clip_by_global_norm, global_norm
+from repro.problems import LogReg, make_synthetic
+
+KEY = jax.random.key(0)
+
+
+# ---- optimizers -------------------------------------------------------------
+
+def test_sgd_matches_closed_form():
+    params = {"w": jnp.asarray([1.0, -2.0])}
+    opt = sgd(constant(0.1))
+    st = opt.init(params)
+    g = {"w": jnp.asarray([0.5, 0.5])}
+    upd, st = opt.update(g, st, params)
+    np.testing.assert_allclose(np.asarray(upd["w"]), [-0.05, -0.05])
+
+
+def test_adamw_converges_quadratic():
+    opt = adamw(constant(0.05), weight_decay=0.0)
+    x = {"w": jnp.asarray([5.0, -3.0])}
+    st = opt.init(x)
+    for _ in range(400):
+        g = {"w": 2 * x["w"]}
+        upd, st = opt.update(g, st, x)
+        x = apply_updates(x, upd)
+    assert float(jnp.max(jnp.abs(x["w"]))) < 1e-2
+
+
+def test_clip_chain():
+    opt = chain(clip_by_global_norm(1.0), sgd(constant(1.0)))
+    params = {"w": jnp.zeros(3)}
+    st = opt.init(params)
+    g = {"w": jnp.asarray([30.0, 0.0, 40.0])}  # norm 50
+    upd, st = opt.update(g, st, params)
+    assert abs(float(global_norm(upd)) - 1.0) < 1e-5
+
+
+def test_schedules():
+    s = cosine(1.0, total_steps=100, warmup_steps=10)
+    assert float(s(jnp.int32(0))) == 0.0
+    assert abs(float(s(jnp.int32(10))) - 1.0) < 1e-6
+    assert float(s(jnp.int32(100))) < 0.2
+    w = wsd(1.0, warmup_steps=10, stable_steps=50, decay_steps=40)
+    assert abs(float(w(jnp.int32(30))) - 1.0) < 1e-6   # stable plateau
+    assert float(w(jnp.int32(100))) < 0.05             # decayed
+    lw = linear_warmup(2.0, 4)
+    assert abs(float(lw(jnp.int32(2))) - 1.0) < 1e-6
+
+
+# ---- data -------------------------------------------------------------------
+
+def test_synthetic_lm_determinism_and_shapes():
+    d1 = SyntheticLM(vocab=101, seq_len=16, global_batch=8, n_workers=4, seed=3)
+    d2 = SyntheticLM(vocab=101, seq_len=16, global_batch=8, n_workers=4, seed=3)
+    b1, b2 = d1.batch(7), d2.batch(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (8, 16)
+    assert b1["labels"][0, -1] == -1
+    assert (b1["tokens"] >= 0).all() and (b1["tokens"] < 101).all()
+    # next-token labels
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+def test_synthetic_lm_heterogeneity():
+    """heterogeneous workers have distinct token marginals."""
+    d = SyntheticLM(vocab=1000, seq_len=64, global_batch=8, n_workers=4,
+                    seed=0, heterogeneity=0.9)
+    b = d.batch(0)["tokens"].reshape(4, 2, 64)
+    means = b.mean(axis=(1, 2))
+    assert np.std(means) > 10.0  # worker marginals differ
+
+
+# ---- checkpoint ---------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"params": {"w": jnp.arange(6.0).reshape(2, 3),
+                       "layers": [jnp.ones(2), jnp.zeros(3)]},
+            "step": jnp.int32(7)}
+    save_checkpoint(str(tmp_path), 7, tree)
+    save_checkpoint(str(tmp_path), 9, tree)
+    assert latest_step(str(tmp_path)) == 9
+    got = restore_checkpoint(str(tmp_path), 7, jax.tree.map(jnp.zeros_like, tree))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                            np.asarray(b)),
+                 tree, got)
+
+
+def test_checkpoint_structure_mismatch(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"a": jnp.ones(2)})
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), 1, {"b": jnp.ones(2)})
+
+
+# ---- logreg problem ------------------------------------------------------------
+
+def test_logreg_solver_stationarity():
+    A, b = make_synthetic(KEY, N=300, d=20)
+    prob = LogReg.split(A, b, n=10, mu_reg=0.1)
+    x_star, f_star = prob.solve()
+    gnorm = float(jnp.linalg.norm(prob.grad(x_star)))
+    assert gnorm < 1e-5, gnorm
+    # strong convexity: any other point has larger f
+    x2 = x_star + 0.01
+    assert float(prob.f(x2)) > f_star
+
+
+def test_logreg_smoothness_constants():
+    A, b = make_synthetic(KEY, N=200, d=10)
+    prob = LogReg.split(A, b, n=5, mu_reg=0.1)
+    Li = prob.L_i()
+    assert prob.L_max() >= prob.L_tilde() >= 0.1
+    assert Li.shape == (5,)
+    # empirical gradient-Lipschitz check against L_max
+    x1 = jax.random.normal(KEY, (10,))
+    x2 = x1 + 0.01 * jax.random.normal(jax.random.key(1), (10,))
+    for i in range(5):
+        g1 = jax.grad(prob._loss_one)(x1, prob.A[i], prob.b[i])
+        g2 = jax.grad(prob._loss_one)(x2, prob.A[i], prob.b[i])
+        lhs = float(jnp.linalg.norm(g1 - g2))
+        rhs = float(Li[i] * jnp.linalg.norm(x1 - x2))
+        assert lhs <= rhs * (1 + 1e-3)
+
+
+def test_logreg_overlap():
+    A, b = make_synthetic(KEY, N=100, d=8)
+    p1 = LogReg.split(A, b, n=10, overlap=1)
+    p2 = LogReg.split(A, b, n=10, overlap=2)
+    assert p2.A.shape[1] == 2 * p1.A.shape[1]

@@ -1,0 +1,112 @@
+"""Theory-layer tests, including an exact reproduction of the paper's
+Table 3 parameter values (mushrooms / phishing / a9a / w8a columns)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CompKK, theory, tune, tune_for
+
+
+def test_lambda_star_formula():
+    # Prop. 2 special case eta=0 recovers EF21's Lemma 8: lam* = 1/(1+omega)
+    assert abs(theory.lambda_star(0.0, 3.0) - 1.0 / 4.0) < 1e-12
+    # no randomness -> no scaling
+    assert theory.lambda_star(0.5, 0.0) == 1.0
+
+
+@given(eta=st.floats(0.0, 0.99), omega=st.floats(0.0, 100.0))
+@settings(max_examples=200, deadline=None)
+def test_lambda_star_optimality(eta, omega):
+    """lam* minimizes r(lam) on (0, 1] (Prop. 2)."""
+    lam = theory.lambda_star(eta, omega)
+    r_star = theory.r_of(lam, eta, omega)
+    assert r_star < 1.0 + 1e-12
+    for probe in [lam * 0.5, lam * 0.9, min(lam * 1.1, 1.0), 1.0, 0.01]:
+        if 0 < probe <= 1.0:
+            assert r_star <= theory.r_of(probe, eta, omega) + 1e-9
+
+
+@given(eta=st.floats(0.0, 0.95), omega=st.floats(0.0, 50.0),
+       n=st.integers(1, 10_000))
+@settings(max_examples=200, deadline=None)
+def test_efbv_gamma_at_least_ef21(eta, omega, n):
+    """The paper's headline: with omega_av = omega/n, EF-BV's stepsize bound
+    is >= EF21's, strictly when omega > 0 and n > 1 (Sect. 4.1)."""
+    L = Lt = 1.0
+    t_bv = tune(eta, omega, omega / n, mode="efbv", L=L, Ltilde=Lt)
+    t_21 = tune(eta, omega, omega / n, mode="ef21", L=L, Ltilde=Lt)
+    assert t_bv.gamma >= t_21.gamma - 1e-12
+    if omega > 1e-3 and n > 1:
+        assert t_bv.r_av <= t_21.r_av + 1e-12
+        assert t_bv.speedup_vs_ef21 <= 1.0 + 1e-12
+
+
+def test_rate_below_one():
+    t = tune(0.5, 4.0, 0.4, mode="efbv", L=1.0, Ltilde=1.5, mu=0.1)
+    assert 0 < t.rate < 1.0
+    assert (t.r + 1) / 2 < 1.0
+
+
+# ---- Table 3 of the paper: comp-(k, d/2), n = 1000 -------------------------
+
+TAB3 = [
+    # dataset, d, k, eta, omega, lam, gamma_ratio_check
+    ("mushrooms", 112, 1, 0.707, 55.0, 5.32e-3),
+    ("phishing", 68, 1, 0.707, 33.0, 8.85e-3),
+    ("a9a", 123, 1, 0.710, 60.0, 4.83e-3),
+    ("w8a", 300, 1, 0.707, 149.0, 1.96e-3),
+    ("mushrooms", 112, 2, 0.707, 27.0, 1.08e-2),
+]
+
+
+@pytest.mark.parametrize("name,d,k,eta,omega,lam", TAB3)
+def test_paper_table3(name, d, k, eta, omega, lam):
+    """Reproduce the paper's Tab. 3 compressor constants and lam values."""
+    kp = d // 2
+    comp = CompKK(k, kp)
+    assert abs(comp.eta(d) - eta) < 5e-3, (comp.eta(d), eta)
+    assert abs(comp.omega(d) - omega) < 0.51, (comp.omega(d), omega)
+    t = tune_for(comp, d, n=1000, mode="efbv")
+    assert abs(t.lam - lam) / lam < 0.02, (t.lam, lam)
+    # nu = 1 in the table for EF-BV (omega_av tiny -> nu* ~ 1)
+    assert t.nu > 0.9
+    # sqrt(r_av / r) matches the table's ~0.72-0.81 range
+    assert 0.70 < t.speedup_vs_ef21 < 0.85
+
+
+def test_table3_r_values():
+    """r ~ 0.998 and r_av ~ 0.555 for mushrooms k=1 (paper Tab. 3)."""
+    comp = CompKK(1, 56)
+    t = tune_for(comp, 112, n=1000, mode="efbv")
+    assert abs(t.r - 0.998) < 2e-3
+    assert abs(t.r_av - 0.555) < 1e-2
+    assert abs(t.s - 3.90e-4) / 3.90e-4 < 0.05
+
+
+def test_iteration_complexity_improves_with_n():
+    comp = CompKK(1, 56)
+    d = 112
+    c_prev = None
+    for n in [1, 10, 100, 1000]:
+        t = tune_for(comp, d, n=n, mode="efbv")
+        c = theory.iteration_complexity(1.0, 1.0, 0.1, t)
+        if c_prev is not None:
+            assert c <= c_prev * (1 + 1e-9)
+        c_prev = c
+
+
+def test_diana_and_ef21_modes():
+    comp = CompKK(1, 56)
+    t_diana = tune_for(comp, 112, n=1000, mode="diana")
+    assert t_diana.nu == 1.0
+    t_ef21 = tune_for(comp, 112, n=1000, mode="ef21")
+    assert t_ef21.nu == t_ef21.lam
+
+
+def test_tune_validation():
+    with pytest.raises(ValueError):
+        tune(1.0, 0.5, 0.1)  # eta must be < 1
+    with pytest.raises(ValueError):
+        tune(0.0, 1.0)  # needs omega_av or n
