@@ -1,0 +1,26 @@
+# Tier-1 verify = the fast default test selection (slow subprocess tests
+# excluded via the pytest addopts in pyproject.toml).  Everything runs on CPU
+# (JAX_PLATFORMS=cpu): the Pallas kernels auto-select interpret mode off-TPU
+# and the fused wire pack dispatches to its bit-identical jnp oracle.
+
+PY ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: test-tier1 test-all test-slow bench smoke
+
+test-tier1:
+	JAX_PLATFORMS=cpu $(PY) -m pytest -x -q
+
+test-all:
+	JAX_PLATFORMS=cpu $(PY) -m pytest -q -m ""
+
+test-slow:
+	JAX_PLATFORMS=cpu $(PY) -m pytest -q -m slow
+
+bench:
+	JAX_PLATFORMS=cpu $(PY) -m benchmarks.compressor_bench
+
+smoke:
+	JAX_PLATFORMS=cpu $(PY) -m repro.launch.train --arch qwen2-0.5b --smoke \
+	    --mesh 2x2 --steps 4 --global-batch 8 --seq 32 \
+	    --compressor block_topk:256,16 --agg sparse_allgather

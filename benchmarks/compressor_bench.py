@@ -1,13 +1,19 @@
 """Compressor micro-benchmarks (us/call on this host) incl. the Pallas
-block-top-k kernel (interpret mode on CPU) vs its XLA oracle."""
+block-top-k kernel (interpret mode on CPU) vs its XLA oracle, and the
+packed-vs-dense wire pipeline comparison (one HBM pass, proven from the
+TPU-lowered HLO)."""
 
 from __future__ import annotations
+
+import functools
+import re
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import KEY, timeit
 from repro.core import BlockTopK, CompKK, Natural, QSGD, RandK, TopK
+from repro.distributed import wire
 from repro.kernels import ops, ref
 
 
@@ -33,6 +39,100 @@ def run(fast: bool = True):
     us = timeit(lambda v: ops.block_topk(v, block=1024, kb=16), x, iters=3)
     rows.append({"name": "compressor/block_topk_pallas_interpret",
                  "us_per_call": f"{us:.1f}", "derived": "interpret=True"})
+    rows.extend(packed_vs_dense(fast=fast))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# packed vs dense wire pipeline
+# ---------------------------------------------------------------------------
+
+def _custom_call_result_types(mlir_text: str):
+    """Result tensor types of the (single) tpu_custom_call in an exported
+    module, e.g. ['tensor<64x16xf32>', 'tensor<64x16xi32>', ...]."""
+    line = next(l for l in mlir_text.splitlines() if "tpu_custom_call" in l)
+    tail = re.compile(r"->\s*\(([^()]*)\)(?:\s*loc\([^)]*\))?\s*$")
+    single = re.compile(r"->\s*(tensor<[^\s,]+>)(?:\s*loc\([^)]*\))?\s*$")
+    m = tail.search(line) or single.search(line)
+    if m is None:
+        return []
+    return [t.strip() for t in m.group(1).split(",") if t.strip()]
+
+
+def fused_pack_hlo_report(nb: int = 64, block: int = 256, kb: int = 16):
+    """Prove the one-HBM-pass claim from the LOWERED HLO: the fused pack
+    kernel's TPU custom call must emit only (values, indices, h_out) -- the
+    dense d never reaches HBM -- while the unfused dense kernel's whole
+    RESULT is the dense d, which pack/update then re-read.
+
+    Mosaic lowering is AOT (jax.export with platforms=['tpu']), so this runs
+    on CPU-only hosts too.
+    """
+    from jax import export as jexport
+    from repro.kernels.block_topk import block_topk_pallas
+    from repro.kernels.pack import pack_update_pallas
+
+    sds = jax.ShapeDtypeStruct((nb, block), jnp.float32)
+    fused = jax.jit(functools.partial(pack_update_pallas, lam=0.9, kb=kb,
+                                      interpret=False))
+    fused_res = _custom_call_result_types(
+        jexport.export(fused, platforms=["tpu"])(sds, sds).mlir_module())
+    unfused = jax.jit(lambda g: block_topk_pallas(g, kb, interpret=False))
+    unfused_res = _custom_call_result_types(
+        jexport.export(unfused, platforms=["tpu"])(sds).mlir_module())
+
+    dense_ty = f"tensor<{nb}x{block}xf32>"
+    payload_tys = {f"tensor<{nb}x{kb}xf32>", f"tensor<{nb}x{kb}xi32>"}
+    report = {
+        # exactly one dense output (h_out) and the packed payload: d is
+        # never materialized in HBM
+        "fused_one_hbm_pass": (fused_res.count(dense_ty) == 1
+                               and payload_tys.issubset(set(fused_res))),
+        "fused_outputs": fused_res,
+        # the unfused kernel's output IS the dense d
+        "unfused_dense_output": unfused_res.count(dense_ty) == 1,
+    }
+    return report
+
+
+def packed_vs_dense(fast: bool = True):
+    """us/call of the fused compress-and-pack pipeline vs the unfused
+    (dense-compress, then pack, then h-update) one, plus exact wire bytes."""
+    d, block, kb = 1 << 16, 1024, 16
+    lw = wire.LeafWire(shape=(d,), size=d, block=block, kb=kb)
+    g = jax.random.normal(KEY, (d,))
+    h = jax.random.normal(jax.random.key(1), (d,))
+    lam = 0.9
+    comp = BlockTopK(block, kb)
+
+    @jax.jit
+    def unfused(g, h):
+        delta = g - h                                   # HBM pass 1
+        dns = comp(None, delta).reshape(-1)             # dense d: pass 2
+        vals, idx = comp.encode(None, delta)            # re-read: pass 3
+        return (vals, idx), h + lam * dns               # h update: pass 4
+
+    fused = jax.jit(lambda g, h: wire.fused_pack(lw, g, h, lam))
+
+    iters = 5 if fast else 30
+    rows = []
+    us_u = timeit(unfused, g, h, iters=iters)
+    us_f = timeit(fused, g, h, iters=iters)
+    fmt = wire.WireFormat((lw,))
+    rows.append({"name": "wire/unfused_compress_pack", "us_per_call": f"{us_u:.1f}",
+                 "derived": f"d={d} dense_d_materialized=True"})
+    rows.append({"name": "wire/fused_pack", "us_per_call": f"{us_f:.1f}",
+                 "derived": f"d={d} payload_bits={fmt.bits_per_round()}"})
+
+    try:
+        rep = fused_pack_hlo_report()
+        rows.append({"name": "wire/fused_pack_hlo",
+                     "us_per_call": "",
+                     "derived": f"one_hbm_pass={rep['fused_one_hbm_pass']} "
+                                f"unfused_dense_output={rep['unfused_dense_output']}"})
+    except Exception as e:  # jax.export unavailable on some versions
+        rows.append({"name": "wire/fused_pack_hlo", "us_per_call": "",
+                     "derived": f"skipped ({type(e).__name__})"})
     return rows
 
 

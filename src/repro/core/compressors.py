@@ -258,34 +258,30 @@ class BlockTopK(Compressor):
         nb = -(-d // self.block)
         return Wire(words=2 * nb * self.kb, sparse=True)
 
+    def _leaf_wire(self, d: int):
+        # import inside the method: repro.distributed.wire is layout-only
+        # (imports nothing from repro.core), but its package __init__ pulls
+        # in aggregate -> efbv, which would cycle at module-import time
+        from repro.distributed import wire
+        return wire.LeafWire(shape=(d,), size=d, block=self.block, kb=self.kb)
+
     def encode(self, key, x):
         """Payload: per-block (values, block-LOCAL indices), shapes (nb, kb).
 
         Local indices keep the wire payload at log2(block) bits per index and
         -- critically -- avoid int32 overflow on giant leaves (dbrx's stacked
         expert tensor has 4.2e10 elements; a global flat index cannot be an
-        int32)."""
-        xf = _flat(x)
-        d = xf.shape[0]
-        nb = -(-d // self.block)
-        pad = nb * self.block - d
-        xp = jnp.pad(xf, (0, pad)).reshape(nb, self.block)
-        _, idx = jax.lax.top_k(jnp.abs(xp), self.kb)  # (nb, kb) local
-        vals = jnp.take_along_axis(xp, idx, axis=1)
-        return vals, idx
+        int32).  The layout itself is specified once, in
+        repro/distributed/wire.py."""
+        from repro.distributed import wire
+        return wire.pack_oracle(self._leaf_wire(x.size), _flat(x))
 
     def decode(self, payload, d):
         """Accepts (vals, idx) of shape (nb, kb) or worker-stacked
         (n, nb, kb); the stacked form is scatter-summed per block (the
         sparse_allgather combine path)."""
-        vals, idx = payload
-        if vals.ndim == 3:  # (n, nb, kb) -> (nb, n*kb)
-            vals = jnp.moveaxis(vals, 0, 1).reshape(vals.shape[1], -1)
-            idx = jnp.moveaxis(idx, 0, 1).reshape(idx.shape[1], -1)
-        nb = vals.shape[0]
-        rows = jnp.arange(nb)[:, None]
-        out = jnp.zeros((nb, self.block), vals.dtype).at[rows, idx].add(vals)
-        return out.reshape(-1)[:d]
+        from repro.distributed import wire
+        return wire.scatter_add(self._leaf_wire(d), *payload)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -4,3 +4,7 @@ from repro.distributed.spec import (  # noqa: F401
 from repro.distributed.aggregate import (  # noqa: F401
     compress_local, combine_global, efbv_aggregate_reference, AGG_MODES,
 )
+from repro.distributed.wire import (  # noqa: F401
+    LeafWire, WireFormat, format_for, fused_pack, pack_oracle, payload_bytes,
+    scatter_add, unpack,
+)

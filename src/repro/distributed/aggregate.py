@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.efbv import EFBV
+from repro.distributed import wire
 
 PyTree = Any
 AGG_MODES = ("dense_psum", "sparse_allgather")
@@ -59,20 +60,32 @@ def compress_local(
 
     leaves, treedef = jax.tree.flatten(grads)
     h_leaves = treedef.flatten_up_to(h_local)
-    msgs, d_leaves = [], []
+    fmt = wire.format_for(algo.compressor, grads) \
+        if mode == "sparse_allgather" else None
+    msgs, h_new_leaves = [], []
     for j, (g_leaf, h_leaf) in enumerate(zip(leaves, h_leaves)):
         kj = None if key is None else jax.random.fold_in(key, j)
-        delta = g_leaf - h_leaf
-        if mode == "sparse_allgather":
-            vals, idx = algo.compressor.encode(kj, delta)
-            d_leaf = algo.compressor.decode((vals, idx), delta.size).reshape(delta.shape)
+        if fmt is not None:
+            # fused compress-and-pack: the kernel emits the payload AND
+            # EFBV.worker_update (h <- h + lam d) in one HBM pass -- the
+            # dense d_i is never materialized (block-top-k is deterministic,
+            # so kj is unused).
+            (vals, idx), h_leaf_new = wire.fused_pack(
+                fmt.leaves[j], g_leaf, h_leaf, algo.lam)
             msgs.append((vals, idx))
         else:
-            d_leaf = algo.compressor(kj, delta)
-            msgs.append(d_leaf)
-        d_leaves.append(d_leaf)
-    d_i = jax.tree.unflatten(treedef, d_leaves)
-    h_local_new = algo.worker_update(jax.tree.unflatten(treedef, h_leaves), d_i)
+            delta = g_leaf - h_leaf
+            if mode == "sparse_allgather":
+                vals, idx = algo.compressor.encode(kj, delta)
+                d_leaf = algo.compressor.decode(
+                    (vals, idx), delta.size).reshape(delta.shape)
+                msgs.append((vals, idx))
+            else:
+                d_leaf = algo.compressor(kj, delta)
+                msgs.append(d_leaf)
+            h_leaf_new = algo.worker_update(h_leaf, d_leaf)
+        h_new_leaves.append(h_leaf_new)
+    h_local_new = jax.tree.unflatten(treedef, h_new_leaves)
     message = jax.tree.unflatten(treedef, msgs) if mode == "dense_psum" else msgs
     return message, h_local_new
 
@@ -101,7 +114,8 @@ def combine_global(
         d_bar_leaves = []
         for (vals, idx), ref in zip(message_stacked, ref_leaves):
             # vals/idx carry a leading worker axis; the gather of the payload
-            # is the wire, the scatter-add is local (compressor-specific).
+            # is the wire, the scatter-add is local (block-top-k's decode
+            # delegates to wire.scatter_add -- one layout, one combine).
             dense = algo.compressor.decode((vals, idx), ref.size)
             d_bar_leaves.append((dense / n_workers).reshape(ref.shape))
         d_bar = jax.tree.unflatten(treedef, d_bar_leaves)

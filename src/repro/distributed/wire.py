@@ -1,0 +1,182 @@
+"""The sparse wire format: payload layout, exact bit accounting, and the
+pack/unpack/scatter-add helpers shared by the reference and shard_map paths.
+
+The paper's accounting ("number of bits sent by each node ... proportional to
+t*k", Sect. 6) only holds if the bytes that cross the wire are the payload,
+not a dense mask-compressed tensor.  This module is the single source of
+truth for what that payload IS:
+
+  per leaf (d elements, block size b, kb kept per block, nb = ceil(d/b)):
+
+      values   (nb, kb)  val_dtype   -- kept signed deltas, |.|-descending
+      indices  (nb, kb)  int32       -- block-LOCAL column indices
+
+  Local indices keep every index < b (no int32 overflow on 4e10-element
+  stacked expert tensors) and make the payload layout independent of the
+  leaf's global offset, so the same scatter-add works for a single worker's
+  message and for the worker-stacked (n, nb, kb) all-gather result.
+
+Three producers emit this layout and are pinned bit-identical by the
+differential harness (tests/harness.py):
+
+  * ``pack_oracle``       -- pure jnp (jax.lax.top_k), the spec;
+  * kernels/pack.py       -- fused Pallas kernel, interpret mode (CPU tests);
+  * kernels/pack.py       -- same kernel, compiled (TPU).
+
+``bits_per_round`` is EXACT: it must equal 8 * (payload nbytes) -- the wire
+tests assert equality, not proportionality.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+# kernel dispatch for the fused pack: 'auto' uses the compiled Pallas kernel
+# on TPU and the jnp oracle elsewhere; 'interpret' forces the Pallas kernel
+# in interpret mode (slow -- differential testing only); 'oracle' forces jnp.
+KERNEL_MODES = ("auto", "pallas", "interpret", "oracle")
+
+
+def _kernel_mode(kernel: Optional[str]) -> str:
+    mode = kernel or os.environ.get("REPRO_WIRE_KERNEL", "auto")
+    if mode not in KERNEL_MODES:
+        raise ValueError(f"wire kernel {mode!r} not in {KERNEL_MODES}")
+    if mode == "auto":
+        mode = "pallas" if jax.default_backend() == "tpu" else "oracle"
+    return mode
+
+
+# ---------------------------------------------------------------------------
+# format metadata
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LeafWire:
+    """Wire layout of one pytree leaf."""
+
+    shape: Tuple[int, ...]
+    size: int
+    block: int
+    kb: int
+
+    @property
+    def nb(self) -> int:
+        return -(-self.size // self.block)
+
+    @property
+    def payload_bits(self) -> int:
+        """Exact bits of one worker's message for this leaf: f32 values +
+        int32 local indices, (nb, kb) each."""
+        return self.nb * self.kb * (32 + 32)
+
+
+@dataclasses.dataclass(frozen=True)
+class WireFormat:
+    """Payload layout for a whole gradient pytree (leaf order = flatten
+    order, which both aggregation paths use)."""
+
+    leaves: Tuple[LeafWire, ...]
+
+    @staticmethod
+    def for_tree(tree: PyTree, block: int, kb: int) -> "WireFormat":
+        return WireFormat(tuple(
+            LeafWire(shape=tuple(l.shape), size=int(l.size), block=block, kb=kb)
+            for l in jax.tree.leaves(tree)))
+
+    def bits_per_round(self, *, n_workers: int = 1) -> int:
+        """Exact uplink bits one round puts on the wire: per worker when
+        n_workers == 1 (the paper's per-node accounting), total otherwise."""
+        return n_workers * sum(l.payload_bits for l in self.leaves)
+
+
+def format_for(compressor, tree: PyTree) -> Optional[WireFormat]:
+    """WireFormat when ``compressor`` emits this payload (block-top-k
+    family: has integer ``block``/``kb`` fields), else None."""
+    block = getattr(compressor, "block", None)
+    kb = getattr(compressor, "kb", None)
+    if isinstance(block, int) and isinstance(kb, int):
+        return WireFormat.for_tree(tree, block, kb)
+    return None
+
+
+def payload_bytes(payload: PyTree) -> int:
+    """Measured bytes of a payload pytree (what actually crosses the wire)."""
+    return sum(a.nbytes for a in jax.tree.leaves(payload))
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack / scatter-add (jnp; the layout spec)
+# ---------------------------------------------------------------------------
+
+def _pad2d(xf: Array, lw: LeafWire) -> Array:
+    pad = lw.nb * lw.block - lw.size
+    return jnp.pad(xf, (0, pad)).reshape(lw.nb, lw.block)
+
+
+def pack_oracle(lw: LeafWire, delta: Array) -> Tuple[Array, Array]:
+    """jnp oracle: (values, local indices), (nb, kb) each -- the layout every
+    fused producer must match bit-for-bit."""
+    xp = _pad2d(delta.reshape(-1), lw)
+    _, idx = jax.lax.top_k(jnp.abs(xp), lw.kb)
+    vals = jnp.take_along_axis(xp, idx, axis=1)
+    return vals, idx.astype(jnp.int32)
+
+
+def scatter_add(lw: LeafWire, vals: Array, idx: Array) -> Array:
+    """Payload -> dense flat (size,) vector.
+
+    Accepts one message (nb, kb) or the worker-stacked all-gather result
+    (n, nb, kb); the stacked form is scatter-SUMMED per block (the local
+    combine of the sparse_allgather collective -- divide by n for the mean).
+    """
+    if vals.ndim == 3:  # (n, nb, kb) -> (nb, n*kb)
+        vals = jnp.moveaxis(vals, 0, 1).reshape(vals.shape[1], -1)
+        idx = jnp.moveaxis(idx, 0, 1).reshape(idx.shape[1], -1)
+    rows = jnp.arange(lw.nb)[:, None]
+    out = jnp.zeros((lw.nb, lw.block), vals.dtype).at[rows, idx].add(vals)
+    return out.reshape(-1)[:lw.size]
+
+
+def unpack(lw: LeafWire, vals: Array, idx: Array) -> Array:
+    """One message -> dense tensor of the leaf's original shape."""
+    return scatter_add(lw, vals, idx).reshape(lw.shape)
+
+
+# ---------------------------------------------------------------------------
+# fused compress-and-pack (the worker hot path)
+# ---------------------------------------------------------------------------
+
+def fused_pack(lw: LeafWire, g: Array, h: Array, lam: float, *,
+               kernel: Optional[str] = None
+               ) -> Tuple[Tuple[Array, Array], Array]:
+    """d = block_topk(g - h) packed as (values, indices); h' = h + lam d.
+
+    Dispatches to the Pallas kernel (one HBM pass, dense d never leaves
+    VMEM) or the jnp oracle; all backends produce bit-identical results.
+    """
+    mode = _kernel_mode(kernel)
+    if mode in ("pallas", "interpret") and lw.block % 128 != 0:
+        # the Pallas kernel tiles 128-lane slabs; other block sizes take the
+        # bit-identical oracle.  Only an *explicit* per-call request errors.
+        if kernel in ("pallas", "interpret"):
+            raise ValueError(
+                f"Pallas pack kernel requires block % 128 == 0, got {lw.block}")
+        mode = "oracle"
+    if mode in ("pallas", "interpret"):
+        from repro.kernels import ops
+        return ops.efbv_pack_update(g, h, float(lam), block=lw.block,
+                                    kb=lw.kb, interpret=(mode == "interpret"))
+    # jnp oracle: same arithmetic, same order of operations as the kernel
+    delta = g.astype(jnp.float32) - h.astype(jnp.float32)
+    vals, idx = pack_oracle(lw, delta)
+    d = scatter_add(lw, vals, idx).reshape(lw.shape)
+    h_new = (h.astype(jnp.float32) + float(lam) * d).astype(h.dtype)
+    return (vals.astype(g.dtype), idx), h_new

@@ -27,11 +27,20 @@ TILE_NB = 8  # blocks (rows) per grid step
 
 def _select_mask(xa, kb: int):
     """(rows, block) magnitudes -> 0/1 keep-mask, kb per row, exact."""
+    block = xa.shape[1]
+    # f32 column indices: Mosaic here lowers neither cumsum nor integer
+    # reductions; f32 is exact for block < 2**24
+    cols = jax.lax.broadcasted_iota(jnp.float32, xa.shape, 1)
+
     def body(_, selected):
         score = jnp.where(selected > 0, -jnp.inf, xa)
         m = jnp.max(score, axis=1, keepdims=True)
-        is_m = (score == m) & jnp.isfinite(m)
-        first = (jnp.cumsum(is_m.astype(jnp.int32), axis=1) == 1) & is_m
+        # (isfinite has no Pallas TPU lowering; != -inf is the same guard)
+        is_m = (score == m) & (m != -jnp.inf)
+        # first-index tie-break via min-reduction (cumsum doesn't lower)
+        cmin = jnp.min(jnp.where(is_m, cols, float(block)), axis=1,
+                       keepdims=True)
+        first = is_m & (cols == cmin)
         return selected + first.astype(xa.dtype)
 
     return jax.lax.fori_loop(0, kb, body, jnp.zeros_like(xa))

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import block_topk as K
+from repro.kernels import pack as KP
 
 Array = jax.Array
 
@@ -51,3 +52,26 @@ def efbv_update(g: Array, h: Array, lam: float, block: int = 1024, kb: int = 64,
     d_out, h_out = K.efbv_update_pallas(gp, hp, lam, kb, interpret=interpret)
     unpad = lambda a: a.reshape(-1)[:d_len].reshape(shape)
     return unpad(d_out), unpad(h_out).astype(h.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "kb", "lam", "interpret"))
+def efbv_pack_update(g: Array, h: Array, lam: float, block: int = 1024,
+                     kb: int = 64, interpret: bool | None = None
+                     ) -> Tuple[Tuple[Array, Array], Array]:
+    """Fused compress-and-pack worker update (kernels/pack.py): one HBM pass
+    computing d = block_topk(g - h), h' = h + lam d, and the wire payload.
+
+    Returns ((values, indices), h') with values/indices of shape (nb, kb),
+    nb = ceil(g.size / block) -- the same payload layout as
+    ``BlockTopK.encode`` (rows added for TILE_NB alignment are sliced off).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    gp, d_len, shape = _to_slabs(g, block)
+    # h keeps its own dtype: the kernel subtracts in f32, so pre-rounding h
+    # to g.dtype would break bit-identity with the jnp oracle on mixed dtypes
+    hp, _, _ = _to_slabs(h, block)
+    vals, idx, h_out = KP.pack_update_pallas(gp, hp, lam, kb,
+                                             interpret=interpret)
+    nb = -(-d_len // block)
+    h_new = h_out.reshape(-1)[:d_len].reshape(shape)
+    return (vals[:nb], idx[:nb]), h_new

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: fused compress-AND-pack for the sparse wire format.
+
+The unfused hot path costs three HBM passes and materializes a dense tensor
+the theory says should never exist on the wire:
+
+    d      = block_topk(g - h)        # dense (nb, block) write
+    h     <- h + lam * d              # dense read + write
+    payload = pack(d)                 # dense read, (values, indices) write
+
+This kernel does all three in ONE pass over (g, h): each grid step loads a
+(TILE_NB, block) slab of g and h into VMEM, runs the iterative-max top-kb
+selection of block_topk.py on delta = g - h, and emits
+
+    values  (TILE_NB, kb)   -- the kept signed deltas, descending |.|,
+    indices (TILE_NB, kb)   -- block-LOCAL int32 column indices,
+    h_out   (TILE_NB, block)-- h + lam * d,
+
+so HBM traffic is read(g) + read(h) + write(h_out) + write(payload); the
+dense d lives only in VMEM.  Selection order matches jax.lax.top_k exactly
+(descending magnitude, ties broken by lowest index), which is what makes the
+payload bit-identical to the jnp oracle `BlockTopK.encode` -- the
+differential harness in tests/harness.py pins this.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.block_topk import TILE_NB
+
+Array = jax.Array
+
+
+def _pack_update_kernel(g_ref, h_ref, vals_ref, idx_ref, h_out_ref, *,
+                        kb: int, lam: float):
+    g = g_ref[...]
+    h = h_ref[...]
+    # subtract in f32: bit-identical between interpret mode and TPU lowering
+    delta = g.astype(jnp.float32) - h.astype(jnp.float32)
+    mag = jnp.abs(delta)
+    rows, block = mag.shape
+    # column indices kept in f32: Mosaic (this jaxlib vintage) implements
+    # neither integer reductions nor cumsum; f32 is exact for block < 2**24
+    cols = jax.lax.broadcasted_iota(jnp.float32, (rows, block), 1)
+
+    # python-unrolled over the (static, small) kb: payload columns are
+    # assembled with one concatenate -- loop-carried dynamic_update_slice has
+    # no Mosaic lowering, and the unroll keeps everything elementwise+reduce
+    selected = jnp.zeros((rows, block), jnp.bool_)
+    v_cols, c_cols = [], []
+    for _ in range(kb):
+        score = jnp.where(selected, -jnp.inf, mag)
+        m = jnp.max(score, axis=1, keepdims=True)
+        # m != -inf guards the all-selected row (kb == block); spelled as a
+        # compare because isfinite has no Pallas TPU lowering
+        is_m = (score == m) & (m != -jnp.inf)
+        # exact first-index tie-breaking == jax.lax.top_k's stable order:
+        # the smallest column index among the maxima
+        cmin = jnp.min(jnp.where(is_m, cols, float(block)), axis=1,
+                       keepdims=True)
+        first = is_m & (cols == cmin)
+        v_cols.append(jnp.sum(jnp.where(first, delta, 0.0), axis=1)[:, None])
+        c_cols.append(jnp.max(jnp.where(first, cols, 0.0), axis=1)[:, None])
+        selected = selected | first
+
+    vals_ref[...] = jnp.concatenate(v_cols, axis=1).astype(vals_ref.dtype)
+    idx_ref[...] = jnp.concatenate(c_cols, axis=1).astype(jnp.int32)
+    d = jnp.where(selected, delta, 0.0)
+    h_out_ref[...] = (h.astype(jnp.float32) + lam * d).astype(h_out_ref.dtype)
+
+
+def pack_update_pallas(g2d: Array, h2d: Array, lam: float, kb: int, *,
+                       interpret: bool = False):
+    """g2d/h2d: (nb, block) with nb % TILE_NB == 0, block % 128 == 0.
+
+    Returns (values (nb, kb), indices (nb, kb) int32, h_new (nb, block)).
+    """
+    nb, block = g2d.shape
+    assert nb % TILE_NB == 0 and block % 128 == 0, (nb, block)
+    assert 0 < kb <= block, (kb, block)
+    grid = (nb // TILE_NB,)
+    slab = pl.BlockSpec((TILE_NB, block), lambda i: (i, 0))
+    payload = pl.BlockSpec((TILE_NB, kb), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_pack_update_kernel, kb=kb, lam=float(lam)),
+        grid=grid,
+        in_specs=[slab, slab],
+        out_specs=(payload, payload, slab),
+        out_shape=(jax.ShapeDtypeStruct((nb, kb), g2d.dtype),
+                   jax.ShapeDtypeStruct((nb, kb), jnp.int32),
+                   jax.ShapeDtypeStruct((nb, block), h2d.dtype)),
+        interpret=interpret,
+    )(g2d, h2d)

@@ -110,10 +110,14 @@ def parse_computations(hlo: str) -> Dict[str, Computation]:
 
 
 def _operand_names(ins: Instr) -> List[str]:
+    """Operand names of an instruction, robust to both operand syntaxes:
+    bare (``dot(%a, %b)``) and inline-typed (``dot(f32[32,64]{1,0} %a, ...)``
+    -- older XLA text).  Commas inside ``[]``/``{}`` (shape dims, layouts)
+    are not operand separators."""
     idx = ins.rhs.find(ins.opcode + "(")
     if idx < 0:
         return []
-    depth, args = 0, ""
+    depth, bracket, args, cur = 0, 0, [], ""
     for ch in ins.rhs[idx + len(ins.opcode):]:
         if ch == "(":
             depth += 1
@@ -123,15 +127,29 @@ def _operand_names(ins: Instr) -> List[str]:
             depth -= 1
             if depth == 0:
                 break
-        if depth >= 1:
-            args += ch
+        if depth < 1:
+            continue
+        if ch in "[{":
+            bracket += 1
+        elif ch in "]}":
+            bracket -= 1
+        if ch == "," and depth == 1 and bracket == 0:
+            args.append(cur)
+            cur = ""
+        else:
+            cur += ch
+    if cur.strip():
+        args.append(cur)
     out = []
-    for a in args.split(","):
+    for a in args:
         a = a.strip()
-        if a.startswith("%"):
-            out.append(a[1:])
-        elif a and re.fullmatch(r"[\w\.\-]+", a):
-            out.append(a)
+        named = re.findall(r"%([\w\.\-]+)", a)
+        if named:
+            out.append(named[-1])
+            continue
+        toks = a.split()
+        if toks and re.fullmatch(r"[\w\.\-]+", toks[-1]):
+            out.append(toks[-1])
     return out
 
 
@@ -208,8 +226,58 @@ def _io_bytes(ins: Instr, types: Dict[str, str]) -> float:
 _SLICING = ("dynamic-slice", "slice", "gather")
 
 
+def _param_names_of(comp: "Computation") -> Dict[int, str]:
+    out: Dict[int, str] = {}
+    for b_ins in comp.instrs:
+        m = re.search(r"parameter\((\d+)\)", b_ins.rhs)
+        if m:
+            out[int(m.group(1))] = b_ins.name
+    return out
+
+
+def _sliced_only_bytes(body: "Computation", pname: str,
+                       comps: Dict[str, "Computation"], seen) -> Optional[float]:
+    """Bytes actually read from parameter ``pname`` of ``body`` when its
+    every use is a slicing op -- descending through nested fusion/call
+    wrappers (older XLA wraps the scan-stack dynamic-slice in a parallel
+    call computation).  None if any consumer reads the full operand."""
+    key = (body.name, pname)
+    if key in seen:
+        return None
+    seen = seen | {key}
+    consumers = [b for b in body.instrs if pname in _operand_names(b)]
+    if not consumers:
+        return None  # conservatively charge the full operand
+    total = 0.0
+    for c in consumers:
+        if c.opcode in _SLICING:
+            total += _shape_bytes(c.result_type)
+        elif c.opcode in ("fusion", "call"):
+            called = [comps[x] for x in _called(c) if x in comps]
+            if not called:
+                return None
+            inner = called[0]
+            inner_params = _param_names_of(inner)
+            # the operand may be passed at several positions; every one must
+            # be slice-only inside the callee
+            positions = [i for i, o in enumerate(_operand_names(c))
+                         if o == pname]
+            for pos in positions:
+                inner_pname = inner_params.get(pos)
+                if inner_pname is None:
+                    return None
+                sub = _sliced_only_bytes(inner, inner_pname, comps, seen)
+                if sub is None:
+                    return None
+                total += sub
+        else:
+            return None
+    return total
+
+
 def _fusion_io_bytes(ins: Instr, types: Dict[str, str],
-                     body: Optional["Computation"]) -> float:
+                     body: Optional["Computation"],
+                     comps: Optional[Dict[str, "Computation"]] = None) -> float:
     """Fusion boundary traffic with slice-awareness: when a fusion *parameter*
     is only consumed by slicing ops inside the body (the scan-stack weight
     lookup pattern), charge the slice sizes, not the full stacked operand."""
@@ -237,22 +305,15 @@ def _fusion_io_bytes(ins: Instr, types: Dict[str, str],
             total += _shape_bytes(types.get(name, ""))
         return float(total)
     # map parameter index -> param instr name inside the body
-    param_names: Dict[int, str] = {}
-    for b_ins in body.instrs:
-        m = re.search(r"parameter\((\d+)\)", b_ins.rhs)
-        if m:
-            param_names[int(m.group(1))] = b_ins.name
+    param_names = _param_names_of(body)
     for i, name in enumerate(ops):
         full = _shape_bytes(types.get(name, ""))
         pname = param_names.get(i)
         if pname is None:
             total += full
             continue
-        consumers = [b for b in body.instrs if pname in _operand_names(b)]
-        if consumers and all(c.opcode in _SLICING for c in consumers):
-            total += sum(_shape_bytes(c.result_type) for c in consumers)
-        else:
-            total += full
+        sliced = _sliced_only_bytes(body, pname, comps or {}, frozenset())
+        total += full if sliced is None else sliced
     return float(total)
 
 
@@ -335,7 +396,7 @@ def computation_cost(comp: Computation, comps: Dict[str, Computation],
             for c in called:
                 total.flops += _fusion_flops(c, comps, flop_memo)
             total.hbm_bytes += _fusion_io_bytes(
-                ins, comp.types, called[0] if called else None)
+                ins, comp.types, called[0] if called else None, comps)
             continue
         if op == "dot":
             total.flops += dot_flops(ins, comp.types)

@@ -21,25 +21,21 @@ POD_AXIS = "pod"
 def make_production_mesh(*, multi_pod: bool = False):
     """(16,16) ('data','model') single pod; (2,16,16) ('pod','data','model')
     across two pods."""
-    import jax
+    from repro import compat
 
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape: Sequence[int], axes: Optional[Sequence[str]] = None):
     """Arbitrary mesh for tests/smoke runs; axes default to trailing names of
     ('pod','data','model')."""
-    import jax
+    from repro import compat
 
     if axes is None:
         axes = ("pod", "data", "model")[-len(shape):]
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return compat.make_mesh(tuple(shape), tuple(axes))
 
 
 def worker_axes(mesh) -> Tuple[str, ...]:

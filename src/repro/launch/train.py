@@ -54,6 +54,10 @@ def parse_args(argv=None):
     ap.add_argument("--compressor", default="block_topk:256,16")
     ap.add_argument("--agg", default="dense_psum",
                     choices=["dense_psum", "sparse_allgather"])
+    ap.add_argument("--server-comp", default="",
+                    help="compressor spec for the server->worker model "
+                         "broadcast (bidirectional compression, EF21-BC "
+                         "style); empty = uncompressed broadcast")
     ap.add_argument("--trainer", default="shard_map",
                     choices=["shard_map", "fsdp"])
     ap.add_argument("--seed", type=int, default=0)
@@ -90,13 +94,28 @@ def main(argv=None):
         comp = make_compressor(args.compressor)
         algo = EFBV.make(comp, d=max(cfg.d_model * max(cfg.d_ff, 1), 1), n=n,
                          mode=args.algo)
+    server_comp = make_compressor(args.server_comp) if args.server_comp else None
+    if server_comp is not None and args.trainer == "fsdp":
+        raise SystemExit("--server-comp requires --trainer shard_map")
     print(f"[train] arch={cfg.name} family={cfg.family} params~{cfg.param_count():,} "
           f"workers={n} algo={args.algo} lam={algo.lam:.4g} nu={algo.nu:.4g} "
-          f"agg={args.agg}")
+          f"agg={args.agg}"
+          + (f" server_comp={args.server_comp}" if server_comp else ""))
 
     key = jax.random.key(args.seed)
     params = model.init(key)
-    state = init_train_state(params, opt, mesh)
+    state = init_train_state(params, opt, mesh,
+                             bidirectional=server_comp is not None)
+
+    # exact wire accounting for the sparse payload (docs/wire_format.md)
+    if args.agg == "sparse_allgather":
+        from repro.distributed import wire
+        fmt = wire.format_for(algo.compressor, params)
+        if fmt is not None:
+            up = fmt.bits_per_round()
+            dense = sum(l.size for l in fmt.leaves) * 32
+            print(f"[train] wire: {up} bits/round/worker uplink "
+                  f"({up / 8 / 2**20:.2f} MiB, {up / max(dense, 1):.4f}x dense)")
     if args.trainer == "fsdp":
         from repro.train import fsdp_state_shardings
         shardings = fsdp_state_shardings(mesh, model.param_specs(), state)
@@ -116,7 +135,8 @@ def main(argv=None):
         step_fn = make_train_step_fsdp(loss_fn, opt, algo, mesh,
                                        agg_mode=args.agg)
     else:
-        step_fn = make_train_step(loss_fn, opt, algo, mesh, agg_mode=args.agg)
+        step_fn = make_train_step(loss_fn, opt, algo, mesh, agg_mode=args.agg,
+                                  server_comp=server_comp)
 
     t_start = time.time()
     for step in range(args.steps):

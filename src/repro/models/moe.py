@@ -47,15 +47,8 @@ def moe_init(key, d: int, ff: int, n_experts: int) -> Tuple[Dict, Dict]:
 def _auto_axes():
     """Names of non-'model' mesh axes currently under GSPMD (auto) control;
     empty when no mesh is ambient or inside a fully-manual shard_map."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh.empty:
-        return ()
-    import jax.sharding as shd
-    out = []
-    for name, ty in zip(mesh.axis_names, mesh.axis_types):
-        if name != "model" and ty == shd.AxisType.Auto:
-            out.append(name)
-    return tuple(out)
+    from repro import compat
+    return compat.auto_axes_of(compat.abstract_mesh(), exclude=("model",))
 
 
 def _maybe_group_constraint(x: Array, G: int) -> Array:
@@ -65,10 +58,11 @@ def _maybe_group_constraint(x: Array, G: int) -> Array:
     grouped buffers on granite prefill_32k; with it each shard dispatches
     only its own groups."""
     import math as _math
+    from repro import compat
     axes = _auto_axes()
     if not axes:
         return x
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.abstract_mesh()
     n = _math.prod(mesh.shape[a] for a in axes)
     if n <= 1 or G % n:
         return x
@@ -82,8 +76,9 @@ def _maybe_ep_constraint(x: Array, n_experts: int) -> Array:
     unconstrained buffer replicates over 'model' and the expert-FFN outputs
     come back via ~1 TB/device of all-reduces; constraining E makes GSPMD
     move tokens with all-to-alls instead -- k*T*d words, ~16x less)."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh.empty or "model" not in mesh.axis_names:
+    from repro import compat
+    mesh = compat.abstract_mesh()
+    if mesh is None or mesh.empty or "model" not in mesh.axis_names:
         return x
     if n_experts % mesh.shape["model"] != 0:
         return x

@@ -17,18 +17,20 @@ axis sharded over (pod, data); inside phase 1 each worker sees its own h_i.
 
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
+from repro.core.contract import Compressor
 from repro.core.efbv import EFBV
 from repro.distributed.aggregate import combine_global, compress_local
 from repro.distributed.spec import (
     batch_spec, linear_worker_index, stack_worker_spec, to_named_sharding,
 )
-from repro.launch.mesh import num_workers, worker_axes
+from repro.launch.mesh import MODEL_AXIS, num_workers, worker_axes
 from repro.optim.optimizers import Optimizer, apply_updates, global_norm
 
 PyTree = Any
@@ -40,9 +42,13 @@ class TrainState(NamedTuple):
     h: PyTree        # per-worker control variates, leading axis n
     h_avg: PyTree    # master control variate
     step: jax.Array
+    # workers' reconstruction of the model under bidirectional compression
+    # (EF21-BC-style server side); None when the broadcast is uncompressed.
+    x_hat: PyTree = None
 
 
-def init_train_state(params: PyTree, optimizer: Optimizer, mesh) -> TrainState:
+def init_train_state(params: PyTree, optimizer: Optimizer, mesh, *,
+                     bidirectional: bool = False) -> TrainState:
     n = num_workers(mesh)
     zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
     h = jax.tree.map(lambda p: jnp.zeros((n,) + p.shape, jnp.float32), params)
@@ -52,6 +58,7 @@ def init_train_state(params: PyTree, optimizer: Optimizer, mesh) -> TrainState:
         h=h,
         h_avg=zeros,
         step=jnp.zeros((), jnp.int32),
+        x_hat=jax.tree.map(jnp.array, params) if bidirectional else None,
     )
 
 
@@ -74,8 +81,10 @@ def train_state_shardings(mesh, param_specs: PyTree, state: TrainState) -> Train
     h_sh = to_named_sharding(mesh, stack_worker_spec(mesh, param_specs))
     havg_sh = jax.tree.map(lambda l: NamedSharding(mesh, spec_for(l)), state.h_avg)
     rep = NamedSharding(mesh, P())
+    xhat_sh = None if state.x_hat is None \
+        else jax.tree.map(lambda _, s: s, state.x_hat, p_shard)
     return TrainState(params=p_shard, opt_state=opt_sh, h=h_sh, h_avg=havg_sh,
-                      step=rep)
+                      step=rep, x_hat=xhat_sh)
 
 
 def make_train_step(
@@ -86,11 +95,19 @@ def make_train_step(
     *,
     agg_mode: str = "dense_psum",
     remat: bool = False,
+    server_comp: Optional[Compressor] = None,
 ) -> Callable[[TrainState, Any, jax.Array], Tuple[TrainState, dict]]:
     """Build the jitted multi-pod train step.
 
     loss_fn(params, batch) -> (scalar loss, metrics dict); it sees the LOCAL
     batch shard (the worker's f_i) and may use GSPMD-auto 'model' collectives.
+
+    With ``server_comp`` the step runs *bidirectional* compression (the
+    EF21-BC extension, core/efbv.py::run_bidirectional, ported into the
+    sharded path): workers evaluate gradients at their reconstruction x_hat
+    of the model, and the server broadcasts the compressed model innovation
+    C_s(x^{t+1} - x_hat^t) instead of x^{t+1}.  Requires a TrainState built
+    with ``init_train_state(..., bidirectional=True)``.
     """
     waxes = worker_axes(mesh)
     n = num_workers(mesh)
@@ -99,6 +116,22 @@ def make_train_step(
         loss_fn = jax.checkpoint(loss_fn)
 
     # ---- phase 1: worker-local grad + compress (manual over worker axes) ----
+    # One body shared by both phase-1 formulations below, so the shard_map
+    # and vmap paths cannot drift apart.
+    def worker_body(params_for_grad, h_i, batch_i, kw):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params_for_grad, batch_i)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        message, h_i_new = compress_local(algo, kw, grads, h_i, mode=agg_mode)
+        local_metrics = {
+            "loss": loss,
+            "grad_norm": global_norm(grads),
+            "h_residual": global_norm(
+                jax.tree.map(lambda a, b: a - b, grads, h_i_new)),
+            **aux,
+        }
+        return message, h_i_new, local_metrics
+
     def local_phase(params, h, batch, key):
         widx = linear_worker_index(mesh)
         kw = jax.random.fold_in(key, widx)
@@ -107,37 +140,50 @@ def make_train_step(
         # the pcast, jax's VMA machinery would treat the cotangent of the
         # worker-invariant params as invariant and psum it over the worker
         # axes -- giving sum_i grad f_i instead of this worker's grad f_i.
-        params_v = jax.lax.pcast(params, tuple(waxes), to="varying")
-        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params_v, batch)
-        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
-
+        params_v = compat.pcast_varying(params, tuple(waxes))
         h_loc = jax.tree.map(lambda a: a[0], h)
-        message, h_loc_new = compress_local(algo, kw, grads, h_loc, mode=agg_mode)
-
-        local_metrics = {
-            "loss": loss,
-            "grad_norm": global_norm(grads),
-            "h_residual": global_norm(
-                jax.tree.map(lambda a, b: a - b, grads, h_loc_new)),
-            **aux,
-        }
+        message, h_loc_new, local_metrics = worker_body(
+            params_v, h_loc, batch, kw)
         # stack everything on the worker axis
         stack = lambda t: jax.tree.map(lambda a: a[None], t)
         return stack(message), stack(h_loc_new), stack(local_metrics)
 
-    local_sharded = jax.shard_map(
-        local_phase,
-        mesh=mesh,
-        in_specs=(P(), P(waxes), batch_spec(mesh), P()),
-        out_specs=(P(waxes), P(waxes), P(waxes)),
-        axis_names=set(waxes),
-    )
+    # Old jaxlibs miscompile *partial*-auto shard_map (manual worker axes +
+    # auto 'model' axis with size > 1 trips an SPMD-partitioner CHECK).  The
+    # vmap formulation below is the same per-worker math under pure GSPMD --
+    # worker-major batch reshape, worker keys fold_in(key, i) identical to
+    # linear_worker_index -- so the two phase-1s are bit-equivalent for
+    # deterministic compressors and draw-equivalent for random ones.
+    model_size = mesh.shape.get(MODEL_AXIS, 1)
+    use_shard_map = compat.HAS_PARTIAL_AUTO_SHARD_MAP or model_size == 1
+
+    if use_shard_map:
+        local_sharded = compat.shard_map(
+            local_phase,
+            mesh=mesh,
+            in_specs=(P(), P(waxes), batch_spec(mesh), P()),
+            out_specs=(P(waxes), P(waxes), P(waxes)),
+            manual_axes=waxes,
+        )
+    else:
+        def local_sharded(params, h, batch, key):
+            wb = jax.tree.map(
+                lambda a: a.reshape((n, a.shape[0] // n) + a.shape[1:]), batch)
+            wb = jax.lax.with_sharding_constraint(
+                wb, jax.tree.map(lambda _: NamedSharding(mesh, P(waxes)), wb))
+
+            def one_worker(i, h_i, wbatch):
+                return worker_body(params, h_i, wbatch,
+                                   jax.random.fold_in(key, i))
+
+            return jax.vmap(one_worker)(jnp.arange(n), h, wb)
 
     # ---- full step: phase 1 + phase 2 under one jit ---------------------------
     def train_step(state: TrainState, batch, key):
+        # under bidirectional compression workers only ever see x_hat
+        eval_params = state.x_hat if server_comp is not None else state.params
         message, h_new, local_metrics = local_sharded(
-            state.params, state.h, batch, key)
+            eval_params, state.h, batch, key)
 
         g, h_avg_new = combine_global(
             algo, message, state.h_avg, n_workers=n, mode=agg_mode)
@@ -149,12 +195,27 @@ def make_train_step(
         metrics["g_norm"] = global_norm(g)
         metrics["update_norm"] = global_norm(updates)
 
+        x_hat = state.x_hat
+        if server_comp is not None:
+            # server-side EF: broadcast C_s(x^{t+1} - x_hat^t); every worker
+            # applies the same innovation, so one replicated copy suffices.
+            k_s = jax.random.fold_in(key, n + 0x5e)
+            leaves, treedef = jax.tree.flatten(
+                jax.tree.map(lambda a, b: a - b, params, x_hat))
+            q = [server_comp(jax.random.fold_in(k_s, j), l)
+                 for j, l in enumerate(leaves)]
+            x_hat = jax.tree.map(lambda hv, qv: hv + qv, x_hat,
+                                 jax.tree.unflatten(treedef, q))
+            metrics["xhat_err"] = global_norm(
+                jax.tree.map(lambda a, b: a - b, params, x_hat))
+
         new_state = TrainState(
             params=params,
             opt_state=opt_state,
             h=h_new,
             h_avg=h_avg_new,
             step=state.step + 1,
+            x_hat=x_hat,
         )
         return new_state, metrics
 
@@ -256,6 +317,10 @@ def make_train_step_fsdp(
         params = apply_updates(state.params, updates)
         metrics = {"loss": jnp.mean(loss), "g_norm": global_norm(g),
                    "update_norm": global_norm(updates),
+                   "grad_norm": jnp.mean(jax.vmap(global_norm)(grads)),
+                   "h_residual": jnp.mean(jax.vmap(
+                       lambda gi, hi: global_norm(jax.tree.map(
+                           lambda a, b: a - b, gi, hi)))(grads, h_new)),
                    **{k: jnp.mean(v) for k, v in aux.items()}}
         new_state = TrainState(params=params, opt_state=opt_state, h=h_new,
                                h_avg=h_avg_new, step=state.step + 1)

@@ -1,0 +1,77 @@
+"""Property-testing shim: hypothesis when installed, fixed-seed sampling
+otherwise.
+
+The tier-1 suite must never ImportError on an optional dependency.  Tests
+import ``given/settings/st`` from here; with hypothesis present they get the
+real thing, and on a bare container they get a deterministic degradation:
+``@given`` expands into a loop over ``max_examples`` pseudo-random draws
+(seeded from the test name, so runs are reproducible) and ``@settings`` just
+records ``max_examples``.
+
+Only the strategy surface this repo uses is emulated: ``st.integers`` and
+``st.floats`` with inclusive bounds.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+    import zlib
+
+    _DEFAULT_MAX_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example_at(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    st = _Strategies()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+        def deco(fn):
+            fn._prop_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            n = getattr(fn, "_prop_max_examples", _DEFAULT_MAX_EXAMPLES)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = random.Random(seed)
+                for _ in range(n):
+                    drawn = {name: s.example_at(rng)
+                             for name, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            # hide the generated parameters from pytest's fixture resolution
+            # (hypothesis does the same via its own wrapper signature)
+            sig = inspect.signature(fn)
+            kept = [p for name, p in sig.parameters.items()
+                    if name not in strategies]
+            wrapper.__signature__ = sig.replace(parameters=kept)
+            return wrapper
+
+        return deco

@@ -1,0 +1,100 @@
+"""Differential oracle harness for the sparse wire-format pipeline.
+
+One algorithm, several executions -- the harness runs the SAME EF-BV
+recursion through each backend and asserts the trajectories are
+*bit-identical*, not merely close:
+
+    oracle     -- pure jnp (jax.lax.top_k pack; the spec),
+    interpret  -- fused Pallas pack kernel, interpret mode (CPU),
+    pallas     -- fused Pallas pack kernel, compiled (TPU only).
+
+Because the kernel reproduces jax.lax.top_k's selection order exactly
+(descending |.|, first-index tie-breaking) and performs the same f32
+arithmetic, any divergence -- one ULP, one swapped tie -- is a bug, and
+equality composes over steps: if round t is bit-equal, round t+1 sees
+identical inputs.  tests/test_wire.py drives this across compressor
+configs; test_distributed.py reuses run_with_devices for the
+1-vs-8-fake-device leg.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import wire
+
+Array = jax.Array
+
+
+def available_pack_impls() -> List[str]:
+    impls = ["oracle", "interpret"]
+    if jax.default_backend() == "tpu":
+        impls.append("pallas")
+    return impls
+
+
+def quadratic_grads(n: int, d: int, seed: int = 0):
+    """Per-worker gradient oracle of a strongly convex quadratic finite sum:
+    grad_i(x) = Q_i x - b_i, returned as an (n, d) stack."""
+    key = jax.random.key(seed)
+    A = jax.random.normal(key, (n, d, d)) / np.sqrt(d)
+    Q = jnp.einsum("nij,nkj->nik", A, A) + 0.5 * jnp.eye(d)
+    b = jax.random.normal(jax.random.key(seed + 1), (n, d))
+
+    def grad_fn(x):
+        return jnp.einsum("nij,j->ni", Q, x) - b
+
+    return grad_fn
+
+
+def run_wire_trajectory(kernel: str, *, steps: int, n: int, d: int,
+                        block: int, kb: int, lam: float, nu: float,
+                        gamma: float, seed: int = 0) -> Dict[str, Array]:
+    """EF-BV (Algorithm 1) over the sparse wire with the given pack backend.
+
+    Every worker packs its innovation with wire.fused_pack(kernel=...), the
+    master scatter-adds the stacked payload -- exactly the sparse_allgather
+    data path.  Returns the full (x, h) trajectory plus the last round's
+    payload so callers can check byte accounting.
+    """
+    lw = wire.LeafWire(shape=(d,), size=d, block=block, kb=kb)
+    grad_fn = quadratic_grads(n, d, seed)
+
+    x = jnp.zeros((d,), jnp.float32)
+    h = jnp.zeros((n, d), jnp.float32)
+    h_avg = jnp.zeros((d,), jnp.float32)
+    xs, hs = [], []
+    payload: Tuple[Array, Array] = None
+    for _ in range(steps):
+        g = grad_fn(x)
+        vals_i, idx_i, h_i = [], [], []
+        for i in range(n):
+            (vals, idx), h_new = wire.fused_pack(lw, g[i], h[i], lam,
+                                                 kernel=kernel)
+            vals_i.append(vals)
+            idx_i.append(idx)
+            h_i.append(h_new)
+        h = jnp.stack(h_i)
+        payload = (jnp.stack(vals_i), jnp.stack(idx_i))
+        d_bar = wire.scatter_add(lw, *payload) / n
+        x = x - gamma * (h_avg + nu * d_bar)
+        h_avg = h_avg + lam * d_bar
+        xs.append(x)
+        hs.append(h)
+    return {"x": jnp.stack(xs), "h": jnp.stack(hs), "payload": payload,
+            "lw": lw}
+
+
+def assert_bit_identical(a, b, context: str = ""):
+    """Exact equality (values AND dtypes) across two pytrees of arrays."""
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), (context, len(la), len(lb))
+    for x, y in zip(la, lb):
+        assert jnp.asarray(x).dtype == jnp.asarray(y).dtype, \
+            (context, x.dtype, y.dtype)
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=context)

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core import (
     BlockTopK, CompKK, FracCompKK, FracTopK, Identity, MixKK, Natural, QSGD,

@@ -22,6 +22,23 @@ def test_train_driver_end_to_end():
     assert "TRAIN_DRIVER_OK" in out
 
 
+@pytest.mark.slow
+def test_train_driver_smoke_both_agg_modes():
+    """Regression: launch/train.py --smoke must run under BOTH aggregation
+    wire formats (the sparse path is the fused-payload pipeline)."""
+    out = run_with_devices("""
+        from repro.launch.train import main
+        for agg in ["dense_psum", "sparse_allgather"]:
+            loss = main(["--arch", "qwen2-0.5b", "--smoke", "--mesh", "2x2",
+                         "--steps", "2", "--global-batch", "8", "--seq", "32",
+                         "--algo", "efbv", "--compressor", "block_topk:256,16",
+                         "--agg", agg, "--log-every", "10"])
+            assert loss < 8.0, (agg, loss)
+            print("AGG_OK", agg)
+    """, n_devices=4, timeout=1200)
+    assert out.count("AGG_OK") == 2
+
+
 def test_serve_driver_end_to_end(capsys):
     from repro.launch.serve import main
     gen = main(["--arch", "mamba2-130m", "--smoke", "--batch", "2",

@@ -4,7 +4,7 @@ Table 3 parameter values (mushrooms / phishing / a9a / w8a columns)."""
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core import CompKK, theory, tune, tune_for
 
