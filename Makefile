@@ -6,7 +6,7 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test-tier1 test-all test-slow bench smoke
+.PHONY: test-tier1 test-all test-slow bench smoke docs-test docs-check
 
 test-tier1:
 	JAX_PLATFORMS=cpu $(PY) -m pytest -x -q
@@ -19,6 +19,12 @@ test-slow:
 
 bench:
 	JAX_PLATFORMS=cpu $(PY) -m benchmarks.compressor_bench
+
+docs-test:
+	JAX_PLATFORMS=cpu $(PY) -m pytest -q --doctest-glob='*.md' docs/
+
+docs-check: docs-test
+	$(PY) tools/check_links.py docs README.md
 
 smoke:
 	JAX_PLATFORMS=cpu $(PY) -m repro.launch.train --arch qwen2-0.5b --smoke \

@@ -1,7 +1,8 @@
 """Compressor micro-benchmarks (us/call on this host) incl. the Pallas
-block-top-k kernel (interpret mode on CPU) vs its XLA oracle, and the
+block-top-k kernel (interpret mode on CPU) vs its XLA oracle, the
 packed-vs-dense wire pipeline comparison (one HBM pass, proven from the
-TPU-lowered HLO)."""
+TPU-lowered HLO), and measured payload bytes vs theoretical bits_per_round
+for EVERY registered wire codec -- all compressors have one."""
 
 from __future__ import annotations
 
@@ -12,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import KEY, timeit
-from repro.core import BlockTopK, CompKK, Natural, QSGD, RandK, TopK
+from repro.core import (BlockTopK, CompKK, Identity, MixKK, Natural, QSGD,
+                        RandK, SignNorm, TopK)
 from repro.distributed import wire
 from repro.kernels import ops, ref
 
@@ -40,6 +42,48 @@ def run(fast: bool = True):
     rows.append({"name": "compressor/block_topk_pallas_interpret",
                  "us_per_call": f"{us:.1f}", "derived": "interpret=True"})
     rows.extend(packed_vs_dense(fast=fast))
+    rows.extend(codec_payload_rows())
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# measured payload bytes vs theoretical bits for every registered codec
+# ---------------------------------------------------------------------------
+
+def codec_payload_rows(d: int = 1 << 16):
+    """Every compressor has a wire codec; measure the bytes its payload
+    actually occupies and pin them against the exact bits_per_round
+    accounting and the fp32 dense baseline.  QSGD and natural compression
+    must land at <= 1/3 of dense fp32 (acceptance criterion)."""
+    x = jax.random.normal(KEY, (d,))
+    dense_bytes = 4 * d
+    cases = [
+        ("identity", Identity()),
+        ("topk_1pc", TopK(d // 100)),
+        ("randk_1pc", RandK(d // 100)),
+        ("comp_k_kp", CompKK(d // 100, d // 10)),
+        ("mix_k_kp", MixKK(d // 200, d // 200)),
+        ("block_topk", BlockTopK(1024, 16)),
+        ("sign", SignNorm()),
+        ("natural", Natural()),
+        ("qsgd_s16", QSGD(16)),
+    ]
+    rows = []
+    for name, comp in cases:
+        codec = wire.codec_of(comp, (d,), d)
+        payload = codec.encode(KEY, x)
+        measured = wire.payload_bytes(payload)
+        assert 8 * measured == codec.payload_bits, (name, measured)
+        ratio = measured / dense_bytes
+        if name in ("qsgd_s16", "natural"):
+            assert ratio <= 1 / 3, (name, ratio)
+        rows.append({
+            "name": f"wire/codec_{name}",
+            "us_per_call": "",
+            "derived": f"kind={codec.kind} payload_bytes={measured} "
+                       f"bits_per_round={codec.payload_bits} "
+                       f"vs_dense_fp32={ratio:.4f}x",
+        })
     return rows
 
 
@@ -95,6 +139,45 @@ def fused_pack_hlo_report(nb: int = 64, block: int = 256, kb: int = 16):
     return report
 
 
+def randk_update_hlo_report(nr: int = 16, cols: int = 256, k: int = 32):
+    """The rand-k fused kernel's TPU custom call must emit ONLY h_out (one
+    dense f32 tensor): the dense rand-k output d lives in VMEM, and the
+    O(k) payload gather never touches the kernel.  AOT-lowered like
+    ``fused_pack_hlo_report``, so this runs on CPU-only hosts."""
+    from jax import export as jexport
+    from repro.kernels.pack import randk_update_pallas
+
+    g = jax.ShapeDtypeStruct((nr, cols), jnp.float32)
+    idx = jax.ShapeDtypeStruct((k,), jnp.int32)
+    fn = jax.jit(functools.partial(randk_update_pallas, scale=75.0, lam=0.9,
+                                   interpret=False))
+    res = _custom_call_result_types(
+        jexport.export(fn, platforms=["tpu"])(g, g, idx).mlir_module())
+    dense_ty = f"tensor<{nr}x{cols}xf32>"
+    return {"h_out_only": res == [dense_ty], "outputs": res}
+
+
+def qsgd_pack_hlo_report(nr: int = 32, cols: int = 256, s: int = 16):
+    """The QSGD fused kernel's TPU custom call must emit only the int8
+    level stream and h_out: one dense f32 tensor, no dequantized d."""
+    from jax import export as jexport
+    from repro.kernels.pack import qsgd_pack_update_pallas
+
+    g = jax.ShapeDtypeStruct((nr, cols), jnp.float32)
+    norm = jax.ShapeDtypeStruct((1, 1), jnp.float32)
+    fn = jax.jit(functools.partial(qsgd_pack_update_pallas, s=s, lam=0.9,
+                                   interpret=False))
+    res = _custom_call_result_types(
+        jexport.export(fn, platforms=["tpu"])(g, g, g, norm).mlir_module())
+    f32_ty = f"tensor<{nr}x{cols}xf32>"
+    lvl_ty = f"tensor<{nr}x{cols}xi{8 if s <= 127 else 16}>"
+    return {
+        "one_dense_f32": res.count(f32_ty) == 1,
+        "quantized_stream": lvl_ty in res,
+        "outputs": res,
+    }
+
+
 def packed_vs_dense(fast: bool = True):
     """us/call of the fused compress-and-pack pipeline vs the unfused
     (dense-compress, then pack, then h-update) one, plus exact wire bytes."""
@@ -130,6 +213,13 @@ def packed_vs_dense(fast: bool = True):
                      "us_per_call": "",
                      "derived": f"one_hbm_pass={rep['fused_one_hbm_pass']} "
                                 f"unfused_dense_output={rep['unfused_dense_output']}"})
+        rk = randk_update_hlo_report()
+        rows.append({"name": "wire/randk_update_hlo", "us_per_call": "",
+                     "derived": f"h_out_only={rk['h_out_only']}"})
+        qs = qsgd_pack_hlo_report()
+        rows.append({"name": "wire/qsgd_pack_hlo", "us_per_call": "",
+                     "derived": f"one_dense_f32={qs['one_dense_f32']} "
+                                f"quantized_stream={qs['quantized_stream']}"})
     except Exception as e:  # jax.export unavailable on some versions
         rows.append({"name": "wire/fused_pack_hlo", "us_per_call": "",
                      "derived": f"skipped ({type(e).__name__})"})

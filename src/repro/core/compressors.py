@@ -15,6 +15,10 @@ Certified constants (all proved in the paper or the cited literature):
   sign (norm)  : B(1/d) worst case -> eta = sqrt(1 - 1/d),        omega = 0
   natural      : U(1/8)            -> eta = 0,                    omega = 1/8
   qsgd (s lvls): U(min(d/s^2, sqrt(d)/s))
+
+Every compressor also declares a wire codec (``codec`` -> a LeafCodec from
+repro.distributed.wire) with an exact bits-per-round payload layout; the
+rendered table lives in docs/compressor_zoo.md.
 """
 
 from __future__ import annotations
@@ -39,6 +43,15 @@ def _topk_mask(xf: Array, k: int) -> Array:
     """0/1 mask of the k largest-|.| entries of the flat vector xf."""
     _, idx = jax.lax.top_k(jnp.abs(xf), k)
     return jnp.zeros_like(xf).at[idx].set(1.0)
+
+
+def _flat_sparse_codec(compressor, shape, k: int, wire_dtype: str):
+    # lazy import: repro.distributed.wire is layout-only (imports nothing
+    # from repro.core), but its package __init__ pulls in aggregate -> efbv,
+    # which would cycle at module-import time
+    from repro.distributed import wire
+    return wire.FlatSparse(shape=tuple(shape), size=int(math.prod(shape)),
+                           k=k, selector=compressor, val_dtype=wire_dtype)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +94,9 @@ class TopK(Compressor):
     def wire(self, d):
         return Wire(words=2 * self.k, sparse=True)  # (index, value) pairs
 
+    def codec(self, shape, *, wire_dtype="float32"):
+        return _flat_sparse_codec(self, shape, self.k, wire_dtype)
+
     def encode(self, key, x):
         xf = _flat(x)
         vals, idx = jax.lax.top_k(jnp.abs(xf), self.k)
@@ -112,6 +128,12 @@ class RandK(Compressor):
 
     def wire(self, d):
         return Wire(words=2 * self.k, sparse=True)
+
+    def codec(self, shape, *, wire_dtype="float32"):
+        from repro.distributed import wire
+        return wire.RandKSparse(shape=tuple(shape),
+                                size=int(math.prod(shape)), k=self.k,
+                                selector=self, val_dtype=wire_dtype)
 
     def encode(self, key, x):
         xf = _flat(x)
@@ -146,6 +168,15 @@ class ScaledRandK(Compressor):
     def wire(self, d):
         return Wire(words=2 * self.k, sparse=True)
 
+    def codec(self, shape, *, wire_dtype="float32"):
+        return _flat_sparse_codec(self, shape, self.k, wire_dtype)
+
+    def encode(self, key, x):
+        xf = _flat(x)
+        idx = jax.random.choice(key, xf.shape[0], shape=(self.k,),
+                                replace=False)
+        return xf[idx], idx
+
 
 @dataclasses.dataclass(frozen=True)
 class CompKK(Compressor):
@@ -179,6 +210,9 @@ class CompKK(Compressor):
 
     def wire(self, d):
         return Wire(words=2 * self.k, sparse=True)
+
+    def codec(self, shape, *, wire_dtype="float32"):
+        return _flat_sparse_codec(self, shape, self.k, wire_dtype)
 
     def encode(self, key, x):
         xf = _flat(x)
@@ -219,6 +253,22 @@ class MixKK(Compressor):
     def wire(self, d):
         return Wire(words=2 * (self.k + self.kp), sparse=True)
 
+    def codec(self, shape, *, wire_dtype="float32"):
+        return _flat_sparse_codec(self, shape, self.k + self.kp, wire_dtype)
+
+    def encode(self, key, x):
+        """k top indices then k' random ones -- disjoint by construction
+        (excluded scores are -1 < uniform's [0, 1) range), so the codec's
+        scatter-add reproduces the dense mask output exactly."""
+        xf = _flat(x)
+        _, top_idx = jax.lax.top_k(jnp.abs(xf), self.k)
+        top_mask = jnp.zeros_like(xf).at[top_idx].set(1.0)
+        scores = jax.random.uniform(key, xf.shape)
+        scores = jnp.where(top_mask > 0, -1.0, scores)
+        _, rnd_idx = jax.lax.top_k(scores, self.kp)
+        idx = jnp.concatenate([top_idx, rnd_idx])
+        return xf[idx], idx
+
 
 @dataclasses.dataclass(frozen=True)
 class BlockTopK(Compressor):
@@ -258,6 +308,12 @@ class BlockTopK(Compressor):
         nb = -(-d // self.block)
         return Wire(words=2 * nb * self.kb, sparse=True)
 
+    def codec(self, shape, *, wire_dtype="float32"):
+        from repro.distributed import wire
+        return wire.LeafWire(shape=tuple(shape), size=int(math.prod(shape)),
+                             block=self.block, kb=self.kb,
+                             val_dtype=wire_dtype)
+
     def _leaf_wire(self, d: int):
         # import inside the method: repro.distributed.wire is layout-only
         # (imports nothing from repro.core), but its package __init__ pulls
@@ -286,7 +342,13 @@ class BlockTopK(Compressor):
 
 @dataclasses.dataclass(frozen=True)
 class SignNorm(Compressor):
-    """L1-norm-scaled sign: C(x) = (||x||_1 / d) * sign(x); B(1/d) worst case."""
+    """L1-norm-scaled sign: C(x) = (||x||_1 / d) * sgn(x); B(1/d) worst case.
+
+    sgn maps 0 -> +1 (not jnp.sign's 0): every coordinate is exactly
+    +-scale, so the wire codec is one scale + a 1-bit-per-coordinate sign
+    bitmap with a lossless decode.  The B(1/d) certificate is unchanged:
+    ||C(x)||^2 = scale^2 d and <C(x), x> = scale ||x||_1 either way.
+    """
 
     def eta(self, d):
         return math.sqrt(max(0.0, 1.0 - 1.0 / d))
@@ -300,10 +362,14 @@ class SignNorm(Compressor):
     def __call__(self, key, x):
         xf = _flat(x)
         scale = jnp.sum(jnp.abs(xf)) / xf.shape[0]
-        return (scale * jnp.sign(xf)).reshape(x.shape)
+        return (scale * jnp.where(xf < 0, -1.0, 1.0)).reshape(x.shape)
 
     def wire(self, d):
         return Wire(words=1 + (d + 31) // 32, sparse=False)  # norm + bitmap
+
+    def codec(self, shape, *, wire_dtype="float32"):
+        from repro.distributed import wire
+        return wire.SignPack(shape=tuple(shape), size=int(math.prod(shape)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -323,14 +389,23 @@ class Natural(Compressor):
         safe = jnp.where(a > 0, a, 1.0)
         e = jnp.floor(jnp.log2(safe))
         lo = jnp.exp2(e)
-        p = safe / lo - 1.0  # in [0,1): prob of rounding up to 2*lo
+        p = safe / lo - 1.0  # in [0,1): prob of rounding up to 2**(e+1)
         up = jax.random.uniform(key, xf.shape) < p
-        mag = jnp.where(up, 2.0 * lo, lo)
+        # exp2 of the selected integer exponent (== 2*lo or lo exactly):
+        # the same expression the wire codec decodes, so the int8 exponent
+        # stream is lossless by construction
+        mag = jnp.exp2(e + up.astype(jnp.float32))
         out = jnp.where(a > 0, jnp.sign(xf) * mag, 0.0)
         return out.reshape(x.shape)
 
     def wire(self, d):
-        return Wire(words=(9 * d + 31) // 32, sparse=False)  # 9 bits/coord
+        # exact codec accounting: int8 exponent stream + uint32 sign bitmap
+        return Wire(words=(8 * d + 31) // 32 + (d + 31) // 32, sparse=False)
+
+    def codec(self, shape, *, wire_dtype="float32"):
+        from repro.distributed import wire
+        return wire.NaturalPack(shape=tuple(shape),
+                                size=int(math.prod(shape)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -356,13 +431,26 @@ class QSGD(Compressor):
         low = jnp.floor(level)
         p = level - low
         up = jax.random.uniform(key, xf.shape) < p
-        q = (low + up.astype(xf.dtype)) / self.s
+        # multiply by the f32 reciprocal rather than divide: XLA's jit
+        # rewrites division-by-constant inexactly, so a divide here could
+        # never be reproduced bit-for-bit by the fused wire kernel.  For
+        # power-of-two s the two are identical; otherwise this adds a ~2^-24
+        # relative bias, far below the omega certificate's slack.
+        q = (low + up.astype(xf.dtype)) * (1.0 / self.s)
         out = jnp.where(norm > 0, norm * jnp.sign(xf) * q, 0.0)
         return out.reshape(x.shape)
 
     def wire(self, d):
-        bits = max(1, math.ceil(math.log2(2 * self.s + 1)))
+        # exact codec accounting: f32 norm + int8/int16 level stream.  (The
+        # entropy-coded bound of Alistarh et al. is log2(2s+1) bits/coord;
+        # the fixed-width stream trades ~37% of that for O(1) decode.)
+        bits = 8 if self.s <= 127 else 16
         return Wire(words=1 + (bits * d + 31) // 32, sparse=False)
+
+    def codec(self, shape, *, wire_dtype="float32"):
+        from repro.distributed import wire
+        return wire.QsgdQuant(shape=tuple(shape), size=int(math.prod(shape)),
+                              s=self.s)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -390,6 +478,10 @@ class FracTopK(Compressor):
 
     def wire(self, d):
         return Wire(words=2 * self._k(d), sparse=True)
+
+    def codec(self, shape, *, wire_dtype="float32"):
+        return _flat_sparse_codec(self, shape,
+                                  self._k(int(math.prod(shape))), wire_dtype)
 
     def encode(self, key, x):
         xf = _flat(x)
@@ -428,6 +520,11 @@ class FracCompKK(Compressor):
     def wire(self, d):
         k, _ = self._kk(d)
         return Wire(words=2 * k, sparse=True)
+
+    def codec(self, shape, *, wire_dtype="float32"):
+        return _flat_sparse_codec(self, shape,
+                                  self._kk(int(math.prod(shape)))[0],
+                                  wire_dtype)
 
     def encode(self, key, x):
         return CompKK(*self._kk(x.size)).encode(key, _flat(x))

@@ -69,6 +69,21 @@ class Compressor:
         """Words-on-the-wire for one message (default: dense)."""
         return Wire(words=d, sparse=False)
 
+    def codec(self, shape: Tuple[int, ...], *, wire_dtype: str = "float32"):
+        """The wire codec for one leaf of this shape (repro.distributed.wire).
+
+        Every compressor has one -- subclasses declare their native layout
+        (block-sparse, flat-sparse, bit-packed sign, quantized stream); the
+        default is the honest dense value stream.  ``wire_dtype`` is the
+        orthogonal value-precision knob (ignored by codecs whose payload
+        carries no raw values).
+        """
+        import math as _math
+        from repro.distributed import wire  # lazy: wire imports no core
+        return wire.DensePack(shape=tuple(shape),
+                              size=int(_math.prod(shape)),
+                              compressor=self, val_dtype=wire_dtype)
+
     # sparse encode/decode (optional; top-k family overrides)
     def encode(self, key: Optional[Array], x: Array):
         raise NotImplementedError(f"{type(self).__name__} has no sparse encoding")

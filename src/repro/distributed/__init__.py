@@ -5,6 +5,8 @@ from repro.distributed.aggregate import (  # noqa: F401
     compress_local, combine_global, efbv_aggregate_reference, AGG_MODES,
 )
 from repro.distributed.wire import (  # noqa: F401
-    LeafWire, WireFormat, format_for, fused_pack, pack_oracle, payload_bytes,
-    scatter_add, unpack,
+    DensePack, FlatSparse, LeafCodec, LeafWire, NaturalPack, QsgdQuant,
+    RandKSparse, SignPack, WireFormat, codec_of, encode_update, format_for,
+    fused_pack, pack_bits, pack_oracle, payload_bytes, scatter_add, unpack,
+    unpack_bits,
 )

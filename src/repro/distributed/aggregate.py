@@ -14,10 +14,12 @@ Two-phase structure (sound under shard_map's static replication checker):
 
     dense_psum       -> all-reduce of the dense delta (d words / worker);
                         paper-faithful semantics, no byte savings.
-    sparse_allgather -> all-gather of the fixed-size (values, indices)
-                        payload (2k words / worker) + local scatter-add:
-                        the TPU-native realization of the paper's
-                        "bits per node proportional to t*k" accounting.
+    sparse_allgather -> all-gather of the compressor's wire-codec payload
+                        (block/flat (values, indices), bit-packed signs,
+                        quantized streams -- see repro.distributed.wire) +
+                        local decode-sum: the TPU-native realization of the
+                        paper's "bits per node proportional to t*k"
+                        accounting, for EVERY compressor in the zoo.
 
 Both modes are bit-identical given the same compressor draws (tests assert
 this): the wire format changes, Algorithm 1 does not.
@@ -48,41 +50,37 @@ def compress_local(
     h_local: PyTree,
     *,
     mode: str = "dense_psum",
+    wire_dtype: str = "float32",
 ) -> Tuple[PyTree, PyTree]:
     """d_i = C_i(grad_i - h_i); h_i <- h_i + lam d_i.
 
     Returns (message, h_local_new) where message is either the dense d_i
-    (mode=dense_psum) or the per-leaf (values, indices) payload
-    (mode=sparse_allgather).
+    (mode=dense_psum) or the per-leaf wire-codec payload
+    (mode=sparse_allgather; every compressor declares one -- see
+    repro.distributed.wire).
     """
     if mode not in AGG_MODES:
         raise ValueError(f"mode {mode!r} not in {AGG_MODES}")
 
     leaves, treedef = jax.tree.flatten(grads)
     h_leaves = treedef.flatten_up_to(h_local)
-    fmt = wire.format_for(algo.compressor, grads) \
+    fmt = wire.format_for(algo.compressor, grads, wire_dtype=wire_dtype) \
         if mode == "sparse_allgather" else None
     msgs, h_new_leaves = [], []
     for j, (g_leaf, h_leaf) in enumerate(zip(leaves, h_leaves)):
         kj = None if key is None else jax.random.fold_in(key, j)
         if fmt is not None:
-            # fused compress-and-pack: the kernel emits the payload AND
-            # EFBV.worker_update (h <- h + lam d) in one HBM pass -- the
-            # dense d_i is never materialized (block-top-k is deterministic,
-            # so kj is unused).
-            (vals, idx), h_leaf_new = wire.fused_pack(
-                fmt.leaves[j], g_leaf, h_leaf, algo.lam)
-            msgs.append((vals, idx))
+            # fused compress-and-pack through the leaf's codec: emits the
+            # payload AND EFBV.worker_update (h <- h + lam d) in one pass;
+            # codecs with a Pallas kernel (block-top-k, rand-k, QSGD) never
+            # materialize the dense d_i in HBM.
+            payload, h_leaf_new = wire.encode_update(
+                fmt.leaves[j], kj, g_leaf, h_leaf, algo.lam)
+            msgs.append(payload)
         else:
             delta = g_leaf - h_leaf
-            if mode == "sparse_allgather":
-                vals, idx = algo.compressor.encode(kj, delta)
-                d_leaf = algo.compressor.decode(
-                    (vals, idx), delta.size).reshape(delta.shape)
-                msgs.append((vals, idx))
-            else:
-                d_leaf = algo.compressor(kj, delta)
-                msgs.append(d_leaf)
+            d_leaf = algo.compressor(kj, delta)
+            msgs.append(d_leaf)
             h_leaf_new = algo.worker_update(h_leaf, d_leaf)
         h_new_leaves.append(h_leaf_new)
     h_local_new = jax.tree.unflatten(treedef, h_new_leaves)
@@ -101,6 +99,7 @@ def combine_global(
     *,
     n_workers: int,
     mode: str = "dense_psum",
+    wire_dtype: str = "float32",
 ) -> Tuple[PyTree, PyTree]:
     """d_bar = (1/n) sum_i d_i; g = h_avg + nu d_bar; h_avg <- h_avg + lam d_bar.
 
@@ -111,12 +110,14 @@ def combine_global(
     if mode == "dense_psum":
         d_bar = jax.tree.map(lambda d: jnp.mean(d, axis=0), message_stacked)
     else:
+        fmt = wire.format_for(algo.compressor, h_avg, wire_dtype=wire_dtype)
         d_bar_leaves = []
-        for (vals, idx), ref in zip(message_stacked, ref_leaves):
-            # vals/idx carry a leading worker axis; the gather of the payload
-            # is the wire, the scatter-add is local (block-top-k's decode
-            # delegates to wire.scatter_add -- one layout, one combine).
-            dense = algo.compressor.decode((vals, idx), ref.size)
+        for payload, codec, ref in zip(message_stacked, fmt.leaves,
+                                       ref_leaves):
+            # payload components carry a leading worker axis; the gather of
+            # the payload is the wire, the decode-sum is local (one codec,
+            # one layout, one combine for every compressor).
+            dense = codec.decode_sum(payload)
             d_bar_leaves.append((dense / n_workers).reshape(ref.shape))
         d_bar = jax.tree.unflatten(treedef, d_bar_leaves)
     g, h_avg_new = algo.master_update(h_avg, d_bar)
@@ -135,10 +136,13 @@ def efbv_aggregate_reference(
     h_avg: PyTree,
     *,
     mode: str = "dense_psum",
+    wire_dtype: str = "float32",
 ) -> Tuple[PyTree, PyTree, PyTree]:
     n = jax.tree.leaves(grads_stacked)[0].shape[0]
     msg, h_new = jax.vmap(
-        lambda k, g, h: compress_local(algo, k, g, h, mode=mode)
+        lambda k, g, h: compress_local(algo, k, g, h, mode=mode,
+                                       wire_dtype=wire_dtype)
     )(keys, grads_stacked, h_stacked)
-    g, h_avg_new = combine_global(algo, msg, h_avg, n_workers=n, mode=mode)
+    g, h_avg_new = combine_global(algo, msg, h_avg, n_workers=n, mode=mode,
+                                  wire_dtype=wire_dtype)
     return g, h_new, h_avg_new

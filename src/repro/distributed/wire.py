@@ -1,30 +1,34 @@
-"""The sparse wire format: payload layout, exact bit accounting, and the
-pack/unpack/scatter-add helpers shared by the reference and shard_map paths.
+"""Wire codecs: payload layouts, exact bit accounting, and the pack /
+unpack / scatter-add helpers shared by the reference and shard_map paths.
 
 The paper's accounting ("number of bits sent by each node ... proportional to
 t*k", Sect. 6) only holds if the bytes that cross the wire are the payload,
 not a dense mask-compressed tensor.  This module is the single source of
-truth for what that payload IS:
+truth for what that payload IS, for EVERY compressor in the C(eta, omega)
+zoo -- each compressor declares a :class:`LeafCodec` via ``Compressor.codec``
+and :func:`format_for` assembles the per-pytree :class:`WireFormat`:
 
-  per leaf (d elements, block size b, kb kept per block, nb = ceil(d/b)):
+  codec           compressors                       payload (one leaf, d elems)
+  --------------  --------------------------------  ---------------------------
+  LeafWire        block-top-k                       (values, local idx) (nb, kb)
+  FlatSparse      top-k, rand-k, scaled-rand-k,     (values, global idx) (k,)
+                  comp-(k,k'), mix-(k,k'), frac-*
+  SignPack        sign (L1-norm scaled)             f32 scale + uint32 bitmap
+  QsgdQuant       QSGD(s)                           f32 norm + int8/16 levels
+  NaturalPack     natural compression               int8 exponents + sign bitmap
+  DensePack       identity, m-nice                  raw values (wire dtype)
 
-      values   (nb, kb)  val_dtype   -- kept signed deltas, |.|-descending
-      indices  (nb, kb)  int32       -- block-LOCAL column indices
+``val_dtype`` (float32 / bfloat16 / float16) is an orthogonal knob on the
+value-carrying codecs (sparse values, dense streams); scales, norms, signs
+and exponents are dtype-fixed.  ``payload_bits`` is EXACT for every codec:
+the wire tests assert ``8 * payload_nbytes == payload_bits``, equality, not
+proportionality.
 
-  Local indices keep every index < b (no int32 overflow on 4e10-element
-  stacked expert tensors) and make the payload layout independent of the
-  leaf's global offset, so the same scatter-add works for a single worker's
-  message and for the worker-stacked (n, nb, kb) all-gather result.
-
-Three producers emit this layout and are pinned bit-identical by the
-differential harness (tests/harness.py):
-
-  * ``pack_oracle``       -- pure jnp (jax.lax.top_k), the spec;
-  * kernels/pack.py       -- fused Pallas kernel, interpret mode (CPU tests);
-  * kernels/pack.py       -- same kernel, compiled (TPU).
-
-``bits_per_round`` is EXACT: it must equal 8 * (payload nbytes) -- the wire
-tests assert equality, not proportionality.
+Three producers of the block-sparse layout are pinned bit-identical by the
+differential harness (tests/harness.py) -- jnp oracle, fused Pallas kernel in
+interpret mode, and the same kernel compiled on TPU -- and the rand-k and
+QSGD codecs have their own fused kernels (kernels/pack.py) pinned the same
+way.  See docs/wire_format.md and docs/compressor_zoo.md.
 """
 
 from __future__ import annotations
@@ -39,10 +43,15 @@ import jax.numpy as jnp
 Array = jax.Array
 PyTree = Any
 
-# kernel dispatch for the fused pack: 'auto' uses the compiled Pallas kernel
-# on TPU and the jnp oracle elsewhere; 'interpret' forces the Pallas kernel
-# in interpret mode (slow -- differential testing only); 'oracle' forces jnp.
+# kernel dispatch for the fused pack paths: 'auto' uses the compiled Pallas
+# kernel on TPU and the jnp oracle elsewhere; 'interpret' forces the Pallas
+# kernel in interpret mode (slow -- differential testing only); 'oracle'
+# forces jnp.  Codecs without a fused kernel always take the oracle under
+# 'auto' and reject an *explicit* kernel request.
 KERNEL_MODES = ("auto", "pallas", "interpret", "oracle")
+
+VAL_DTYPES = ("float32", "bfloat16", "float16")
+_VAL_BITS = {"float32": 32, "bfloat16": 16, "float16": 16}
 
 
 def _kernel_mode(kernel: Optional[str]) -> str:
@@ -54,18 +63,127 @@ def _kernel_mode(kernel: Optional[str]) -> str:
     return mode
 
 
+def _val_bits(val_dtype: str) -> int:
+    if val_dtype not in _VAL_BITS:
+        raise ValueError(f"wire value dtype {val_dtype!r} not in {VAL_DTYPES}")
+    return _VAL_BITS[val_dtype]
+
+
 # ---------------------------------------------------------------------------
-# format metadata
+# bit packing helpers (sign bitmaps)
+# ---------------------------------------------------------------------------
+
+def bitmap_words(nbits: int) -> int:
+    return -(-nbits // 32)
+
+
+def pack_bits(bits: Array) -> Array:
+    """(m,) boolean -> (ceil(m/32),) uint32, LSB-first within each word."""
+    m = bits.shape[0]
+    w = bitmap_words(m)
+    b = jnp.pad(bits.astype(jnp.uint32), (0, 32 * w - m)).reshape(w, 32)
+    return jnp.sum(b << jnp.arange(32, dtype=jnp.uint32), axis=1,
+                   dtype=jnp.uint32)
+
+
+def unpack_bits(words: Array, m: int) -> Array:
+    """(w,) uint32 -> (m,) boolean, inverse of :func:`pack_bits`."""
+    b = (words[:, None] >> jnp.arange(32, dtype=jnp.uint32)) & jnp.uint32(1)
+    return b.reshape(-1)[:m].astype(jnp.bool_)
+
+
+# ---------------------------------------------------------------------------
+# codec base class
+# ---------------------------------------------------------------------------
+
+class LeafCodec:
+    """Wire codec of one pytree leaf: how a compressed message is laid out
+    on the wire, with exact bit accounting.
+
+    Subclasses are frozen dataclasses carrying at least ``shape`` and
+    ``size``.  A payload is a tuple of arrays; ``encode`` consumes the flat
+    f32 innovation ``delta`` (compress-and-pack in one step, losslessly
+    representing the compressor's dense output), ``decode`` reproduces that
+    dense output bit-for-bit (the property tests assert equality, not
+    closeness), and ``decode_sum`` additionally accepts worker-stacked
+    payloads (leading axis n) and returns the scatter-SUM -- the local
+    combine of the sparse_allgather collective.
+    """
+
+    kind: str = "abstract"
+    #: ndim of the first payload component in a single (un-stacked) message
+    MSG_NDIM: int = 1
+
+    # -- accounting ---------------------------------------------------------
+    @property
+    def payload_bits(self) -> int:
+        """Exact bits of one worker's message for this leaf."""
+        raise NotImplementedError
+
+    @property
+    def has_kernel(self) -> bool:
+        """True if a fused Pallas compress-and-pack kernel exists."""
+        return False
+
+    # -- pack / unpack ------------------------------------------------------
+    def encode(self, key: Optional[Array], delta: Array) -> Tuple[Array, ...]:
+        """Flat f32 innovation -> payload tuple."""
+        raise NotImplementedError
+
+    def decode(self, payload: Sequence[Array]) -> Array:
+        """One payload -> dense flat f32 (size,) vector, bit-equal to the
+        dense compressor output."""
+        raise NotImplementedError
+
+    def decode_sum(self, payload: Sequence[Array]) -> Array:
+        """Payload (possibly worker-stacked on a leading axis) -> dense flat
+        (size,) sum over workers (divide by n for the master mean)."""
+        if jax.tree.leaves(payload)[0].ndim > self.MSG_NDIM:
+            return jnp.sum(jax.vmap(self.decode)(tuple(payload)), axis=0)
+        return self.decode(payload)
+
+    # -- fused worker update ------------------------------------------------
+    def encode_update(self, key: Optional[Array], g: Array, h: Array,
+                      lam: float, *, kernel: Optional[str] = None
+                      ) -> Tuple[Tuple[Array, ...], Array]:
+        """(payload, h') with d = C(g - h) packed and h' = h + lam d.
+
+        The base implementation is the jnp oracle (encode, scatter back,
+        update); codecs with a fused Pallas kernel override it and stay
+        bit-identical to this oracle.
+        """
+        mode = _kernel_mode(kernel)
+        if mode in ("pallas", "interpret") and kernel in ("pallas", "interpret"):
+            raise ValueError(
+                f"{type(self).__name__} has no fused kernel; use kernel="
+                f"'oracle' or 'auto'")
+        delta = g.astype(jnp.float32) - h.astype(jnp.float32)
+        payload = self.encode(key, delta.reshape(-1))
+        d = self.decode(payload).reshape(g.shape)
+        h_new = (h.astype(jnp.float32) + float(lam) * d).astype(h.dtype)
+        return payload, h_new
+
+
+# ---------------------------------------------------------------------------
+# block-sparse codec (block-top-k; the PR-1 format)
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
-class LeafWire:
-    """Wire layout of one pytree leaf."""
+class LeafWire(LeafCodec):
+    """Block-sparse layout: per-block (values, block-LOCAL indices), shapes
+    (nb, kb) each.  Local indices keep every index < block (no int32
+    overflow on 4e10-element stacked expert tensors) and make the payload
+    independent of the leaf's global offset, so the same scatter-add decodes
+    one message and the worker-stacked (n, nb, kb) all-gather result."""
 
     shape: Tuple[int, ...]
     size: int
     block: int
     kb: int
+    val_dtype: str = "float32"
+
+    kind = "block_sparse"
+    MSG_NDIM = 2
 
     @property
     def nb(self) -> int:
@@ -73,20 +191,302 @@ class LeafWire:
 
     @property
     def payload_bits(self) -> int:
-        """Exact bits of one worker's message for this leaf: f32 values +
+        """Exact bits of one worker's message for this leaf: values +
         int32 local indices, (nb, kb) each."""
-        return self.nb * self.kb * (32 + 32)
+        return self.nb * self.kb * (_val_bits(self.val_dtype) + 32)
 
+    @property
+    def has_kernel(self) -> bool:
+        # non-f32 value payloads take the oracle: the control variate must
+        # track the DECODED payload (what the master adds), and the fused
+        # kernel updates h with the pre-cast f32 values
+        return self.block % 128 == 0 and self.val_dtype == "float32"
+
+    def encode(self, key, delta):
+        vals, idx = pack_oracle(self, delta)
+        return vals.astype(jnp.dtype(self.val_dtype)), idx
+
+    def decode(self, payload):
+        vals, idx = payload
+        return scatter_add(self, vals.astype(jnp.float32), idx)
+
+    decode_sum = decode  # scatter_add natively handles the stacked form
+
+    def encode_update(self, key, g, h, lam, *, kernel=None):
+        # the fused path emits payload values in g's dtype and updates h with
+        # the f32 scatter; both equal the decoded payload only for f32 wires.
+        # kernel= is forwarded so an explicit kernel request on a non-f32
+        # wire errors (base class) instead of silently taking the oracle.
+        if self.val_dtype != "float32" or g.dtype != jnp.float32:
+            return LeafCodec.encode_update(self, key, g, h, lam,
+                                           kernel=kernel)
+        return fused_pack(self, g, h, lam, kernel=kernel)
+
+
+# ---------------------------------------------------------------------------
+# flat-sparse codec (top-k / rand-k / comp-(k,k') / mix-(k,k') families)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FlatSparse(LeafCodec):
+    """(values, global int32 indices), (k,) each.  ``selector`` is the
+    compressor whose ``encode`` picks the k kept coordinates (and applies
+    any unbiasedness scaling); it is a frozen dataclass, so the codec stays
+    hashable/jit-static.  Global flat indices require size < 2**31 -- the
+    block-sparse codec is the one that scales past int32 leaves."""
+
+    shape: Tuple[int, ...]
+    size: int
+    k: int
+    selector: Any
+    val_dtype: str = "float32"
+
+    kind = "flat_sparse"
+    MSG_NDIM = 1
+
+    @property
+    def payload_bits(self) -> int:
+        return self.k * (_val_bits(self.val_dtype) + 32)
+
+    def encode(self, key, delta):
+        vals, idx = self.selector.encode(key, delta)
+        return vals.astype(jnp.dtype(self.val_dtype)), idx.astype(jnp.int32)
+
+    def decode(self, payload):
+        vals, idx = payload
+        return jnp.zeros((self.size,), jnp.float32).at[idx.reshape(-1)].add(
+            vals.astype(jnp.float32).reshape(-1))
+
+    # the flat scatter-add natively handles the worker-stacked (n, k) form:
+    # one (size,) scatter of n*k pairs, never an (n, size) dense intermediate
+    decode_sum = decode
+
+
+@dataclasses.dataclass(frozen=True)
+class RandKSparse(FlatSparse):
+    """FlatSparse specialised to rand-k: index selection is data-independent,
+    which is what makes the fused Pallas h-update kernel possible (the k
+    selected positions are drawn outside, the kernel does the dense-free
+    h <- h + lam d pass, and the payload values are an O(k) gather)."""
+
+    kind = "randk_sparse"
+
+    @property
+    def has_kernel(self) -> bool:
+        # the kernel compares f32 linear positions (exact below 2**24) and
+        # updates h with the unquantized f32 values (== the decoded payload
+        # only for f32 wires)
+        return self.size < 2 ** 24 and self.val_dtype == "float32"
+
+    def encode_update(self, key, g, h, lam, *, kernel=None):
+        mode = _kernel_mode(kernel)
+        if mode in ("pallas", "interpret") and not self.has_kernel:
+            if kernel in ("pallas", "interpret"):
+                raise ValueError(
+                    "rand-k fused kernel requires size < 2**24 and a float32"
+                    f" wire, got size={self.size} val_dtype={self.val_dtype}")
+            mode = "oracle"
+        if mode == "oracle":
+            return LeafCodec.encode_update(self, key, g, h, lam,
+                                           kernel="oracle")
+        from repro.kernels import ops
+        gf, hf = g.reshape(-1), h.reshape(-1)
+        scale = self.size / self.k
+        idx = jax.random.choice(key, self.size, shape=(self.k,), replace=False)
+        # gather-of-difference == difference-of-gathers, bitwise; the dense
+        # delta is never materialized (the kernel recomputes it in VMEM)
+        vals = (gf[idx].astype(jnp.float32)
+                - hf[idx].astype(jnp.float32)) * scale
+        h_new = ops.randk_update(g, h, idx.astype(jnp.int32), float(lam),
+                                 float(scale),
+                                 interpret=(mode == "interpret"))
+        return ((vals.astype(jnp.dtype(self.val_dtype)),
+                 idx.astype(jnp.int32)), h_new)
+
+
+# ---------------------------------------------------------------------------
+# 1-bit sign codec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SignPack(LeafCodec):
+    """L1-norm-scaled sign: one f32 scale + an LSB-first uint32 sign bitmap
+    (bit set <=> coordinate is negative).  32 + 32*ceil(d/32) bits, i.e.
+    ~1 bit per coordinate."""
+
+    shape: Tuple[int, ...]
+    size: int
+
+    kind = "sign_pack"
+    MSG_NDIM = 1
+
+    @property
+    def payload_bits(self) -> int:
+        return 32 + 32 * bitmap_words(self.size)
+
+    def encode(self, key, delta):
+        scale = jnp.sum(jnp.abs(delta)) / delta.shape[0]
+        return scale.reshape(1).astype(jnp.float32), pack_bits(delta < 0)
+
+    def decode(self, payload):
+        scale, words = payload
+        sgn = jnp.where(unpack_bits(words, self.size), -1.0, 1.0)
+        return scale[0] * sgn
+
+
+# ---------------------------------------------------------------------------
+# QSGD quantized codec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QsgdQuant(LeafCodec):
+    """QSGD(s): one f32 L2 norm + a signed integer level stream, level in
+    [-s, s] (int8 when s <= 127, int16 otherwise).  32 + 8*d (or 16*d) bits
+    -- <= 1/3 of the fp32 dense tensor, measured, not estimated."""
+
+    shape: Tuple[int, ...]
+    size: int
+    s: int
+
+    kind = "qsgd_quant"
+    MSG_NDIM = 1
+
+    @property
+    def level_dtype(self):
+        return jnp.int8 if self.s <= 127 else jnp.int16
+
+    @property
+    def payload_bits(self) -> int:
+        return 32 + self.size * (8 if self.s <= 127 else 16)
+
+    @property
+    def has_kernel(self) -> bool:
+        return True
+
+    def _levels(self, key, delta, norm):
+        """Replicates QSGD.__call__'s stochastic rounding draw exactly."""
+        safe = jnp.where(norm > 0, norm, 1.0)
+        level = jnp.abs(delta) / safe * self.s
+        low = jnp.floor(level)
+        up = jax.random.uniform(key, delta.shape) < (level - low)
+        return jnp.sign(delta) * (low + up.astype(jnp.float32))
+
+    def encode(self, key, delta):
+        norm = jnp.linalg.norm(delta)
+        lv = self._levels(key, delta, norm)
+        return norm.reshape(1).astype(jnp.float32), lv.astype(self.level_dtype)
+
+    def decode(self, payload):
+        norm, lv = payload
+        lf = lv.astype(jnp.float32)
+        # same op chain as QSGD.__call__: (norm * sign) * (level * 1/s).
+        # The vector predicate (not the compressor's scalar norm > 0) only
+        # changes zero-level lanes from +-0 to +0 -- value-equal -- and is
+        # what lets the fused kernel's jitted tail avoid FMA contraction.
+        return jnp.where(lf != 0,
+                         (norm[0] * jnp.sign(lf))
+                         * (jnp.abs(lf) * (1.0 / self.s)),
+                         0.0)
+
+    def encode_update(self, key, g, h, lam, *, kernel=None):
+        mode = _kernel_mode(kernel)
+        if mode == "oracle":
+            return LeafCodec.encode_update(self, key, g, h, lam,
+                                           kernel="oracle")
+        from repro.kernels import ops
+        norm = jnp.linalg.norm(g.reshape(-1).astype(jnp.float32)
+                               - h.reshape(-1).astype(jnp.float32))
+        u = jax.random.uniform(key, (self.size,))
+        levels, h_new = ops.qsgd_pack_update(
+            g, h, u, norm, float(lam), self.s,
+            interpret=(mode == "interpret"))
+        return (norm.reshape(1).astype(jnp.float32), levels), h_new
+
+
+# ---------------------------------------------------------------------------
+# natural-compression codec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NaturalPack(LeafCodec):
+    """Natural compression: int8 power-of-two exponent stream (sentinel -128
+    for exact zeros) + uint32 sign bitmap -- the paper's ~9 bits/coordinate.
+    Exponents are clipped to [-126, 127]: the codec is exact on the normal
+    fp32 range |x| in [2^-126, 2^126]; subnormal magnitudes (never produced
+    by training-scale gradients) would clip."""
+
+    shape: Tuple[int, ...]
+    size: int
+
+    kind = "natural_pack"
+    MSG_NDIM = 1
+
+    @property
+    def payload_bits(self) -> int:
+        return 8 * self.size + 32 * bitmap_words(self.size)
+
+    def encode(self, key, delta):
+        a = jnp.abs(delta)
+        safe = jnp.where(a > 0, a, 1.0)
+        e = jnp.floor(jnp.log2(safe))
+        lo = jnp.exp2(e)
+        up = jax.random.uniform(key, delta.shape) < (safe / lo - 1.0)
+        es = jnp.clip(e + up.astype(jnp.float32), -126.0, 127.0)
+        exps = jnp.where(a > 0, es, -128.0).astype(jnp.int8)
+        return exps, pack_bits(delta < 0)
+
+    def decode(self, payload):
+        exps, words = payload
+        mag = jnp.exp2(exps.astype(jnp.float32))
+        sgn = jnp.where(unpack_bits(words, self.size), -1.0, 1.0)
+        return jnp.where(exps == -128, 0.0, sgn * mag)
+
+
+# ---------------------------------------------------------------------------
+# dense codec (identity / m-nice / fallback)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DensePack(LeafCodec):
+    """Raw value stream in the wire dtype.  Used where the message is
+    genuinely dense (identity, m-nice participation scaling); the exact
+    accounting is size * value_bits -- honest, if unimpressive."""
+
+    shape: Tuple[int, ...]
+    size: int
+    compressor: Any
+    val_dtype: str = "float32"
+
+    kind = "dense_pack"
+    MSG_NDIM = 1
+
+    @property
+    def payload_bits(self) -> int:
+        return self.size * _val_bits(self.val_dtype)
+
+    def encode(self, key, delta):
+        y = self.compressor(key, delta.reshape(self.shape))
+        return (y.reshape(-1).astype(jnp.dtype(self.val_dtype)),)
+
+    def decode(self, payload):
+        (vals,) = payload
+        return vals.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# format metadata
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class WireFormat:
     """Payload layout for a whole gradient pytree (leaf order = flatten
     order, which both aggregation paths use)."""
 
-    leaves: Tuple[LeafWire, ...]
+    leaves: Tuple[LeafCodec, ...]
 
     @staticmethod
     def for_tree(tree: PyTree, block: int, kb: int) -> "WireFormat":
+        """Block-sparse format for every leaf (the PR-1 constructor)."""
         return WireFormat(tuple(
             LeafWire(shape=tuple(l.shape), size=int(l.size), block=block, kb=kb)
             for l in jax.tree.leaves(tree)))
@@ -97,14 +497,30 @@ class WireFormat:
         return n_workers * sum(l.payload_bits for l in self.leaves)
 
 
-def format_for(compressor, tree: PyTree) -> Optional[WireFormat]:
-    """WireFormat when ``compressor`` emits this payload (block-top-k
-    family: has integer ``block``/``kb`` fields), else None."""
-    block = getattr(compressor, "block", None)
-    kb = getattr(compressor, "kb", None)
-    if isinstance(block, int) and isinstance(kb, int):
-        return WireFormat.for_tree(tree, block, kb)
-    return None
+def codec_of(compressor, shape: Tuple[int, ...], size: int,
+             wire_dtype: str = "float32") -> LeafCodec:
+    """The codec ``compressor`` declares for one leaf (DensePack fallback
+    for compressors that declare nothing)."""
+    fn = getattr(compressor, "codec", None)
+    if fn is None:
+        return DensePack(shape=tuple(shape), size=int(size),
+                         compressor=compressor, val_dtype=wire_dtype)
+    return fn(tuple(shape), wire_dtype=wire_dtype)
+
+
+def format_for(compressor, tree: PyTree, *,
+               wire_dtype: str = "float32") -> WireFormat:
+    """WireFormat for ``compressor`` applied leaf-wise to ``tree``.
+
+    Every compressor in the zoo declares a codec, so this never returns
+    None: block-top-k gets the block-sparse layout, the top-k/rand-k family
+    gets flat (values, indices), sign/QSGD/natural get their bit-packed /
+    quantized streams, and identity/m-nice fall back to a dense value
+    stream -- all with exact ``bits_per_round``.
+    """
+    return WireFormat(tuple(
+        codec_of(compressor, tuple(l.shape), int(l.size), wire_dtype)
+        for l in jax.tree.leaves(tree)))
 
 
 def payload_bytes(payload: PyTree) -> int:
@@ -112,8 +528,16 @@ def payload_bytes(payload: PyTree) -> int:
     return sum(a.nbytes for a in jax.tree.leaves(payload))
 
 
+def encode_update(codec: LeafCodec, key: Optional[Array], g: Array, h: Array,
+                  lam: float, *, kernel: Optional[str] = None
+                  ) -> Tuple[Tuple[Array, ...], Array]:
+    """Fused compress-and-pack worker update through ``codec`` (module-level
+    convenience; dispatches to the codec's fused kernel when it has one)."""
+    return codec.encode_update(key, g, h, lam, kernel=kernel)
+
+
 # ---------------------------------------------------------------------------
-# pack / unpack / scatter-add (jnp; the layout spec)
+# block-sparse pack / unpack / scatter-add (jnp; the layout spec)
 # ---------------------------------------------------------------------------
 
 def _pad2d(xf: Array, lw: LeafWire) -> Array:
@@ -151,7 +575,7 @@ def unpack(lw: LeafWire, vals: Array, idx: Array) -> Array:
 
 
 # ---------------------------------------------------------------------------
-# fused compress-and-pack (the worker hot path)
+# fused compress-and-pack (the block-top-k worker hot path)
 # ---------------------------------------------------------------------------
 
 def fused_pack(lw: LeafWire, g: Array, h: Array, lam: float, *,

@@ -23,11 +23,12 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _to_slabs(x: Array, block: int) -> Tuple[Array, int, Tuple[int, ...]]:
+def _to_slabs(x: Array, block: int, tile: int = K.TILE_NB
+              ) -> Tuple[Array, int, Tuple[int, ...]]:
     xf = x.reshape(-1)
     d = xf.shape[0]
     nb = -(-d // block)
-    nb_pad = -(-nb // K.TILE_NB) * K.TILE_NB
+    nb_pad = -(-nb // tile) * tile
     xp = jnp.pad(xf, (0, nb_pad * block - d)).reshape(nb_pad, block)
     return xp, d, x.shape
 
@@ -75,3 +76,42 @@ def efbv_pack_update(g: Array, h: Array, lam: float, block: int = 1024,
     nb = -(-d_len // block)
     h_new = h_out.reshape(-1)[:d_len].reshape(shape)
     return (vals[:nb], idx[:nb]), h_new
+
+
+# default flat-vector slab width for the codec kernels below (rand-k / QSGD
+# have no block structure of their own; 1024 lanes = 8 full vregs)
+_CODEC_COLS = 1024
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "scale", "interpret"))
+def randk_update(g: Array, h: Array, idx: Array, lam: float, scale: float,
+                 interpret: bool | None = None) -> Array:
+    """Fused rand-k worker update (kernels/pack.py): h' = h + lam * d with
+    d = randk(g - h) rebuilt in VMEM from the SMEM index list -- the dense d
+    never reaches HBM.  ``idx``: (k,) int32 flat positions into g; returns
+    h' shaped/dtyped like h."""
+    interpret = _interpret_default() if interpret is None else interpret
+    gp, d_len, _ = _to_slabs(g, _CODEC_COLS)
+    hp, _, h_shape = _to_slabs(h, _CODEC_COLS)
+    h_out = KP.randk_update_pallas(gp, hp, idx, scale, lam,
+                                   interpret=interpret)
+    return h_out.reshape(-1)[:d_len].reshape(h_shape)
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "s", "interpret"))
+def qsgd_pack_update(g: Array, h: Array, u: Array, norm: Array, lam: float,
+                     s: int, interpret: bool | None = None
+                     ) -> Tuple[Array, Array]:
+    """Fused QSGD quantize-and-pack (kernels/pack.py): returns the flat
+    (g.size,) signed level stream (int8 for s <= 127, int16 above) and
+    h' = h + lam * dequant(levels).  ``u``: the (g.size,) uniform draws of
+    the jnp oracle; ``norm``: scalar ||g - h||_2."""
+    interpret = _interpret_default() if interpret is None else interpret
+    gp, d_len, _ = _to_slabs(g, _CODEC_COLS, tile=KP.QS_TILE_NB)
+    hp, _, h_shape = _to_slabs(h, _CODEC_COLS, tile=KP.QS_TILE_NB)
+    up_, _, _ = _to_slabs(u, _CODEC_COLS, tile=KP.QS_TILE_NB)
+    lvl, h_out = KP.qsgd_pack_update_pallas(
+        gp, hp, up_, jnp.reshape(norm, (1, 1)).astype(jnp.float32), s, lam,
+        interpret=interpret)
+    levels = lvl.reshape(-1)[:d_len]
+    return levels, h_out.reshape(-1)[:d_len].reshape(h_shape)

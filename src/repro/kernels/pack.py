@@ -1,25 +1,28 @@
-"""Pallas TPU kernel: fused compress-AND-pack for the sparse wire format.
+"""Pallas TPU kernels: fused compress-AND-pack for the wire codecs.
 
-The unfused hot path costs three HBM passes and materializes a dense tensor
-the theory says should never exist on the wire:
+The unfused hot path of any compressor costs three HBM passes and
+materializes a dense tensor the theory says should never exist on the wire:
 
-    d      = block_topk(g - h)        # dense (nb, block) write
+    d      = C(g - h)                 # dense (nb, block) write
     h     <- h + lam * d              # dense read + write
-    payload = pack(d)                 # dense read, (values, indices) write
+    payload = pack(d)                 # dense read, payload write
 
-This kernel does all three in ONE pass over (g, h): each grid step loads a
-(TILE_NB, block) slab of g and h into VMEM, runs the iterative-max top-kb
-selection of block_topk.py on delta = g - h, and emits
+Three codecs get a fused kernel here, each with the same property -- the
+dense compressed d lives only in VMEM, never in HBM:
 
-    values  (TILE_NB, kb)   -- the kept signed deltas, descending |.|,
-    indices (TILE_NB, kb)   -- block-LOCAL int32 column indices,
-    h_out   (TILE_NB, block)-- h + lam * d,
+  * block-top-k (`_pack_update_kernel`): one pass over (g, h) emitting the
+    (values, block-local indices) payload and h_out.
+  * rand-k (`_randk_update_kernel`): the k kept positions are
+    data-INdependent, so they are drawn outside and prefetched to SMEM; the
+    kernel does the dense-free h <- h + lam * d pass in one sweep, and the
+    payload values are an O(k) gather outside.
+  * QSGD (`_qsgd_pack_kernel`): after a scalar norm reduction, one pass over
+    (g, h, uniforms) emits the int8/int16 quantized level stream and h_out
+    -- the dequantized d is built in VMEM for the h update and discarded.
 
-so HBM traffic is read(g) + read(h) + write(h_out) + write(payload); the
-dense d lives only in VMEM.  Selection order matches jax.lax.top_k exactly
-(descending magnitude, ties broken by lowest index), which is what makes the
-payload bit-identical to the jnp oracle `BlockTopK.encode` -- the
-differential harness in tests/harness.py pins this.
+All kernels reproduce the jnp oracles' f32 arithmetic op-for-op, which is
+what makes the payloads bit-identical across oracle / interpret / compiled
+backends -- the differential harness in tests/harness.py pins this.
 """
 
 from __future__ import annotations
@@ -29,10 +32,13 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.block_topk import TILE_NB
 
 Array = jax.Array
+
+QS_TILE_NB = 32  # rows per grid step for int8 outputs (min int8 tile: 32x128)
 
 
 def _pack_update_kernel(g_ref, h_ref, vals_ref, idx_ref, h_out_ref, *,
@@ -95,3 +101,118 @@ def pack_update_pallas(g2d: Array, h2d: Array, lam: float, kb: int, *,
                    jax.ShapeDtypeStruct((nb, block), h2d.dtype)),
         interpret=interpret,
     )(g2d, h2d)
+
+
+# ---------------------------------------------------------------------------
+# rand-k: dense-free h update with SMEM-prefetched indices
+# ---------------------------------------------------------------------------
+
+def _randk_update_kernel(idx_ref, g_ref, h_ref, h_out_ref, *, k: int,
+                         scale: float, lam: float):
+    """h_out = h + lam * ((g - h) masked to the k SMEM indices) * scale.
+
+    idx_ref holds the k selected flat positions (into the padded row-major
+    (nr, cols) grid) in SMEM; membership of this tile is rebuilt as an
+    equality test against the tile-linear f32 iota (exact for size < 2**24,
+    and out-of-tile positions can never collide with an in-tile linear
+    index).  The dense rand-k output d exists only in VMEM.
+    """
+    t = pl.program_id(0)
+    g = g_ref[...]
+    h = h_ref[...]
+    delta = g.astype(jnp.float32) - h.astype(jnp.float32)
+    rows, cols = delta.shape
+    lin = (jax.lax.broadcasted_iota(jnp.float32, (rows, cols), 0) * cols
+           + jax.lax.broadcasted_iota(jnp.float32, (rows, cols), 1))
+    base = t * (rows * cols)
+
+    def body(j, mask):
+        local = (idx_ref[j] - base).astype(jnp.float32)
+        return jnp.maximum(mask, (lin == local).astype(jnp.float32))
+
+    mask = jax.lax.fori_loop(0, k, body, jnp.zeros((rows, cols), jnp.float32))
+    # rounding chain must match the oracle's h + lam * decode(payload):
+    # delta * scale rounds first (those ARE the wire values), then lam * d.
+    # The select between the two multiplies stops XLA from reassociating the
+    # constant pair into one (lam * scale) product the eager oracle never
+    # forms -- adjacent constant muls DO get merged on the CPU backend.
+    vals_dense = delta * scale
+    d = jnp.where(mask > 0, vals_dense, 0.0)
+    h_out_ref[...] = (h.astype(jnp.float32) + lam * d).astype(h_out_ref.dtype)
+
+
+def randk_update_pallas(g2d: Array, h2d: Array, idx: Array, scale: float,
+                        lam: float, *, interpret: bool = False) -> Array:
+    """g2d/h2d: (nr, cols) with nr % TILE_NB == 0, cols % 128 == 0; idx: (k,)
+    int32 flat positions.  Returns h_new (nr, cols) in h2d's dtype."""
+    nr, cols = g2d.shape
+    assert nr % TILE_NB == 0 and cols % 128 == 0, (nr, cols)
+    # f32 position compare is exact up to 2**24 inclusive (max linear index
+    # is nr*cols - 1); <= admits every unpadded size < 2**24 after padding
+    assert nr * cols <= 2 ** 24, (nr, cols)
+    (k,) = idx.shape
+    grid = (nr // TILE_NB,)
+    slab = pl.BlockSpec((TILE_NB, cols), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_randk_update_kernel, k=k, scale=float(scale),
+                          lam=float(lam)),
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), slab, slab],
+        out_specs=slab,
+        out_shape=jax.ShapeDtypeStruct((nr, cols), h2d.dtype),
+        interpret=interpret,
+    )(idx, g2d, h2d)
+
+
+# ---------------------------------------------------------------------------
+# QSGD: fused quantize-and-pack (int8/int16 level stream + h update)
+# ---------------------------------------------------------------------------
+
+def _qsgd_pack_kernel(norm_ref, g_ref, h_ref, u_ref, lvl_ref, h_out_ref, *,
+                      s: int, lam: float):
+    """One pass over (g, h, u): emits the signed level stream and
+    h_out = h + lam * dequant(levels); the dense dequantized d stays in
+    VMEM.  Op order matches QSGD.__call__ / QsgdQuant exactly."""
+    g = g_ref[...]
+    h = h_ref[...]
+    u = u_ref[...]
+    delta = g.astype(jnp.float32) - h.astype(jnp.float32)
+    norm = norm_ref[0, 0]
+    safe = jnp.where(norm > 0, norm, 1.0)
+    a = jnp.abs(delta)
+    level = a / safe * s
+    low = jnp.floor(level)
+    up = (u < (level - low)).astype(jnp.float32)
+    # sign spelled as compares: jnp.sign lowers poorly on some Mosaic
+    # vintages, and the two differ only at +-0 where every product below is
+    # a zero of some sign anyway
+    sgn = jnp.where(delta > 0, 1.0, jnp.where(delta < 0, -1.0, 0.0))
+    lvq = low + up
+    lvl_ref[...] = (sgn * lvq).astype(lvl_ref.dtype)
+    # rounding chain matches the oracle decode exactly: reciprocal multiply
+    # (jit rewrites /s inexactly) and a VECTOR-predicate select feeding the
+    # tail -- scalar-predicate selects get simplified away, leaving a
+    # mul+add pair that LLVM contracts into an FMA the eager oracle never
+    # performs (see the rand-k kernel for the same constraint)
+    dq = jnp.where(lvq > 0, (norm * sgn) * (lvq * (1.0 / s)), 0.0)
+    h_out_ref[...] = (h.astype(jnp.float32) + lam * dq).astype(h_out_ref.dtype)
+
+
+def qsgd_pack_update_pallas(g2d: Array, h2d: Array, u2d: Array, norm: Array,
+                            s: int, lam: float, *, interpret: bool = False):
+    """g2d/h2d/u2d: (nr, cols) with nr % QS_TILE_NB == 0, cols % 128 == 0;
+    norm: (1, 1) f32.  Returns (levels (nr, cols) int8/int16, h_new)."""
+    nr, cols = g2d.shape
+    assert nr % QS_TILE_NB == 0 and cols % 128 == 0, (nr, cols)
+    lvl_dtype = jnp.int8 if s <= 127 else jnp.int16
+    grid = (nr // QS_TILE_NB,)
+    slab = pl.BlockSpec((QS_TILE_NB, cols), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_qsgd_pack_kernel, s=int(s), lam=float(lam)),
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM), slab, slab, slab],
+        out_specs=(slab, slab),
+        out_shape=(jax.ShapeDtypeStruct((nr, cols), lvl_dtype),
+                   jax.ShapeDtypeStruct((nr, cols), h2d.dtype)),
+        interpret=interpret,
+    )(norm, g2d, h2d, u2d)

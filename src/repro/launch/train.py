@@ -54,6 +54,10 @@ def parse_args(argv=None):
     ap.add_argument("--compressor", default="block_topk:256,16")
     ap.add_argument("--agg", default="dense_psum",
                     choices=["dense_psum", "sparse_allgather"])
+    ap.add_argument("--wire-dtype", default="float32",
+                    choices=["float32", "bfloat16", "float16"],
+                    help="value precision of sparse/dense wire payloads "
+                         "(quantized and bit-packed codecs ignore it)")
     ap.add_argument("--server-comp", default="",
                     help="compressor spec for the server->worker model "
                          "broadcast (bidirectional compression, EF21-BC "
@@ -107,15 +111,18 @@ def main(argv=None):
     state = init_train_state(params, opt, mesh,
                              bidirectional=server_comp is not None)
 
-    # exact wire accounting for the sparse payload (docs/wire_format.md)
+    # exact wire accounting for the codec payload (docs/wire_format.md);
+    # every compressor declares a codec, so this always prints
     if args.agg == "sparse_allgather":
         from repro.distributed import wire
-        fmt = wire.format_for(algo.compressor, params)
-        if fmt is not None:
-            up = fmt.bits_per_round()
-            dense = sum(l.size for l in fmt.leaves) * 32
-            print(f"[train] wire: {up} bits/round/worker uplink "
-                  f"({up / 8 / 2**20:.2f} MiB, {up / max(dense, 1):.4f}x dense)")
+        fmt = wire.format_for(algo.compressor, params,
+                              wire_dtype=args.wire_dtype)
+        up = fmt.bits_per_round()
+        dense = sum(l.size for l in fmt.leaves) * 32
+        kinds = sorted({l.kind for l in fmt.leaves})
+        print(f"[train] wire: codec={','.join(kinds)} {up} bits/round/worker "
+              f"uplink ({up / 8 / 2**20:.2f} MiB, "
+              f"{up / max(dense, 1):.4f}x dense fp32)")
     if args.trainer == "fsdp":
         from repro.train import fsdp_state_shardings
         shardings = fsdp_state_shardings(mesh, model.param_specs(), state)
@@ -133,9 +140,11 @@ def main(argv=None):
     if args.trainer == "fsdp":
         from repro.train import make_train_step_fsdp
         step_fn = make_train_step_fsdp(loss_fn, opt, algo, mesh,
-                                       agg_mode=args.agg)
+                                       agg_mode=args.agg,
+                                       wire_dtype=args.wire_dtype)
     else:
         step_fn = make_train_step(loss_fn, opt, algo, mesh, agg_mode=args.agg,
+                                  wire_dtype=args.wire_dtype,
                                   server_comp=server_comp)
 
     t_start = time.time()

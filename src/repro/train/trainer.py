@@ -94,6 +94,7 @@ def make_train_step(
     mesh,
     *,
     agg_mode: str = "dense_psum",
+    wire_dtype: str = "float32",
     remat: bool = False,
     server_comp: Optional[Compressor] = None,
 ) -> Callable[[TrainState, Any, jax.Array], Tuple[TrainState, dict]]:
@@ -101,6 +102,10 @@ def make_train_step(
 
     loss_fn(params, batch) -> (scalar loss, metrics dict); it sees the LOCAL
     batch shard (the worker's f_i) and may use GSPMD-auto 'model' collectives.
+
+    ``wire_dtype`` selects the value precision of sparse/dense payloads under
+    ``agg_mode='sparse_allgather'`` (float32 / bfloat16 / float16; quantized
+    and bit-packed codecs ignore it).
 
     With ``server_comp`` the step runs *bidirectional* compression (the
     EF21-BC extension, core/efbv.py::run_bidirectional, ported into the
@@ -122,7 +127,8 @@ def make_train_step(
         (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             params_for_grad, batch_i)
         grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
-        message, h_i_new = compress_local(algo, kw, grads, h_i, mode=agg_mode)
+        message, h_i_new = compress_local(algo, kw, grads, h_i, mode=agg_mode,
+                                          wire_dtype=wire_dtype)
         local_metrics = {
             "loss": loss,
             "grad_norm": global_norm(grads),
@@ -186,7 +192,8 @@ def make_train_step(
             eval_params, state.h, batch, key)
 
         g, h_avg_new = combine_global(
-            algo, message, state.h_avg, n_workers=n, mode=agg_mode)
+            algo, message, state.h_avg, n_workers=n, mode=agg_mode,
+            wire_dtype=wire_dtype)
 
         updates, opt_state = optimizer.update(g, state.opt_state, state.params)
         params = apply_updates(state.params, updates)
@@ -280,6 +287,7 @@ def make_train_step_fsdp(
     mesh,
     *,
     agg_mode: str = "dense_psum",
+    wire_dtype: str = "float32",
 ) -> Callable[[TrainState, Any, jax.Array], Tuple[TrainState, dict]]:
     """Pure-GSPMD train step: vmap over the worker axis for per-worker grads,
     FSDP-sharded params/optimizer state, same EF-BV wire as the shard_map
@@ -309,10 +317,12 @@ def make_train_step_fsdp(
         gspec = stack_worker_spec(mesh, jax.tree.map(
             lambda g: P(*([None] * (g.ndim - 1))), state.h_avg))
         message, h_new = jax.vmap(
-            lambda k, g, h: compress_local(algo, k, g, h, mode=agg_mode)
+            lambda k, g, h: compress_local(algo, k, g, h, mode=agg_mode,
+                                           wire_dtype=wire_dtype)
         )(keys, grads, state.h)
         g, h_avg_new = combine_global(algo, message, state.h_avg,
-                                      n_workers=n, mode=agg_mode)
+                                      n_workers=n, mode=agg_mode,
+                                      wire_dtype=wire_dtype)
         updates, opt_state = optimizer.update(g, state.opt_state, state.params)
         params = apply_updates(state.params, updates)
         metrics = {"loss": jnp.mean(loss), "g_norm": global_norm(g),

@@ -1,20 +1,22 @@
-"""Differential oracle harness for the sparse wire-format pipeline.
+"""Differential oracle harness for the wire-codec pipeline.
 
 One algorithm, several executions -- the harness runs the SAME EF-BV
 recursion through each backend and asserts the trajectories are
 *bit-identical*, not merely close:
 
-    oracle     -- pure jnp (jax.lax.top_k pack; the spec),
-    interpret  -- fused Pallas pack kernel, interpret mode (CPU),
-    pallas     -- fused Pallas pack kernel, compiled (TPU only).
+    oracle     -- pure jnp (the codec spec),
+    interpret  -- fused Pallas kernel, interpret mode (CPU),
+    pallas     -- fused Pallas kernel, compiled (TPU only).
 
-Because the kernel reproduces jax.lax.top_k's selection order exactly
-(descending |.|, first-index tie-breaking) and performs the same f32
-arithmetic, any divergence -- one ULP, one swapped tie -- is a bug, and
-equality composes over steps: if round t is bit-equal, round t+1 sees
-identical inputs.  tests/test_wire.py drives this across compressor
-configs; test_distributed.py reuses run_with_devices for the
-1-vs-8-fake-device leg.
+Because the kernels reproduce the oracles' f32 arithmetic op-for-op
+(jax.lax.top_k's selection order for block-top-k, the SMEM index mask for
+rand-k, the stochastic-rounding chain for QSGD), any divergence -- one ULP,
+one swapped tie -- is a bug, and equality composes over steps: if round t is
+bit-equal, round t+1 sees identical inputs.  ``run_wire_trajectory`` drives
+the block-top-k pipeline; ``run_codec_trajectory`` drives ANY compressor
+through its declared codec (tests/test_wire.py and tests/test_wire_codecs.py
+parametrize over the zoo); test_distributed.py reuses run_with_devices for
+the 1-vs-8-fake-device leg.
 """
 
 from __future__ import annotations
@@ -35,6 +37,15 @@ def available_pack_impls() -> List[str]:
     if jax.default_backend() == "tpu":
         impls.append("pallas")
     return impls
+
+
+def codec_impls(codec) -> List[str]:
+    """Backends to differential-test for ``codec``: always the jnp oracle,
+    plus the fused Pallas kernel (interpret; compiled on TPU) when the codec
+    has one."""
+    if not getattr(codec, "has_kernel", False):
+        return ["oracle"]
+    return available_pack_impls()
 
 
 def quadratic_grads(n: int, d: int, seed: int = 0):
@@ -87,6 +98,47 @@ def run_wire_trajectory(kernel: str, *, steps: int, n: int, d: int,
         hs.append(h)
     return {"x": jnp.stack(xs), "h": jnp.stack(hs), "payload": payload,
             "lw": lw}
+
+
+def run_codec_trajectory(kernel: str, *, compressor, steps: int, n: int,
+                         d: int, lam: float, nu: float, gamma: float,
+                         seed: int = 0, wire_dtype: str = "float32"
+                         ) -> Dict[str, Array]:
+    """EF-BV (Algorithm 1) over ANY compressor's declared wire codec.
+
+    Every worker runs wire.encode_update (codec pack + h update, fused
+    kernel when kernel != 'oracle' and the codec has one), the master
+    decode-sums the worker-stacked payload -- exactly the sparse_allgather
+    data path.  Returns the (x, h) trajectory plus the last round's stacked
+    payload for byte accounting.
+    """
+    codec = wire.codec_of(compressor, (d,), d, wire_dtype)
+    grad_fn = quadratic_grads(n, d, seed)
+    key = jax.random.key(seed + 0xC0DEC)
+
+    x = jnp.zeros((d,), jnp.float32)
+    h = jnp.zeros((n, d), jnp.float32)
+    h_avg = jnp.zeros((d,), jnp.float32)
+    xs, hs = [], []
+    payload = None
+    for t in range(steps):
+        g = grad_fn(x)
+        payloads, h_i = [], []
+        for i in range(n):
+            ki = jax.random.fold_in(jax.random.fold_in(key, t), i)
+            p, h_new = wire.encode_update(codec, ki, g[i], h[i], lam,
+                                          kernel=kernel)
+            payloads.append(p)
+            h_i.append(h_new)
+        h = jnp.stack(h_i)
+        payload = jax.tree.map(lambda *xs_: jnp.stack(xs_), *payloads)
+        d_bar = codec.decode_sum(payload) / n
+        x = x - gamma * (h_avg + nu * d_bar)
+        h_avg = h_avg + lam * d_bar
+        xs.append(x)
+        hs.append(h)
+    return {"x": jnp.stack(xs), "h": jnp.stack(hs), "payload": payload,
+            "codec": codec}
 
 
 def assert_bit_identical(a, b, context: str = ""):

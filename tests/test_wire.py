@@ -1,8 +1,11 @@
-"""Differential tests for the fused sparse wire-format pipeline.
+"""Differential tests for the fused wire-codec pipeline.
 
-Pins, bit-for-bit: jnp oracle == fused Pallas pack (interpret; compiled on
-TPU), payload bytes == wire.bits_per_round(), sparse_allgather ==
-dense_psum, and the bidirectional trainer's Identity-server invariant.
+Pins, bit-for-bit: jnp oracle == fused Pallas kernels (interpret; compiled
+on TPU) for block-top-k, rand-k and QSGD over whole trajectories, payload
+bytes == wire.bits_per_round(), sparse_allgather == dense_psum for
+representatives of every codec family, and the bidirectional trainer's
+Identity-server invariant.  (Per-codec roundtrip/accounting property tests
+live in tests/test_wire_codecs.py.)
 """
 
 import jax
@@ -10,9 +13,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from harness import (assert_bit_identical, available_pack_impls,
-                     run_wire_trajectory)
-from repro.core import BlockTopK, EFBV, Identity
+from harness import (assert_bit_identical, available_pack_impls, codec_impls,
+                     run_codec_trajectory, run_wire_trajectory)
+from repro.core import (BlockTopK, EFBV, Identity, MixKK, Natural, QSGD,
+                        RandK, SignNorm, TopK, theory)
 from repro.distributed import wire
 from repro.distributed.aggregate import efbv_aggregate_reference
 
@@ -115,6 +119,61 @@ def test_trajectory_bit_identical_across_backends(d, block, kb):
 
 
 # ---------------------------------------------------------------------------
+# whole-trajectory bit-identity for the other fused-kernel codecs
+# ---------------------------------------------------------------------------
+
+CODEC_TRAJ = [RandK(8), QSGD(16), QSGD(400)]
+
+
+@pytest.mark.parametrize("comp", CODEC_TRAJ, ids=lambda c: repr(c))
+def test_codec_trajectory_bit_identical_across_backends(comp):
+    """(x, h, payload) trajectories of Algorithm 1 over each fused-kernel
+    codec are bit-identical between the jnp oracle and the Pallas kernel
+    (interpret on CPU, compiled on TPU) -- the rand-k/QSGD analogue of the
+    block-top-k test above."""
+    d, n = 600, 3
+    lam = theory.lambda_star(comp.eta(d), comp.omega(d))
+    nu = theory.nu_star(comp.eta(d), comp.omega(d) / n)
+    kw = dict(compressor=comp, steps=5, n=n, d=d, lam=lam, nu=nu, gamma=0.05)
+    ref = run_codec_trajectory("oracle", **kw)
+    impls = codec_impls(ref["codec"])
+    assert impls != ["oracle"], "fused-kernel codec expected"
+    for impl in impls[1:]:
+        got = run_codec_trajectory(impl, **kw)
+        assert_bit_identical((got["x"], got["h"], got["payload"]),
+                             (ref["x"], ref["h"], ref["payload"]),
+                             f"impl={impl} comp={comp!r}")
+    assert float(jnp.linalg.norm(ref["x"][-1])) > 0
+
+
+def test_oracle_only_codecs_run_trajectories():
+    """Codecs without a fused kernel (sign, natural, top-k, ...) still run
+    whole trajectories through the same harness, and an explicit kernel
+    request on them errors instead of silently diverging."""
+    for comp in [SignNorm(), Natural(), TopK(6), MixKK(2, 6)]:
+        res = run_codec_trajectory("oracle", compressor=comp, steps=3, n=2,
+                                   d=96, lam=0.5, nu=0.5, gamma=0.05)
+        assert codec_impls(res["codec"]) == ["oracle"]
+        assert np.all(np.isfinite(np.asarray(res["x"])))
+        with pytest.raises(ValueError):
+            wire.encode_update(res["codec"], KEY, jnp.zeros(96),
+                               jnp.zeros(96), 0.5, kernel="interpret")
+
+
+def test_codec_kernel_hlo_one_pass():
+    """AOT TPU HLO proof for the new fused kernels: rand-k's custom call
+    emits ONLY h_out; QSGD's emits only the quantized stream + h_out."""
+    bench = pytest.importorskip("benchmarks.compressor_bench")
+    try:
+        rk = bench.randk_update_hlo_report(nr=16, cols=256, k=32)
+        qs = bench.qsgd_pack_hlo_report(nr=32, cols=256, s=16)
+    except Exception as e:  # pragma: no cover - jax.export surface drift
+        pytest.skip(f"TPU AOT export unavailable: {type(e).__name__}")
+    assert rk["h_out_only"], rk
+    assert qs["one_dense_f32"] and qs["quantized_stream"], qs
+
+
+# ---------------------------------------------------------------------------
 # exact bit accounting
 # ---------------------------------------------------------------------------
 
@@ -163,11 +222,16 @@ def test_fused_kernel_never_materializes_dense_d():
 # wire modes and the sharded trainer
 # ---------------------------------------------------------------------------
 
-def test_sparse_allgather_equals_dense_psum():
+@pytest.mark.parametrize("comp", [
+    BlockTopK(64, 8), TopK(20), RandK(12), QSGD(16), SignNorm(), Natural(),
+    MixKK(4, 8), Identity(),
+], ids=lambda c: repr(c))
+def test_sparse_allgather_equals_dense_psum(comp):
     """Same compressor draws -> the wire format must not change Algorithm 1
-    (the payload path is exercised through compress_local/combine_global)."""
+    (the payload path is exercised through compress_local/combine_global)
+    -- for a representative of every codec family."""
     n, shape = 4, (32, 16)
-    algo = EFBV(BlockTopK(64, 8), lam=0.8, nu=0.9)
+    algo = EFBV(comp, lam=0.8, nu=0.9)
     grads = {"w": jax.random.normal(KEY, (n,) + shape)}
     h = {"w": jnp.zeros((n,) + shape)}
     h_avg = {"w": jnp.zeros(shape)}
