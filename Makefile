@@ -6,7 +6,7 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test-tier1 test-all test-slow bench smoke docs-test docs-check
+.PHONY: test-tier1 test-all test-slow bench smoke smoke-federated docs-test docs-check
 
 test-tier1:
 	JAX_PLATFORMS=cpu $(PY) -m pytest -x -q
@@ -30,3 +30,9 @@ smoke:
 	JAX_PLATFORMS=cpu $(PY) -m repro.launch.train --arch qwen2-0.5b --smoke \
 	    --mesh 2x2 --steps 4 --global-batch 8 --seq 32 \
 	    --compressor block_topk:256,16 --agg sparse_allgather
+
+smoke-federated:
+	JAX_PLATFORMS=cpu $(PY) -m repro.launch.train --arch qwen2-0.5b --smoke \
+	    --mesh 2x2 --steps 4 --global-batch 8 --seq 32 \
+	    --compressor block_topk:256,16 --agg sparse_allgather \
+	    --participation bernoulli:0.5 --local-batch-resample

@@ -3,7 +3,13 @@ improves as the number of workers n grows, while EF21's rate is n-independent.
 
 We sweep n and report (a) the theoretical stepsize gamma (monotone in n for
 EF-BV, flat for EF21) and (b) the measured suboptimality after a fixed number
-of rounds on the logistic-regression problem."""
+of rounds on the logistic-regression problem.
+
+The participation sweep (federated execution mode) holds n fixed and sweeps
+the per-round sampling fraction p: the wire bits of a round scale as |S_t|
+(mask bitmap + only the sampled payloads -- wire.federated_round_bits) while
+the tuned stepsize and the measured suboptimality degrade gracefully, which
+is the bits-vs-convergence trade-off the docs quote."""
 
 from __future__ import annotations
 
@@ -11,7 +17,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import KEY, make_problem
-from repro.core import CompKK, EFBV, run, tune_for
+from repro.core import (CompKK, EFBV, Participation, run, run_federated,
+                        tune_for)
+from repro.distributed import wire
 
 
 def run_bench(fast: bool = True):
@@ -48,6 +56,50 @@ def run_bench(fast: bool = True):
                      "us_per_call": "",
                      "derived": f"efbv={finals['efbv'][i]:.3e};"
                                 f"ef21={finals['ef21'][i]:.3e}"})
+    rows.extend(participation_rows(fast=fast))
+    return rows
+
+
+def participation_rows(fast: bool = True):
+    """Federated sweep: wire bits/round scale as |S_t|, convergence degrades
+    gracefully as the participation fraction p shrinks."""
+    steps = 1500 if fast else 6000
+    n = 100
+    prob = make_problem("phishing", n=n)
+    _, fstar = prob.solve()
+    d = prob.d
+    comp = CompKK(1, d // 2)
+    fmt = wire.format_for(comp, jnp.zeros(d))
+    rows, gaps, bits = [], [], []
+    ps = [1.0, 0.5, 0.25] if fast else [1.0, 0.5, 0.25, 0.1]
+    for p in ps:
+        part = (Participation() if p >= 1.0
+                else Participation(kind="bernoulli", p=p))
+        t = tune_for(comp, d, n, mode="efbv", L=prob.L(),
+                     Ltilde=prob.L_tilde(),
+                     participation=None if p >= 1.0 else p)
+        algo = EFBV(comp, lam=t.lam, nu=t.nu)
+        _, _, m = run_federated(
+            algo=algo, grad_fn=lambda k, x: prob.grads(x), x0=jnp.zeros(d),
+            gamma=t.gamma, steps=steps, key=KEY, n=n, participation=part,
+            record=lambda x: prob.f(x) - fstar)
+        # expected federated uplink: mask bitmap + E|S_t| payloads
+        b = fmt.bits_per_round(n_workers=n, participants=p * n)
+        gaps.append(float(m[-1]))
+        bits.append(float(b))
+        rows.append({"name": f"n_scaling/participation_p{p:g}/trade_off",
+                     "us_per_call": "",
+                     "derived": f"final_gap={gaps[-1]:.3e};"
+                                f"gamma={t.gamma:.2e};"
+                                f"exp_bits_per_round={b:g}"})
+    # the wire side of the trade-off is exact: bits scale as |S_t|
+    full_payload = n * fmt.bits_per_round()
+    assert all(b <= full_payload * p + 32 * wire.bitmap_words(n) + 1e-9
+               for p, b in zip(ps, bits)), (ps, bits, full_payload)
+    rows.append({"name": "n_scaling/participation/bits_scale_with_s",
+                 "us_per_call": "",
+                 "derived": f"ps={ps};bits={[f'{b:g}' for b in bits]};"
+                            f"monotone={all(b1 >= b2 for b1, b2 in zip(bits, bits[1:]))}"})
     return rows
 
 

@@ -7,7 +7,10 @@ from repro.core.compressors import (  # noqa: F401
     SignNorm, Natural, QSGD, FracTopK, FracCompKK, MNice, make_compressor,
 )
 from repro.core.efbv import (  # noqa: F401
-    EFBV, EFBVState, proximal_step, prox_zero, prox_l1, prox_l2, run, run_bidirectional,
+    EFBV, EFBVState, Participation, participation_key, proximal_step,
+    prox_zero, prox_l1, prox_l2, run, run_bidirectional, run_federated,
 )
 from repro.core import theory  # noqa: F401
-from repro.core.theory import Tuning, tune, tune_for  # noqa: F401
+from repro.core.theory import (  # noqa: F401
+    Tuning, tune, tune_for, tune_partial,
+)

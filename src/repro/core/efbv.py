@@ -13,6 +13,18 @@ Two execution styles share this module:
 
 Both call into :func:`worker_update` / :func:`master_update` below so the
 algorithm lives in exactly one place.
+
+Beyond the exact-gradient, full-participation regime of the paper's
+experiments, the module also implements the *federated* execution mode
+(docs/algorithms.md#partial-participation--stochastic-gradients): per-round
+client sampling via :class:`Participation` masks -- only the sampled subset
+S_t compresses and communicates, absent workers keep their control variates
+h_i stale -- through the masked variants :meth:`EFBV.worker_update_masked` /
+:meth:`EFBV.step_federated` and the :func:`run_federated` driver, which also
+takes stochastic (minibatch-resampled) local gradients.  With an all-ones
+mask every masked op reduces bitwise to its unmasked twin, so full
+participation reproduces the original trajectories bit-for-bit (pinned by
+tests/test_federated.py).
 """
 
 from __future__ import annotations
@@ -28,6 +40,83 @@ from repro.core import theory
 
 Array = jax.Array
 PyTree = Any
+
+#: fold_in tag for the per-round participation-mask key.  All execution paths
+#: (reference run_federated, shard_map trainer, FSDP trainer, the differential
+#: harness) derive the mask from fold_in(round_key, PARTICIPATION_FOLD) so the
+#: sampled subset S_t is identical everywhere; worker compressor keys are
+#: untouched, which is what keeps p = 1 bit-identical to full participation.
+PARTICIPATION_FOLD = 0xFEDE4A7E
+#: fold_in tag for the per-round minibatch-resampling key (stochastic local
+#: gradients) -- decorrelated from both the mask and the compressor draws.
+RESAMPLE_FOLD = 0x5A3D0B17
+
+
+@dataclasses.dataclass(frozen=True)
+class Participation:
+    """Per-round client-sampling scheme (the federated execution mode).
+
+    kind:
+      * ``full``          -- every worker participates (the paper's setting);
+      * ``bernoulli``     -- worker i participates independently w.p. ``p``;
+      * ``fixed``         -- a uniformly random subset of exactly ``s`` workers.
+
+    Masks are {0., 1.}-valued float32 so that gating is pure arithmetic:
+    ``m * d`` zeroes an absent worker's message and ``where(m > 0, h', h)``
+    keeps its control variate stale -- both bitwise identities at m = 1.
+    """
+
+    kind: str = "full"
+    p: float = 1.0   # bernoulli inclusion probability
+    s: int = 0       # fixed-size participant count
+
+    def __post_init__(self):
+        if self.kind not in ("full", "bernoulli", "fixed"):
+            raise ValueError(f"participation kind {self.kind!r}")
+        if self.kind == "bernoulli" and not 0.0 < self.p <= 1.0:
+            raise ValueError(f"bernoulli participation needs 0 < p <= 1, got {self.p}")
+        if self.kind == "fixed" and self.s < 1:
+            raise ValueError(f"fixed participation needs s >= 1, got {self.s}")
+
+    @staticmethod
+    def parse(spec: str) -> "Participation":
+        """Parse the CLI syntax: 'full' | 'bernoulli:p' | 'fixed:s'."""
+        name, _, arg = spec.partition(":")
+        if name == "full":
+            return Participation()
+        if name == "bernoulli":
+            return Participation(kind="bernoulli", p=float(arg))
+        if name == "fixed":
+            return Participation(kind="fixed", s=int(arg))
+        raise ValueError(f"participation spec {spec!r} (want full | "
+                         f"bernoulli:p | fixed:s)")
+
+    @property
+    def is_full(self) -> bool:
+        return self.kind == "full" or (self.kind == "bernoulli" and self.p >= 1.0)
+
+    def fraction(self, n: int) -> float:
+        """Expected fraction of participating workers, E|S_t| / n."""
+        if self.kind == "bernoulli":
+            return self.p
+        if self.kind == "fixed":
+            return min(self.s, n) / n
+        return 1.0
+
+    def sample_mask(self, key: Array, n: int) -> Array:
+        """(n,) float32 participation mask for one round."""
+        if self.kind == "bernoulli":
+            return jax.random.bernoulli(key, self.p, (n,)).astype(jnp.float32)
+        if self.kind == "fixed":
+            if self.s > n:
+                raise ValueError(f"fixed:{self.s} participation with only {n} workers")
+            return (jax.random.permutation(key, n) < self.s).astype(jnp.float32)
+        return jnp.ones((n,), jnp.float32)
+
+
+def participation_key(round_key: Array) -> Array:
+    """The shared derivation of the mask key from a round key."""
+    return jax.random.fold_in(round_key, PARTICIPATION_FOLD)
 
 
 class EFBVState(NamedTuple):
@@ -61,8 +150,14 @@ class EFBV:
 
     @staticmethod
     def make(compressor: Compressor, d: int, n: int, mode: theory.Mode = "efbv",
-             independent: bool = True) -> "EFBV":
-        t = theory.tune_for(compressor, d, n, independent=independent, mode=mode)
+             independent: bool = True,
+             participation: Optional[float] = None) -> "EFBV":
+        """Auto-tuned instance (Remark 1).  ``participation`` is the expected
+        per-round participation fraction p; when given, (lam, nu) are tuned
+        for the effective compressor b*C, b ~ Bernoulli(p) (theory.tune_partial
+        -- see docs/theory.md)."""
+        t = theory.tune_for(compressor, d, n, independent=independent, mode=mode,
+                            participation=participation)
         return EFBV(compressor, lam=t.lam, nu=t.nu)
 
     @staticmethod
@@ -100,8 +195,25 @@ class EFBV:
         """h_i <- h_i + lam d_i."""
         return jax.tree.map(lambda hj, dj: hj + self.lam * dj, h, d)
 
+    def worker_update_masked(self, h: PyTree, d: PyTree, m: Array) -> PyTree:
+        """Participation-gated worker update: h_i <- h_i + lam d_i when worker
+        i is sampled (m = 1), STALE h_i otherwise (m = 0).
+
+        ``where`` (not ``h + m*lam*d``) so an absent worker's h_i is the old
+        array verbatim; at m = 1 the taken branch is exactly
+        :meth:`worker_update`'s arithmetic, hence bit-identical.
+        """
+        return jax.tree.map(
+            lambda hj, dj: jnp.where(m > 0, hj + self.lam * dj, hj), h, d)
+
     def master_update(self, h_avg: PyTree, d_bar: PyTree) -> Tuple[PyTree, PyTree]:
-        """g <- h + nu d_bar ; h <- h + lam d_bar.  Returns (g, new h_avg)."""
+        """g <- h + nu d_bar ; h <- h + lam d_bar.  Returns (g, new h_avg).
+
+        The federated mode needs NO master variant: absent workers' messages
+        are zeroed worker-side and d_bar stays normalized by n (not |S_t|),
+        which is exactly what preserves the running-average invariant
+        h_avg = (1/n) sum_i h_i when only the sampled h_i moved.
+        """
         g = jax.tree.map(lambda hj, dj: hj + self.nu * dj, h_avg, d_bar)
         h_new = jax.tree.map(lambda hj, dj: hj + self.lam * dj, h_avg, d_bar)
         return g, h_new
@@ -142,6 +254,34 @@ class EFBV:
         d = jax.vmap(one_worker)(keys, grads, state.h)
         h_new = jax.vmap(self.worker_update)(state.h, d)
         d_bar = jax.tree.map(lambda dj: jnp.mean(dj, axis=0), d)
+        g, h_avg_new = self.master_update(state.h_avg, d_bar)
+        return g, EFBVState(h=h_new, h_avg=h_avg_new, step=state.step + 1)
+
+    # ---- federated (partial-participation) reference step ---------------------
+
+    def step_federated(self, key: Array, grads: PyTree, state: EFBVState,
+                       mask: Array) -> Tuple[PyTree, EFBVState]:
+        """One round of Algorithm 1 under per-round client sampling.
+
+        ``mask`` is the (n,) {0., 1.} participation mask of this round
+        (Participation.sample_mask).  Only sampled workers contribute their
+        compressed innovation d_i and advance h_i; absent workers' h_i stay
+        stale and their (zero) message still counts in the 1/n normalization,
+        preserving h_avg = (1/n) sum_i h_i.  With an all-ones mask this is
+        bit-identical to :meth:`step`.
+        """
+        if getattr(self.compressor, "joint", False):
+            raise ValueError(
+                "jointly-defined compressors (m-nice) model participation "
+                "themselves; combine them with Participation masks is ambiguous")
+        n = jax.tree.leaves(grads)[0].shape[0]
+        keys = jax.random.split(key, n)
+        d = jax.vmap(lambda k, g_i, h_i: self.compress_delta(k, g_i, h_i)
+                     )(keys, grads, state.h)
+        h_new = jax.vmap(self.worker_update_masked)(state.h, d, mask)
+        d_bar = jax.tree.map(
+            lambda dj: jnp.mean(
+                mask.reshape((n,) + (1,) * (dj.ndim - 1)) * dj, axis=0), d)
         g, h_avg_new = self.master_update(state.h_avg, d_bar)
         return g, EFBVState(h=h_new, h_avg=h_avg_new, step=state.step + 1)
 
@@ -255,6 +395,52 @@ def run(
         x, st = carry
         grads = grad_fn(x)
         g, st = algo.step(k, grads, st)
+        x = proximal_step(x, g, gamma, prox)
+        m = record(x) if record is not None else jnp.zeros(())
+        return (x, st), m
+
+    keys = jax.random.split(key, steps)
+    (x, state), metrics = jax.lax.scan(body, (x0, state0), keys)
+    return x, state, (metrics if record is not None else None)
+
+
+# ------------------------------------------------------------------------------
+# driver: federated Algorithm 1 (client sampling + stochastic local gradients)
+# ------------------------------------------------------------------------------
+
+def run_federated(
+    *,
+    algo: EFBV,
+    grad_fn: Callable[[Array, PyTree], PyTree],  # (key, x) -> n-leading grads
+    x0: PyTree,
+    gamma: float,
+    steps: int,
+    key: Array,
+    n: int,
+    participation: Optional[Participation] = None,
+    prox: Callable[[float, PyTree], PyTree] = prox_zero,
+    record: Optional[Callable[[PyTree], Array]] = None,
+) -> Tuple[PyTree, EFBVState, Optional[Array]]:
+    """Algorithm 1 in the federated execution mode
+    (docs/algorithms.md#partial-participation--stochastic-gradients).
+
+    ``grad_fn(key, x)`` returns the per-worker gradient stack and may consume
+    the key for per-round minibatch resampling (e.g.
+    problems.LogReg.minibatch_grads); pass ``lambda k, x: grads(x)`` for the
+    exact-gradient regime.  The per-round participation mask is drawn from
+    fold_in(round_key, PARTICIPATION_FOLD), the minibatch key from
+    fold_in(round_key, RESAMPLE_FOLD) -- both decorrelated from the
+    compressor keys, so full participation + exact gradients reproduces
+    :func:`run` bit-for-bit.
+    """
+    part = participation if participation is not None else Participation()
+    state0 = algo.init(x0, n)
+
+    def body(carry, k):
+        x, st = carry
+        mask = part.sample_mask(participation_key(k), n)
+        grads = grad_fn(jax.random.fold_in(k, RESAMPLE_FOLD), x)
+        g, st = algo.step_federated(k, grads, st, mask)
         x = proximal_step(x, g, gamma, prox)
         m = record(x) if record is not None else jnp.zeros(())
         return (x, st), m

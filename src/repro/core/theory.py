@@ -4,6 +4,12 @@ Implements Sect. 2.5 (Props 1-2), Sect. 4 (Thms 1-2, Remarks 1-3) and Sect. 5
 (Thm 3) so that EF-BV can run fully auto-tuned: given (eta, omega, omega_av)
 of the compressors and (L, Ltilde) of the objective there is *no* free
 parameter left (Remark 1).
+
+The function-by-function map to the paper, with runnable examples, lives in
+docs/theory.md; :func:`participation_eta` / :func:`participation_omega` /
+:func:`tune_partial` extend the auto-tuning to the federated (per-round
+client sampling) regime by composing Bernoulli participation into the
+compressor's certified constants.
 """
 
 from __future__ import annotations
@@ -43,6 +49,34 @@ def lambda_star(eta: float, omega: float) -> float:
 def nu_star(eta: float, omega_av: float) -> float:
     """Same formula with omega replaced by omega_av (Sect. 2.5 / Sect. 4)."""
     return lambda_star(eta, omega_av)
+
+
+# --- partial participation: Bernoulli client sampling as a compressor ----------
+
+def participation_eta(p: float, eta: float) -> float:
+    """Relative bias of the effective operator C'(x) = b C(x), b ~ Bern(p).
+
+    ||E C'(x) - x|| = ||p E C(x) - x|| <= (1 - p(1 - eta)) ||x||: skipping a
+    round acts like Prop. 1's downscaling with lam = p on the bias side.
+    """
+    if not 0.0 < p <= 1.0:
+        raise ValueError(f"participation probability in (0, 1] required, got {p}")
+    if p == 1.0:  # exact no-op (1 - (1 - eta) would round)
+        return eta
+    return 1.0 - p * (1.0 - eta)
+
+
+def participation_omega(p: float, eta: float, omega: float) -> float:
+    """Relative variance of C'(x) = b C(x), b ~ Bern(p):
+
+        E||C' - E C'||^2 = p Var[C] + p(1-p) ||E C(x)||^2
+                        <= (p omega + p(1-p)(1+eta)^2) ||x||^2 .
+    """
+    if not 0.0 < p <= 1.0:
+        raise ValueError(f"participation probability in (0, 1] required, got {p}")
+    if p == 1.0:  # exact no-op
+        return omega
+    return p * omega + p * (1.0 - p) * (1.0 + eta) ** 2
 
 
 # --- rate ingredients -----------------------------------------------------------
@@ -181,10 +215,45 @@ def tune(
     )
 
 
-def tune_for(compressor, d: int, n: int, *, independent: bool = True, **kw) -> Tuning:
-    """Convenience: read (eta, omega) off a Compressor instance."""
+def tune_partial(
+    eta: float,
+    omega: float,
+    p: float,
+    *,
+    n: int,
+    **kw,
+) -> Tuning:
+    """Auto-tuning under per-round Bernoulli(p) client sampling.
+
+    Composes participation into the compressor's certified per-worker
+    constants (participation_eta / participation_omega) and hands the
+    effective C(eta', omega') to :func:`tune` -- same machinery, sampled
+    regime.  Participation masks are independent across workers, so the
+    averaged variance keeps the 1/n reduction: omega_av' = omega'/n
+    (fixed-size sampling of s = p*n workers is handled with the same
+    plug-in p; its without-replacement masks are negatively correlated,
+    so this errs on the conservative side).  p = 1 reduces to :func:`tune`
+    with omega_av = omega/n exactly.
+    """
+    eta_p = participation_eta(p, eta)
+    omega_p = participation_omega(p, eta, omega)
+    return tune(eta_p, omega_p, n=n, **kw)
+
+
+def tune_for(compressor, d: int, n: int, *, independent: bool = True,
+             participation: Optional[float] = None, **kw) -> Tuning:
+    """Convenience: read (eta, omega) off a Compressor instance.
+
+    ``participation`` (expected per-round participation fraction p) routes
+    through :func:`tune_partial` for the federated regime.
+    """
     eta = compressor.eta(d)
     omega = compressor.omega(d)
+    if participation is not None and participation < 1.0:
+        if not independent:
+            raise ValueError("partial participation tuning assumes "
+                             "independent per-worker compressors")
+        return tune_partial(eta, omega, participation, n=n, **kw)
     omega_av = compressor.omega_av(d, n) if independent else omega
     return tune(eta, omega, omega_av, **kw)
 

@@ -23,6 +23,15 @@ Two-phase structure (sound under shard_map's static replication checker):
 
 Both modes are bit-identical given the same compressor draws (tests assert
 this): the wire format changes, Algorithm 1 does not.
+
+Federated rounds (per-round client sampling) thread a per-worker scalar
+``mask`` through :func:`compress_local`: an absent worker's message is gated
+to decode-zero and its control variate stays stale, so :func:`combine_global`
+needs no variant -- the 1/n mean over pre-masked messages IS the paper's
+aggregation restricted to the sampled subset, preserving the running-average
+invariant h_avg = (1/n) sum_i h_i.  See
+docs/algorithms.md#partial-participation--stochastic-gradients for the mask
+semantics and docs/wire_format.md for the payload layouts and bit accounting.
 """
 
 from __future__ import annotations
@@ -51,6 +60,7 @@ def compress_local(
     *,
     mode: str = "dense_psum",
     wire_dtype: str = "float32",
+    mask: Optional[jax.Array] = None,
 ) -> Tuple[PyTree, PyTree]:
     """d_i = C_i(grad_i - h_i); h_i <- h_i + lam d_i.
 
@@ -58,6 +68,12 @@ def compress_local(
     (mode=dense_psum) or the per-leaf wire-codec payload
     (mode=sparse_allgather; every compressor declares one -- see
     repro.distributed.wire).
+
+    ``mask`` is this worker's scalar participation indicator for the round
+    (federated mode, docs/algorithms.md): at mask = 0 the message is gated
+    to decode-zero (wire.LeafCodec.mask_message / a zeroed dense d_i) and
+    h_i stays STALE; at mask = 1 both gates are bitwise identities, and
+    ``mask=None`` (full participation) skips them entirely.
     """
     if mode not in AGG_MODES:
         raise ValueError(f"mode {mode!r} not in {AGG_MODES}")
@@ -76,12 +92,20 @@ def compress_local(
             # materialize the dense d_i in HBM.
             payload, h_leaf_new = wire.encode_update(
                 fmt.leaves[j], kj, g_leaf, h_leaf, algo.lam)
+            if mask is not None:
+                payload = fmt.leaves[j].mask_message(payload, mask)
             msgs.append(payload)
         else:
             delta = g_leaf - h_leaf
             d_leaf = algo.compressor(kj, delta)
-            msgs.append(d_leaf)
+            if mask is not None:
+                d_leaf_wire = d_leaf * jnp.asarray(mask, d_leaf.dtype)
+            else:
+                d_leaf_wire = d_leaf
+            msgs.append(d_leaf_wire)
             h_leaf_new = algo.worker_update(h_leaf, d_leaf)
+        if mask is not None:
+            h_leaf_new = jnp.where(mask > 0, h_leaf_new, h_leaf)
         h_new_leaves.append(h_leaf_new)
     h_local_new = jax.tree.unflatten(treedef, h_new_leaves)
     message = jax.tree.unflatten(treedef, msgs) if mode == "dense_psum" else msgs
@@ -137,12 +161,19 @@ def efbv_aggregate_reference(
     *,
     mode: str = "dense_psum",
     wire_dtype: str = "float32",
+    masks: Optional[jax.Array] = None,  # (n,) participation mask
 ) -> Tuple[PyTree, PyTree, PyTree]:
     n = jax.tree.leaves(grads_stacked)[0].shape[0]
-    msg, h_new = jax.vmap(
-        lambda k, g, h: compress_local(algo, k, g, h, mode=mode,
-                                       wire_dtype=wire_dtype)
-    )(keys, grads_stacked, h_stacked)
+    if masks is None:
+        msg, h_new = jax.vmap(
+            lambda k, g, h: compress_local(algo, k, g, h, mode=mode,
+                                           wire_dtype=wire_dtype)
+        )(keys, grads_stacked, h_stacked)
+    else:
+        msg, h_new = jax.vmap(
+            lambda k, g, h, m: compress_local(algo, k, g, h, mode=mode,
+                                              wire_dtype=wire_dtype, mask=m)
+        )(keys, grads_stacked, h_stacked, masks)
     g, h_avg_new = combine_global(algo, msg, h_avg, n_workers=n, mode=mode,
                                   wire_dtype=wire_dtype)
     return g, h_new, h_avg_new

@@ -29,6 +29,13 @@ differential harness (tests/harness.py) -- jnp oracle, fused Pallas kernel in
 interpret mode, and the same kernel compiled on TPU -- and the rand-k and
 QSGD codecs have their own fused kernels (kernels/pack.py) pinned the same
 way.  See docs/wire_format.md and docs/compressor_zoo.md.
+
+Federated rounds (per-round client sampling, docs/algorithms.md) gate
+messages through :meth:`LeafCodec.mask_message` -- an absent worker's
+payload decodes to exactly zero, a present worker's is bitwise untouched --
+and ``WireFormat.bits_per_round(participants=...)`` /
+:func:`federated_round_bits` account the variable-participant wire: an
+n-worker participation bitmap plus only the |S_t| sampled payloads.
 """
 
 from __future__ import annotations
@@ -39,6 +46,7 @@ from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 PyTree = Any
@@ -129,6 +137,25 @@ class LeafCodec:
     def encode(self, key: Optional[Array], delta: Array) -> Tuple[Array, ...]:
         """Flat f32 innovation -> payload tuple."""
         raise NotImplementedError
+
+    # -- partial participation ---------------------------------------------
+    def mask_message(self, payload: Sequence[Array], m: Array
+                     ) -> Tuple[Array, ...]:
+        """Gate a message on a participation mask: an absent worker's
+        (m = 0) payload must decode to exactly zero so the federated round's
+        decode-sum only sees the sampled subset S_t.
+
+        ``m`` broadcasts: a scalar gates one un-stacked message, an (n,)
+        mask gates the worker-stacked all-gather form.  Default: scale the
+        leading value-carrying component (sparse values / sign scale / QSGD
+        norm / dense stream) in ITS dtype, so m = 1 is a bitwise identity --
+        full participation stays bit-identical to the unmasked wire.
+        Codecs whose zero is a sentinel (NaturalPack) override.
+        """
+        head, *rest = payload
+        mm = jnp.asarray(m, head.dtype)
+        mm = mm.reshape(mm.shape + (1,) * (head.ndim - mm.ndim))
+        return (head * mm, *rest)
 
     def decode(self, payload: Sequence[Array]) -> Array:
         """One payload -> dense flat f32 (size,) vector, bit-equal to the
@@ -441,6 +468,14 @@ class NaturalPack(LeafCodec):
         sgn = jnp.where(unpack_bits(words, self.size), -1.0, 1.0)
         return jnp.where(exps == -128, 0.0, sgn * mag)
 
+    def mask_message(self, payload, m):
+        # zero is the sentinel exponent -128, not a scalable value: absent
+        # workers' streams are forced to the sentinel (m = 1 keeps exps as-is)
+        exps, words = payload
+        mm = jnp.asarray(m)
+        mm = mm.reshape(mm.shape + (1,) * (exps.ndim - mm.ndim))
+        return jnp.where(mm > 0, exps, jnp.int8(-128)), words
+
 
 # ---------------------------------------------------------------------------
 # dense codec (identity / m-nice / fallback)
@@ -491,10 +526,30 @@ class WireFormat:
             LeafWire(shape=tuple(l.shape), size=int(l.size), block=block, kb=kb)
             for l in jax.tree.leaves(tree)))
 
-    def bits_per_round(self, *, n_workers: int = 1) -> int:
+    def bits_per_round(self, *, n_workers: int = 1,
+                       participants: Optional[float] = None):
         """Exact uplink bits one round puts on the wire: per worker when
-        n_workers == 1 (the paper's per-node accounting), total otherwise."""
-        return n_workers * sum(l.payload_bits for l in self.leaves)
+        n_workers == 1 (the paper's per-node accounting), total otherwise.
+
+        ``participants`` switches to the variable-participant federated
+        round: an n-worker participation bitmap (whole uint32 words, like
+        every bitmap on this wire) plus only |S_t| payloads.  Pass the
+        concrete |S_t| for exact int bits of one round, or the expected
+        count p*n for the (possibly fractional) expected accounting.
+        """
+        per_worker = sum(l.payload_bits for l in self.leaves)
+        if participants is None:
+            return n_workers * per_worker
+        bits = 32 * bitmap_words(n_workers) + participants * per_worker
+        return int(bits) if float(participants).is_integer() else bits
+
+
+def federated_round_bits(fmt: "WireFormat", mask) -> int:
+    """Exact wire bits of one federated round given its concrete (n,) mask:
+    participation bitmap + the |S_t| sampled workers' payloads."""
+    m = np.asarray(mask)
+    return fmt.bits_per_round(n_workers=int(m.shape[0]),
+                              participants=int(m.sum()))
 
 
 def codec_of(compressor, shape: Tuple[int, ...], size: int,

@@ -7,7 +7,10 @@ Example (CPU, reduced config):
 
 On a real cluster the same entry point takes --arch <id> (full config) and
 --mesh 16x16 / 2x16x16.  The EF-BV layer is selected with --algo
-{efbv, ef21, diana, none} and --agg {dense_psum, sparse_allgather}.
+{efbv, ef21, diana, none} and --agg {dense_psum, sparse_allgather}; the
+federated execution mode with --participation {full, bernoulli:p, fixed:s}
+and --local-batch-resample (see
+docs/algorithms.md#partial-participation--stochastic-gradients).
 """
 
 from __future__ import annotations
@@ -32,7 +35,7 @@ import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import ARCHS, get_config, get_smoke_config
-from repro.core import EFBV, Identity, make_compressor
+from repro.core import EFBV, Identity, Participation, make_compressor
 from repro.data import SyntheticLM, make_batch_shardings
 from repro.launch.mesh import make_mesh, num_workers
 from repro.models import build_model
@@ -62,6 +65,17 @@ def parse_args(argv=None):
                     help="compressor spec for the server->worker model "
                          "broadcast (bidirectional compression, EF21-BC "
                          "style); empty = uncompressed broadcast")
+    ap.add_argument("--participation", default="full",
+                    help="per-round client sampling: full | bernoulli:p | "
+                         "fixed:s (federated execution mode; absent workers "
+                         "keep stale control variates)")
+    ap.add_argument("--local-batch-resample", action="store_true",
+                    help="stochastic local gradients: resample each worker's "
+                         "minibatch from a FIXED local shard every round "
+                         "instead of streaming fresh data")
+    ap.add_argument("--shard-size", type=int, default=64,
+                    help="sequences per worker shard for "
+                         "--local-batch-resample")
     ap.add_argument("--trainer", default="shard_map",
                     choices=["shard_map", "fsdp"])
     ap.add_argument("--seed", type=int, default=0)
@@ -92,18 +106,28 @@ def main(argv=None):
                        warmup_steps=max(args.steps // 20, 1))
     opt = adamw(sched, weight_decay=0.01)
 
+    participation = Participation.parse(args.participation)
+    if participation.kind == "fixed" and participation.s > n:
+        raise SystemExit(f"--participation fixed:{participation.s} needs at "
+                         f"least that many workers, mesh has {n}")
+    federated = not participation.is_full
     if args.algo == "none":
         algo = EFBV(Identity(), lam=1.0, nu=1.0)
     else:
         comp = make_compressor(args.compressor)
+        # federated rounds tune (lam, nu) for the effective compressor b*C,
+        # b ~ Bernoulli(E|S_t|/n) -- theory.tune_partial / docs/theory.md
         algo = EFBV.make(comp, d=max(cfg.d_model * max(cfg.d_ff, 1), 1), n=n,
-                         mode=args.algo)
+                         mode=args.algo,
+                         participation=participation.fraction(n) if federated
+                         else None)
     server_comp = make_compressor(args.server_comp) if args.server_comp else None
     if server_comp is not None and args.trainer == "fsdp":
         raise SystemExit("--server-comp requires --trainer shard_map")
     print(f"[train] arch={cfg.name} family={cfg.family} params~{cfg.param_count():,} "
           f"workers={n} algo={args.algo} lam={algo.lam:.4g} nu={algo.nu:.4g} "
           f"agg={args.agg}"
+          + (f" participation={args.participation}" if federated else "")
           + (f" server_comp={args.server_comp}" if server_comp else ""))
 
     key = jax.random.key(args.seed)
@@ -123,6 +147,13 @@ def main(argv=None):
         print(f"[train] wire: codec={','.join(kinds)} {up} bits/round/worker "
               f"uplink ({up / 8 / 2**20:.2f} MiB, "
               f"{up / max(dense, 1):.4f}x dense fp32)")
+        if federated:
+            exp_s = participation.fraction(n) * n
+            fed = fmt.bits_per_round(n_workers=n, participants=exp_s)
+            full = fmt.bits_per_round(n_workers=n)
+            print(f"[train] wire: federated round (mask bitmap + E|S_t|={exp_s:g}"
+                  f" of {n} payloads) ~{fed / 8 / 2**20:.2f} MiB total "
+                  f"({fed / max(full, 1):.3f}x the full-participation round)")
     if args.trainer == "fsdp":
         from repro.train import fsdp_state_shardings
         shardings = fsdp_state_shardings(mesh, model.param_specs(), state)
@@ -132,7 +163,9 @@ def main(argv=None):
 
     data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq,
                        global_batch=args.global_batch, n_workers=n,
-                       seed=args.seed, heterogeneity=args.heterogeneity)
+                       seed=args.seed, heterogeneity=args.heterogeneity,
+                       resample_from_shard=args.local_batch_resample,
+                       shard_size=args.shard_size)
 
     def loss_fn(p, batch):
         return model.loss(p, batch)
@@ -141,11 +174,13 @@ def main(argv=None):
         from repro.train import make_train_step_fsdp
         step_fn = make_train_step_fsdp(loss_fn, opt, algo, mesh,
                                        agg_mode=args.agg,
-                                       wire_dtype=args.wire_dtype)
+                                       wire_dtype=args.wire_dtype,
+                                       participation=participation)
     else:
         step_fn = make_train_step(loss_fn, opt, algo, mesh, agg_mode=args.agg,
                                   wire_dtype=args.wire_dtype,
-                                  server_comp=server_comp)
+                                  server_comp=server_comp,
+                                  participation=participation)
 
     t_start = time.time()
     for step in range(args.steps):
@@ -163,9 +198,11 @@ def main(argv=None):
         state, metrics = step_fn(state, batch, jax.random.fold_in(key, step))
         if step % args.log_every == 0 or step == args.steps - 1:
             m = {k: float(v) for k, v in metrics.items()}
+            part_str = f"|S|={int(m['participants'])}/{n} " \
+                if "participants" in m else ""
             print(f"[train] step {step:5d} loss={m['loss']:.4f} "
                   f"|g|={m['g_norm']:.3f} |upd|={m['update_norm']:.4f} "
-                  f"h_res={m['h_residual']:.3f} "
+                  f"h_res={m['h_residual']:.3f} {part_str}"
                   f"({(time.time()-t_start)/(step+1):.2f}s/step)")
         if args.ckpt_dir and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
             save_checkpoint(args.ckpt_dir, step + 1, {"params": state.params})

@@ -114,6 +114,20 @@ class LogReg:
         """Per-worker gradients, shape (n, d) -- what EF-BV compresses."""
         return jax.vmap(lambda A, b: jax.grad(self._loss_one)(x, A, b))(self.A, self.b)
 
+    def minibatch_grads(self, key: Array, x: Array, batch: int) -> Array:
+        """Per-worker STOCHASTIC gradients, shape (n, d): each worker draws a
+        uniform (with replacement) minibatch of ``batch`` samples from its own
+        shard, the federated stochastic-gradient regime of run_federated.
+        Unbiased: E over the draw equals :meth:`grads`."""
+        Ni = self.A.shape[1]
+        keys = jax.random.split(key, self.n)
+
+        def one(k, A, b):
+            idx = jax.random.randint(k, (batch,), 0, Ni)
+            return jax.grad(self._loss_one)(x, A[idx], b[idx])
+
+        return jax.vmap(one)(keys, self.A, self.b)
+
     def grad(self, x: Array) -> Array:
         return jnp.mean(self.grads(x), axis=0)
 

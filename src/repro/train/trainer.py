@@ -13,6 +13,12 @@ This is the integration point of the paper into the framework, in two phases
 
 Per-worker control variates h_i live in the TrainState with a leading worker
 axis sharded over (pod, data); inside phase 1 each worker sees its own h_i.
+
+The federated execution mode (``participation=``) samples a per-round worker
+mask before phase 1 and threads it through the shard_map as a worker-sharded
+(n,) array: sampled workers run Algorithm 1 unchanged, absent workers' wire
+messages are gated to decode-zero and their h_i stay stale -- see
+docs/algorithms.md#partial-participation--stochastic-gradients.
 """
 
 from __future__ import annotations
@@ -25,7 +31,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.core.contract import Compressor
-from repro.core.efbv import EFBV
+from repro.core.efbv import EFBV, Participation, participation_key
 from repro.distributed.aggregate import combine_global, compress_local
 from repro.distributed.spec import (
     batch_spec, linear_worker_index, stack_worker_spec, to_named_sharding,
@@ -97,6 +103,7 @@ def make_train_step(
     wire_dtype: str = "float32",
     remat: bool = False,
     server_comp: Optional[Compressor] = None,
+    participation: Optional[Participation] = None,
 ) -> Callable[[TrainState, Any, jax.Array], Tuple[TrainState, dict]]:
     """Build the jitted multi-pod train step.
 
@@ -113,9 +120,18 @@ def make_train_step(
     of the model, and the server broadcasts the compressed model innovation
     C_s(x^{t+1} - x_hat^t) instead of x^{t+1}.  Requires a TrainState built
     with ``init_train_state(..., bidirectional=True)``.
+
+    ``participation`` switches on the federated execution mode
+    (docs/algorithms.md#partial-participation--stochastic-gradients): each
+    round samples a worker mask from fold_in(step_key, PARTICIPATION_FOLD)
+    OUTSIDE phase 1 (so the reference and sharded paths draw the same
+    subset) and threads it through the shard_map as a worker-sharded (n,)
+    array; absent workers' messages are gated to decode-zero and their h_i
+    stay stale.  None / 'full' keeps the original unmasked code path.
     """
     waxes = worker_axes(mesh)
     n = num_workers(mesh)
+    federated = participation is not None and not participation.is_full
 
     if remat:
         loss_fn = jax.checkpoint(loss_fn)
@@ -123,12 +139,12 @@ def make_train_step(
     # ---- phase 1: worker-local grad + compress (manual over worker axes) ----
     # One body shared by both phase-1 formulations below, so the shard_map
     # and vmap paths cannot drift apart.
-    def worker_body(params_for_grad, h_i, batch_i, kw):
+    def worker_body(params_for_grad, h_i, batch_i, kw, m=None):
         (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             params_for_grad, batch_i)
         grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
         message, h_i_new = compress_local(algo, kw, grads, h_i, mode=agg_mode,
-                                          wire_dtype=wire_dtype)
+                                          wire_dtype=wire_dtype, mask=m)
         local_metrics = {
             "loss": loss,
             "grad_norm": global_norm(grads),
@@ -138,7 +154,7 @@ def make_train_step(
         }
         return message, h_i_new, local_metrics
 
-    def local_phase(params, h, batch, key):
+    def local_phase(params, h, batch, key, mask=None):
         widx = linear_worker_index(mesh)
         kw = jax.random.fold_in(key, widx)
 
@@ -148,8 +164,9 @@ def make_train_step(
         # axes -- giving sum_i grad f_i instead of this worker's grad f_i.
         params_v = compat.pcast_varying(params, tuple(waxes))
         h_loc = jax.tree.map(lambda a: a[0], h)
+        m = None if mask is None else mask[0]
         message, h_loc_new, local_metrics = worker_body(
-            params_v, h_loc, batch, kw)
+            params_v, h_loc, batch, kw, m)
         # stack everything on the worker axis
         stack = lambda t: jax.tree.map(lambda a: a[None], t)
         return stack(message), stack(h_loc_new), stack(local_metrics)
@@ -164,15 +181,18 @@ def make_train_step(
     use_shard_map = compat.HAS_PARTIAL_AUTO_SHARD_MAP or model_size == 1
 
     if use_shard_map:
+        base_in_specs = (P(), P(waxes), batch_spec(mesh), P())
         local_sharded = compat.shard_map(
             local_phase,
             mesh=mesh,
-            in_specs=(P(), P(waxes), batch_spec(mesh), P()),
+            # the (n,) participation mask rides in worker-sharded: inside the
+            # manual region each worker sees its own scalar mask bit
+            in_specs=base_in_specs + ((P(waxes),) if federated else ()),
             out_specs=(P(waxes), P(waxes), P(waxes)),
             manual_axes=waxes,
         )
     else:
-        def local_sharded(params, h, batch, key):
+        def local_sharded(params, h, batch, key, mask=None):
             wb = jax.tree.map(
                 lambda a: a.reshape((n, a.shape[0] // n) + a.shape[1:]), batch)
             wb = jax.lax.with_sharding_constraint(
@@ -182,14 +202,29 @@ def make_train_step(
                 return worker_body(params, h_i, wbatch,
                                    jax.random.fold_in(key, i))
 
-            return jax.vmap(one_worker)(jnp.arange(n), h, wb)
+            if mask is None:
+                return jax.vmap(one_worker)(jnp.arange(n), h, wb)
+
+            def one_worker_masked(i, h_i, wbatch, m):
+                return worker_body(params, h_i, wbatch,
+                                   jax.random.fold_in(key, i), m)
+
+            return jax.vmap(one_worker_masked)(jnp.arange(n), h, wb, mask)
 
     # ---- full step: phase 1 + phase 2 under one jit ---------------------------
     def train_step(state: TrainState, batch, key):
         # under bidirectional compression workers only ever see x_hat
         eval_params = state.x_hat if server_comp is not None else state.params
-        message, h_new, local_metrics = local_sharded(
-            eval_params, state.h, batch, key)
+        if federated:
+            # sampled OUTSIDE phase 1 so reference and sharded paths draw the
+            # identical subset S_t from the identical key
+            mask = participation.sample_mask(participation_key(key), n)
+            message, h_new, local_metrics = local_sharded(
+                eval_params, state.h, batch, key, mask)
+        else:
+            mask = None
+            message, h_new, local_metrics = local_sharded(
+                eval_params, state.h, batch, key)
 
         g, h_avg_new = combine_global(
             algo, message, state.h_avg, n_workers=n, mode=agg_mode,
@@ -201,6 +236,8 @@ def make_train_step(
         metrics = {k: jnp.mean(v, axis=0) for k, v in local_metrics.items()}
         metrics["g_norm"] = global_norm(g)
         metrics["update_norm"] = global_norm(updates)
+        if federated:
+            metrics["participants"] = jnp.sum(mask)
 
         x_hat = state.x_hat
         if server_comp is not None:
@@ -288,12 +325,15 @@ def make_train_step_fsdp(
     *,
     agg_mode: str = "dense_psum",
     wire_dtype: str = "float32",
+    participation: Optional[Participation] = None,
 ) -> Callable[[TrainState, Any, jax.Array], Tuple[TrainState, dict]]:
     """Pure-GSPMD train step: vmap over the worker axis for per-worker grads,
     FSDP-sharded params/optimizer state, same EF-BV wire as the shard_map
-    trainer (compress_local / combine_global are shared)."""
+    trainer (compress_local / combine_global are shared, incl. the federated
+    participation masking)."""
     waxes = worker_axes(mesh)
     n = num_workers(mesh)
+    federated = participation is not None and not participation.is_full
 
     def worker_grads(params, batch, key):
         # batch leaves: (B, ...) -> (n, B/n, ...) worker-major
@@ -316,10 +356,17 @@ def make_train_step_fsdp(
         # pin the stacked grads to (worker, model)-sharding
         gspec = stack_worker_spec(mesh, jax.tree.map(
             lambda g: P(*([None] * (g.ndim - 1))), state.h_avg))
-        message, h_new = jax.vmap(
-            lambda k, g, h: compress_local(algo, k, g, h, mode=agg_mode,
-                                           wire_dtype=wire_dtype)
-        )(keys, grads, state.h)
+        if federated:
+            mask = participation.sample_mask(participation_key(key), n)
+            message, h_new = jax.vmap(
+                lambda k, g, h, m: compress_local(algo, k, g, h, mode=agg_mode,
+                                                  wire_dtype=wire_dtype, mask=m)
+            )(keys, grads, state.h, mask)
+        else:
+            message, h_new = jax.vmap(
+                lambda k, g, h: compress_local(algo, k, g, h, mode=agg_mode,
+                                               wire_dtype=wire_dtype)
+            )(keys, grads, state.h)
         g, h_avg_new = combine_global(algo, message, state.h_avg,
                                       n_workers=n, mode=agg_mode,
                                       wire_dtype=wire_dtype)
@@ -332,6 +379,8 @@ def make_train_step_fsdp(
                        lambda gi, hi: global_norm(jax.tree.map(
                            lambda a, b: a - b, gi, hi)))(grads, h_new)),
                    **{k: jnp.mean(v) for k, v in aux.items()}}
+        if federated:
+            metrics["participants"] = jnp.sum(mask)
         new_state = TrainState(params=params, opt_state=opt_state, h=h_new,
                                h_avg=h_avg_new, step=state.step + 1)
         return new_state, metrics

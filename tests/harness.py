@@ -15,8 +15,9 @@ one swapped tie -- is a bug, and equality composes over steps: if round t is
 bit-equal, round t+1 sees identical inputs.  ``run_wire_trajectory`` drives
 the block-top-k pipeline; ``run_codec_trajectory`` drives ANY compressor
 through its declared codec (tests/test_wire.py and tests/test_wire_codecs.py
-parametrize over the zoo); test_distributed.py reuses run_with_devices for
-the 1-vs-8-fake-device leg.
+parametrize over the zoo); ``run_federated_trajectory`` adds randomized
+per-round participation masks on top (tests/test_federated.py);
+test_distributed.py reuses run_with_devices for the 1-vs-8-fake-device leg.
 """
 
 from __future__ import annotations
@@ -139,6 +140,61 @@ def run_codec_trajectory(kernel: str, *, compressor, steps: int, n: int,
         hs.append(h)
     return {"x": jnp.stack(xs), "h": jnp.stack(hs), "payload": payload,
             "codec": codec}
+
+
+def run_federated_trajectory(kernel: str, *, compressor, steps: int, n: int,
+                             d: int, lam: float, nu: float, gamma: float,
+                             participation, seed: int = 0,
+                             wire_dtype: str = "float32") -> Dict[str, Array]:
+    """EF-BV over a compressor's wire codec under per-round client sampling.
+
+    Same recursion as :func:`run_codec_trajectory` plus the federated gating:
+    each round draws a participation mask (Participation.sample_mask from the
+    shared participation_key derivation), every worker still encodes with the
+    requested pack backend, then absent workers' payloads are gated to
+    decode-zero (codec.mask_message) and their h_i kept stale -- exactly the
+    masked sparse_allgather data path.  With an all-ones mask (bernoulli
+    p = 1) the trajectory is bit-identical to run_codec_trajectory's;
+    randomized masks extend the oracle==interpret==compiled pinning to the
+    federated regime.  Returns the (x, h) trajectory, the per-round masks and
+    the exact federated wire bits of the last round.
+    """
+    from repro.core.efbv import participation_key
+
+    codec = wire.codec_of(compressor, (d,), d, wire_dtype)
+    grad_fn = quadratic_grads(n, d, seed)
+    key = jax.random.key(seed + 0xC0DEC)
+
+    x = jnp.zeros((d,), jnp.float32)
+    h = jnp.zeros((n, d), jnp.float32)
+    h_avg = jnp.zeros((d,), jnp.float32)
+    xs, hs, masks = [], [], []
+    payload = None
+    for t in range(steps):
+        kt = jax.random.fold_in(key, t)
+        mask = participation.sample_mask(participation_key(kt), n)
+        g = grad_fn(x)
+        payloads, h_i = [], []
+        for i in range(n):
+            ki = jax.random.fold_in(kt, i)
+            p, h_new = wire.encode_update(codec, ki, g[i], h[i], lam,
+                                          kernel=kernel)
+            p = codec.mask_message(p, mask[i])
+            h_new = jnp.where(mask[i] > 0, h_new, h[i])
+            payloads.append(p)
+            h_i.append(h_new)
+        h = jnp.stack(h_i)
+        payload = jax.tree.map(lambda *xs_: jnp.stack(xs_), *payloads)
+        d_bar = codec.decode_sum(payload) / n
+        x = x - gamma * (h_avg + nu * d_bar)
+        h_avg = h_avg + lam * d_bar
+        xs.append(x)
+        hs.append(h)
+        masks.append(mask)
+    fmt = wire.WireFormat((codec,))
+    return {"x": jnp.stack(xs), "h": jnp.stack(hs), "payload": payload,
+            "masks": jnp.stack(masks), "codec": codec,
+            "round_bits": wire.federated_round_bits(fmt, masks[-1])}
 
 
 def assert_bit_identical(a, b, context: str = ""):

@@ -139,6 +139,131 @@ def test_per_worker_gradients_8dev():
 
 
 @pytest.mark.slow
+def test_federated_trainer_matches_oracle_8dev():
+    """The federated differential leg: the shard_map trainer under a
+    RANDOMIZED bernoulli:0.5 participation trajectory matches the vmap
+    oracle (efbv_aggregate_reference with the same masks/keys) step for
+    step, in both wire modes -- and the sampled subsets are genuinely
+    partial."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.core import EFBV, BlockTopK, Participation
+        from repro.core.efbv import participation_key
+        from repro.distributed.aggregate import efbv_aggregate_reference
+        from repro.optim import sgd, constant
+        from repro.train import make_train_step, init_train_state, train_state_shardings
+
+        mesh = jax.make_mesh((4, 1), ("data", "model"))
+        n, D, lr = 4, 32, 0.2
+        key = jax.random.key(0)
+        # numpy-held so the train step's donated buffers can't delete the
+        # oracle's copy of the initial point
+        params = {"w": np.asarray(jax.random.normal(key, (D,)) * 0.1)}
+        specs = {"w": P(None)}
+
+        def loss_fn(p, batch):
+            # worker i's local objective: 0.5||w - mean_rows(x_i)||^2,
+            # grad = w - xbar_i (exactly computable for the oracle)
+            xbar = jnp.mean(batch["x"], 0)
+            return 0.5 * jnp.sum((p["w"] - xbar) ** 2), {}
+
+        algo = EFBV(BlockTopK(8, 2), lam=0.6, nu=0.9)
+        part = Participation.parse("bernoulli:0.5")
+        opt = sgd(constant(lr))
+        for mode in ["dense_psum", "sparse_allgather"]:
+            st = init_train_state(params, opt, mesh)
+            sh = train_state_shardings(mesh, specs, st)
+            st = jax.tree.map(lambda x, s: jax.device_put(x, s), st, sh)
+            step = make_train_step(loss_fn, opt, algo, mesh, agg_mode=mode,
+                                   participation=part)
+            w = jnp.asarray(params["w"])
+            h = jnp.zeros((n, D)); h_avg = jnp.zeros(D)
+            sampled = 0
+            for i in range(20):
+                kb = jax.random.fold_in(jax.random.key(42), i)
+                x = jax.random.normal(kb, (16, D))
+                batch = {"x": jax.device_put(x, NamedSharding(mesh, P("data")))}
+                ki = jax.random.fold_in(key, i)
+                st, m = step(st, batch, ki)
+                # the oracle redraws the SAME mask and worker keys
+                mask = part.sample_mask(participation_key(ki), n)
+                sampled += int(mask.sum())
+                assert int(m["participants"]) == int(mask.sum())
+                grads = w[None] - x.reshape(n, 4, D).mean(1)
+                wkeys = jax.vmap(lambda j: jax.random.fold_in(ki, j))(
+                    jnp.arange(n))
+                g, h, h_avg = efbv_aggregate_reference(
+                    algo, wkeys, grads, h, h_avg, mode=mode, masks=mask)
+                w = w - lr * g
+                np.testing.assert_allclose(np.asarray(st.params["w"]),
+                                           np.asarray(w), rtol=1e-6, atol=1e-6)
+                np.testing.assert_allclose(np.asarray(st.h["w"]),
+                                           np.asarray(h), rtol=1e-6, atol=1e-6)
+                np.testing.assert_allclose(np.asarray(st.h_avg["w"]),
+                                           np.asarray(h_avg), rtol=1e-6,
+                                           atol=1e-6)
+            assert 0 < sampled < 20 * n, sampled  # genuinely partial rounds
+            print(mode, "ok, sampled", sampled, "/", 20 * n)
+        print("FED_ORACLE_MATCH")
+    """, n_devices=8)
+    assert "FED_ORACLE_MATCH" in out
+
+
+@pytest.mark.slow
+def test_federated_full_participation_bit_identical_8dev():
+    """participation=bernoulli:1.0 (and fixed:n) must leave the trainer on
+    the unmasked code path: params/h after several steps are BIT-identical
+    to a participation=None run."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.core import EFBV, BlockTopK, Participation
+        from repro.optim import sgd, constant
+        from repro.train import make_train_step, init_train_state, train_state_shardings
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        key = jax.random.key(0)
+        D, H = 16, 32
+        params = {"w1": jax.random.normal(key, (D, H)) * 0.1,
+                  "w2": jax.random.normal(key, (H, D)) * 0.1}
+        specs = {"w1": P(None, "model"), "w2": P("model", None)}
+
+        def loss_fn(p, batch):
+            pred = jnp.tanh(batch["x"] @ p["w1"]) @ p["w2"]
+            return jnp.mean((pred - batch["y"]) ** 2), {}
+
+        algo = EFBV.make(BlockTopK(16, 4), d=D * H, n=4)
+        opt = sgd(constant(0.05))
+        finals = {}
+        for part in [None, Participation.parse("bernoulli:1.0"),
+                     Participation.parse("fixed:4")]:
+            st = init_train_state(params, opt, mesh)
+            sh = train_state_shardings(mesh, specs, st)
+            st = jax.tree.map(lambda x, s: jax.device_put(x, s), st, sh)
+            step = make_train_step(loss_fn, opt, algo, mesh,
+                                   agg_mode="sparse_allgather",
+                                   participation=part)
+            for i in range(10):
+                kb = jax.random.fold_in(jax.random.key(42), i)
+                x = jax.random.normal(kb, (16, D)); y = x * 0.3
+                batch = {"x": jax.device_put(x, NamedSharding(mesh, P("data"))),
+                         "y": jax.device_put(y, NamedSharding(mesh, P("data")))}
+                st, m = step(st, batch, jax.random.fold_in(key, i))
+            finals[str(part)] = (np.asarray(st.params["w1"]),
+                                 np.asarray(st.h["w1"]))
+        ref = finals["None"]
+        for name, got in finals.items():
+            np.testing.assert_array_equal(got[0], ref[0], err_msg=name)
+            np.testing.assert_array_equal(got[1], ref[1], err_msg=name)
+        print("FED_FULL_BITWISE")
+    """, n_devices=8)
+    assert "FED_FULL_BITWISE" in out
+
+
+@pytest.mark.slow
 def test_mini_dryrun_lowering_16dev():
     """dryrun-style lower+compile on a 4x4 mini-mesh with a smoke config:
     proves the (pod,data,model) sharding machinery end to end, cheaply."""

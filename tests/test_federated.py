@@ -1,0 +1,362 @@
+"""Federated execution mode: per-round client sampling + stochastic local
+gradients (docs/algorithms.md#partial-participation--stochastic-gradients).
+
+Two families of guarantees are pinned here:
+
+* full participation is a *bitwise* no-op: every masked op (m * d,
+  where(m > 0, h', h), codec.mask_message) reduces to its unmasked twin at
+  m = 1, so p = 1 trajectories equal the pre-federated ones exactly;
+* under randomized masks the algebraic invariants hold (absent workers'
+  h_i verbatim stale, h_avg = (1/n) sum h_i preserved, dense/sparse wire
+  agreement) and the differential harness extends the
+  oracle == interpret pinning of the fused kernels to random-participation
+  trajectories.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from harness import (assert_bit_identical, codec_impls, quadratic_grads,
+                     run_codec_trajectory, run_federated_trajectory)
+from repro.core import (
+    BlockTopK, EFBV, Natural, Participation, QSGD, RandK, SignNorm, TopK,
+    run, run_federated, theory, tune, tune_for, tune_partial,
+)
+from repro.core.compressors import MNice
+from repro.core.efbv import participation_key
+from repro.distributed import wire
+from repro.distributed.aggregate import efbv_aggregate_reference
+from repro.problems import LogReg, make_synthetic
+
+KEY = jax.random.key(0)
+
+
+# ---------------------------------------------------------------------------
+# Participation specs and masks
+# ---------------------------------------------------------------------------
+
+def test_participation_parse_and_masks():
+    full = Participation.parse("full")
+    assert full.is_full and full.fraction(8) == 1.0
+    assert Participation.parse("bernoulli:1.0").is_full
+
+    fx = Participation.parse("fixed:3")
+    m = fx.sample_mask(KEY, 8)
+    assert m.dtype == jnp.float32 and m.shape == (8,)
+    assert float(m.sum()) == 3.0
+    assert fx.fraction(8) == 3 / 8
+
+    bp = Participation.parse("bernoulli:0.5")
+    masks = jax.vmap(lambda k: bp.sample_mask(k, 16))(
+        jax.random.split(KEY, 64))
+    assert set(np.unique(np.asarray(masks))) <= {0.0, 1.0}
+    assert 0.3 < float(masks.mean()) < 0.7  # ~p on average
+    assert bp.fraction(16) == 0.5
+
+    with pytest.raises(ValueError):
+        Participation.parse("bernoulli:0.0")
+    with pytest.raises(ValueError):
+        Participation.parse("fixed:0")
+    with pytest.raises(ValueError):
+        Participation.parse("sometimes")
+    with pytest.raises(ValueError):
+        Participation.parse("fixed:9").sample_mask(KEY, 8)
+
+
+# ---------------------------------------------------------------------------
+# full participation == existing trajectories, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_step_federated_full_mask_is_bitwise_step():
+    grad_fn = quadratic_grads(8, 16)
+    algo = EFBV(TopK(3), lam=0.7, nu=0.9)
+    x = jnp.zeros(16)
+    st_a = st_b = algo.init(x, 8)
+    ones = jnp.ones((8,), jnp.float32)
+    for t in range(6):
+        k = jax.random.fold_in(KEY, t)
+        g_a, st_a = algo.step(k, grad_fn(x), st_a)
+        g_b, st_b = algo.step_federated(k, grad_fn(x), st_b, ones)
+        assert_bit_identical(g_a, g_b, f"g @ {t}")
+        assert_bit_identical(tuple(st_a), tuple(st_b), f"state @ {t}")
+        x = x - 0.05 * g_a
+
+
+def test_run_federated_full_equals_run_bitwise():
+    grad_fn = quadratic_grads(8, 16, seed=3)
+    algo = EFBV(RandK(4), lam=0.5, nu=0.8)
+    x_a, st_a, m_a = run(algo=algo, grad_fn=grad_fn, x0=jnp.zeros(16),
+                         gamma=0.03, steps=25, key=KEY, n=8,
+                         record=lambda x: jnp.sum(x * x))
+    x_b, st_b, m_b = run_federated(
+        algo=algo, grad_fn=lambda k, x: grad_fn(x), x0=jnp.zeros(16),
+        gamma=0.03, steps=25, key=KEY, n=8,
+        participation=Participation.parse("full"),
+        record=lambda x: jnp.sum(x * x))
+    assert_bit_identical(x_a, x_b, "x")
+    assert_bit_identical(tuple(st_a), tuple(st_b), "state")
+    assert_bit_identical(m_a, m_b, "metrics")
+
+
+@pytest.mark.parametrize("mode", ["dense_psum", "sparse_allgather"])
+@pytest.mark.parametrize("comp", [BlockTopK(16, 4), TopK(5), QSGD(16),
+                                  Natural(), SignNorm()],
+                         ids=["block_topk", "topk", "qsgd", "natural", "sign"])
+def test_masked_aggregate_all_ones_is_bitwise_unmasked(mode, comp):
+    """masks=ones must take the gated code path and still match mask=None
+    exactly -- the m = 1 bitwise-identity claim, per codec."""
+    n, d = 4, 96
+    algo = EFBV(comp, lam=0.8, nu=0.9)
+    grads = jax.random.normal(KEY, (n, d))
+    h = jax.random.normal(jax.random.fold_in(KEY, 1), (n, d)) * 0.1
+    h_avg = jnp.mean(h, 0)
+    keys = jax.random.split(KEY, n)
+    ref = efbv_aggregate_reference(algo, keys, grads, h, h_avg, mode=mode)
+    got = efbv_aggregate_reference(algo, keys, grads, h, h_avg, mode=mode,
+                                   masks=jnp.ones((n,), jnp.float32))
+    assert_bit_identical(ref, got, f"{mode}/{comp}")
+
+
+# ---------------------------------------------------------------------------
+# randomized masks: stale-h semantics, invariants, wire agreement
+# ---------------------------------------------------------------------------
+
+def test_absent_workers_keep_stale_h_and_invariant():
+    n, d = 8, 16
+    grad_fn = quadratic_grads(n, d, seed=1)
+    algo = EFBV(TopK(4), lam=0.6, nu=0.8)
+    part = Participation.parse("bernoulli:0.5")
+    x = jnp.zeros(d)
+    st = algo.init(x, n)
+    for t in range(8):
+        k = jax.random.fold_in(KEY, t)
+        mask = part.sample_mask(participation_key(k), n)
+        h_before = st.h
+        g, st = algo.step_federated(k, grad_fn(x), st, mask)
+        # absent workers: h_i verbatim stale
+        for i in range(n):
+            if float(mask[i]) == 0.0:
+                np.testing.assert_array_equal(np.asarray(st.h[i]),
+                                              np.asarray(h_before[i]))
+        # master invariant: h_avg tracks (1/n) sum_i h_i through sampling
+        np.testing.assert_allclose(np.asarray(jnp.mean(st.h, 0)),
+                                   np.asarray(st.h_avg), rtol=1e-5, atol=1e-6)
+        x = x - 0.05 * g
+
+
+@pytest.mark.parametrize("comp", [BlockTopK(16, 4), TopK(5), QSGD(16),
+                                  Natural(), SignNorm()],
+                         ids=["block_topk", "topk", "qsgd", "natural", "sign"])
+def test_masked_wire_modes_agree(comp):
+    """Random mask: the dense all-reduce and the masked sparse wire produce
+    the same aggregate and the same (stale-gated) control variates."""
+    n, d = 8, 96
+    algo = EFBV(comp, lam=0.7, nu=0.9)
+    grads = jax.random.normal(KEY, (n, d))
+    h = jnp.zeros((n, d))
+    h_avg = jnp.zeros(d)
+    keys = jax.random.split(KEY, n)
+    mask = Participation.parse("fixed:3").sample_mask(jax.random.key(7), n)
+    outs = {m: efbv_aggregate_reference(algo, keys, grads, h, h_avg, mode=m,
+                                        masks=mask)
+            for m in ["dense_psum", "sparse_allgather"]}
+    for a, b in zip(jax.tree.leaves(outs["dense_psum"]),
+                    jax.tree.leaves(outs["sparse_allgather"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+@pytest.mark.parametrize("comp", [BlockTopK(128, 8), RandK(16), QSGD(16)],
+                         ids=["block_topk", "randk", "qsgd"])
+def test_federated_trajectory_backends_bit_identical(comp):
+    """The differential harness over RANDOMIZED participation: every pack
+    backend (jnp oracle, Pallas interpret; compiled on TPU) produces the
+    bit-identical federated trajectory."""
+    part = Participation.parse("bernoulli:0.5")
+    codec = wire.codec_of(comp, (256,), 256)
+    runs = {impl: run_federated_trajectory(
+        impl, compressor=comp, steps=4, n=4, d=256, lam=0.6, nu=0.8,
+        gamma=0.05, participation=part) for impl in codec_impls(codec)}
+    ref = runs.pop("oracle")
+    assert 0.0 < float(ref["masks"].mean()) < 1.0  # genuinely partial
+    for impl, out in runs.items():
+        assert_bit_identical({"x": ref["x"], "h": ref["h"]},
+                             {"x": out["x"], "h": out["h"]}, impl)
+        assert_bit_identical(ref["masks"], out["masks"], impl)
+
+
+def test_federated_trajectory_p1_pins_existing_harness():
+    """p = 1 federated trajectory == the pre-federated codec trajectory."""
+    comp = QSGD(16)
+    a = run_codec_trajectory("oracle", compressor=comp, steps=5, n=4, d=256,
+                             lam=0.6, nu=0.8, gamma=0.05)
+    b = run_federated_trajectory("oracle", compressor=comp, steps=5, n=4,
+                                 d=256, lam=0.6, nu=0.8, gamma=0.05,
+                                 participation=Participation.parse("bernoulli:1.0"))
+    assert_bit_identical({"x": a["x"], "h": a["h"]},
+                         {"x": b["x"], "h": b["h"]}, "p=1")
+
+
+def test_federated_round_bits_accounting():
+    """Wire bits of a federated round: whole-word mask bitmap + exactly
+    |S_t| payloads."""
+    fmt = wire.format_for(BlockTopK(16, 4), jnp.zeros(96))
+    per = fmt.bits_per_round()
+    assert fmt.bits_per_round(n_workers=8) == 8 * per
+    assert fmt.bits_per_round(n_workers=8, participants=3) == 32 + 3 * per
+    # 40 workers -> two uint32 bitmap words
+    assert fmt.bits_per_round(n_workers=40, participants=5) == 64 + 5 * per
+    mask = np.array([1, 0, 1, 0, 0, 0, 1, 0], np.float32)
+    assert wire.federated_round_bits(fmt, mask) == 32 + 3 * per
+    # expected (fractional) accounting for bernoulli
+    exp = fmt.bits_per_round(n_workers=8, participants=0.5 * 8)
+    assert exp == 32 + 4 * per
+
+
+def test_mask_message_zeroes_decode_for_all_codecs():
+    for comp in [BlockTopK(16, 4), TopK(5), RandK(9), QSGD(16), Natural(),
+                 SignNorm()]:
+        codec = wire.codec_of(comp, (96,), 96)
+        payload = codec.encode(jax.random.key(5),
+                               jax.random.normal(KEY, (96,)))
+        gated = codec.mask_message(payload, jnp.float32(0.0))
+        np.testing.assert_array_equal(np.asarray(codec.decode(gated)),
+                                      np.zeros(96), err_msg=str(comp))
+        kept = codec.mask_message(payload, jnp.float32(1.0))
+        assert_bit_identical(tuple(payload), tuple(kept), str(comp))
+
+
+def test_joint_compressor_rejects_participation_mask():
+    algo = EFBV(MNice(4, 2), lam=1.0, nu=1.0)
+    st = algo.init(jnp.zeros(8), 4)
+    with pytest.raises(ValueError):
+        algo.step_federated(KEY, jnp.zeros((4, 8)), st, jnp.ones(4))
+
+
+# ---------------------------------------------------------------------------
+# sampled-regime tuning (theory.tune_partial)
+# ---------------------------------------------------------------------------
+
+def test_participation_constants():
+    # p = 1: participation is a no-op on the certified constants
+    assert theory.participation_eta(1.0, 0.3) == 0.3
+    assert theory.participation_omega(1.0, 0.3, 2.0) == 2.0
+    # p -> small: bias approaches 1 (mostly skipping), still < 1
+    assert abs(theory.participation_eta(0.01, 0.0) - 0.99) < 1e-12
+    assert theory.participation_eta(0.01, 0.5) < 1.0
+    # contractive-only compressor gains variance from the sampling itself
+    assert theory.participation_omega(0.5, 0.5, 0.0) == 0.5 * 0.5 * 2.25
+    with pytest.raises(ValueError):
+        theory.participation_eta(0.0, 0.3)
+    with pytest.raises(ValueError):
+        theory.participation_omega(1.5, 0.3, 1.0)
+
+
+def test_tune_partial_reduces_to_tune_at_p1():
+    t0 = tune(0.4, 3.0, n=64, L=1.0, Ltilde=1.2, mu=0.1)
+    t1 = tune_partial(0.4, 3.0, 1.0, n=64, L=1.0, Ltilde=1.2, mu=0.1)
+    assert t0 == t1
+
+
+def test_tune_partial_gamma_monotone_in_p():
+    gammas = [tune_partial(0.3, 2.0, p, n=100, L=1.0, Ltilde=1.0).gamma
+              for p in [1.0, 0.75, 0.5, 0.25, 0.1]]
+    assert all(a >= b - 1e-15 for a, b in zip(gammas, gammas[1:])), gammas
+    assert all(g > 0 for g in gammas)
+
+
+def test_tune_for_participation_routes():
+    comp = TopK(4)
+    t_full = tune_for(comp, 16, 8)
+    assert tune_for(comp, 16, 8, participation=1.0) == t_full
+    t_half = tune_for(comp, 16, 8, participation=0.5)
+    assert t_half.eta > t_full.eta  # sampling adds bias
+    assert t_half != t_full
+
+
+# ---------------------------------------------------------------------------
+# convergence in the sampled / stochastic regimes
+# ---------------------------------------------------------------------------
+
+def _quad(n=8, d=16, seed=0):
+    key = jax.random.key(seed)
+    A = jax.random.normal(key, (n, d, d)) / jnp.sqrt(d)
+    Q = jnp.einsum("nij,nkj->nik", A, A) + 0.5 * jnp.eye(d)
+    b = jax.random.normal(jax.random.key(seed + 1), (n, d))
+    x_star = jnp.linalg.solve(jnp.mean(Q, 0), jnp.mean(b, 0))
+
+    def grads(x):
+        return jnp.einsum("nij,j->ni", Q, x) - b
+
+    L = float(jnp.linalg.eigvalsh(jnp.mean(Q, 0))[-1])
+    Li = jax.vmap(lambda q: jnp.linalg.eigvalsh(q)[-1])(Q)
+    return grads, x_star, L, float(jnp.sqrt(jnp.mean(Li ** 2)))
+
+
+def test_federated_convergence_bernoulli_half():
+    """Client sampling at p = 0.5 with tune_partial stepsizes still drives
+    the quadratic to its solution (exact local gradients)."""
+    grads, x_star, L, Lt = _quad()
+    comp = TopK(4)
+    t = tune_partial(comp.eta(16), comp.omega(16), 0.5, n=8, L=L, Ltilde=Lt)
+    algo = EFBV(comp, lam=t.lam, nu=t.nu)
+    x, _, m = run_federated(
+        algo=algo, grad_fn=lambda k, x: grads(x), x0=jnp.zeros(16),
+        gamma=t.gamma, steps=25000, key=KEY, n=8,
+        participation=Participation.parse("bernoulli:0.5"),
+        record=lambda x: jnp.sum((x - x_star) ** 2))
+    # exact solution: with exact local gradients the messages C(grad_i - h_i)
+    # vanish at the fixed point, so sampling noise vanishes with them
+    assert float(m[-1]) < 1e-5 * float(jnp.sum(x_star ** 2)), float(m[-1])
+
+
+def test_minibatch_grads_unbiased_and_converges():
+    d = 24
+    A, b = make_synthetic(jax.random.key(2), N=480, d=d)
+    prob = LogReg.split(A, b, n=16, mu_reg=0.1)
+    x = jax.random.normal(KEY, (d,)) * 0.1
+    # unbiasedness: averaging many minibatch draws approaches the full grads
+    draws = jax.vmap(lambda k: prob.minibatch_grads(k, x, 8))(
+        jax.random.split(KEY, 1024))
+    np.testing.assert_allclose(np.asarray(jnp.mean(draws, 0)),
+                               np.asarray(prob.grads(x)), atol=0.1)
+    # end to end: sampled clients + minibatch gradients reach the
+    # neighborhood of the optimum
+    _, fstar = prob.solve()
+    comp = TopK(6)
+    t = tune_partial(comp.eta(d), comp.omega(d), 0.5, n=prob.n,
+                     L=prob.L(), Ltilde=prob.L_tilde())
+    algo = EFBV(comp, lam=t.lam, nu=t.nu)
+    _, _, m = run_federated(
+        algo=algo, grad_fn=lambda k, x: prob.minibatch_grads(k, x, 8),
+        x0=jnp.zeros(d), gamma=t.gamma, steps=20000, key=KEY, n=prob.n,
+        participation=Participation.parse("bernoulli:0.5"),
+        record=lambda x: prob.f(x) - fstar)
+    f0 = float(prob.f(jnp.zeros(d)) - fstar)
+    assert float(jnp.mean(m[-100:])) < 0.15 * f0, (float(jnp.mean(m[-100:])), f0)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline: local-shard minibatch resampling
+# ---------------------------------------------------------------------------
+
+def test_synthetic_lm_shard_resampling():
+    from repro.data import SyntheticLM
+    ds = SyntheticLM(vocab=64, seq_len=12, global_batch=8, n_workers=4,
+                     seed=3, resample_from_shard=True, shard_size=16)
+    b0, b0_again, b1 = ds.batch(0), ds.batch(0), ds.batch(1)
+    np.testing.assert_array_equal(b0["tokens"], b0_again["tokens"])  # determinstic
+    assert not np.array_equal(b0["tokens"], b1["tokens"])  # fresh draw per round
+    # every sampled row comes from the worker's FIXED shard
+    per_w = 8 // 4
+    for w in range(4):
+        shard = {r.tobytes() for r in ds._shards[w].astype(np.int32)}
+        for row in b0["tokens"][w * per_w:(w + 1) * per_w]:
+            assert row.tobytes() in shard
+    # streaming mode is untouched by the new fields (same rng consumption)
+    a = SyntheticLM(vocab=64, seq_len=12, global_batch=8, n_workers=4, seed=3)
+    np.testing.assert_array_equal(a.batch(0)["tokens"],
+                                  SyntheticLM(vocab=64, seq_len=12,
+                                              global_batch=8, n_workers=4,
+                                              seed=3).batch(0)["tokens"])
