@@ -6,7 +6,8 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test-tier1 test-all test-slow bench smoke smoke-federated docs-test docs-check
+.PHONY: test-tier1 test-all test-slow bench bench-micro smoke smoke-federated \
+	smoke-bidirectional docs-test docs-check
 
 test-tier1:
 	JAX_PLATFORMS=cpu $(PY) -m pytest -x -q
@@ -15,9 +16,15 @@ test-all:
 	JAX_PLATFORMS=cpu $(PY) -m pytest -q -m ""
 
 test-slow:
-	JAX_PLATFORMS=cpu $(PY) -m pytest -q -m slow
+	JAX_PLATFORMS=cpu $(PY) -m pytest -q -m slow --durations=25
 
+# the pinned CI bench: writes BENCH_perf.json + BENCH_bits.json at the repo
+# root -- byte-identical machinery to the CI `bench` job, so the committed
+# trajectory and a local run are comparable
 bench:
+	JAX_PLATFORMS=cpu $(PY) -m benchmarks.ci_bench
+
+bench-micro:
 	JAX_PLATFORMS=cpu $(PY) -m benchmarks.compressor_bench
 
 docs-test:
@@ -36,3 +43,8 @@ smoke-federated:
 	    --mesh 2x2 --steps 4 --global-batch 8 --seq 32 \
 	    --compressor block_topk:256,16 --agg sparse_allgather \
 	    --participation bernoulli:0.5 --local-batch-resample
+
+smoke-bidirectional:
+	JAX_PLATFORMS=cpu $(PY) -m repro.launch.train --arch qwen2-0.5b --smoke \
+	    --mesh 2x2 --steps 4 --global-batch 8 --seq 32 \
+	    --compressor qsgd:16 --agg sparse_allgather --downlink qsgd:16

@@ -1,0 +1,179 @@
+"""The pinned CI bench: writes BENCH_perf.json and BENCH_bits.json at the
+repo root (the bench trajectory that CI uploads as an artifact and commits
+on main; `make bench` produces the identical files locally).
+
+    PYTHONPATH=src:. python -m benchmarks.ci_bench [--out-dir .]
+
+Two files, two kinds of signal:
+
+* BENCH_perf.json -- measured on this host (noisy across machines, a
+  trajectory within one runner class): steps/sec + compile time of the
+  pinned smoke train-step (benchmarks/perf_iter.py::SMOKE), us/call of the
+  fused-vs-unfused wire pack, and HLO byte counts (compiled train step +
+  AOT TPU exports of the three fused kernels) as a code-size trajectory.
+
+* BENCH_bits.json -- exact and machine-independent: measured payload bytes
+  == bits/8 for every registered wire codec, and the bidirectional
+  up+down accounting (uplink x n + ONE broadcast) for pinned combos,
+  including the acceptance row `qsgd16_both_ways` whose ratio vs dense
+  fp32 both ways must stay <= 0.35 (also pinned by
+  tests/test_bidirectional.py).
+"""
+
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+if "XLA_FLAGS" not in os.environ:
+    # the smoke train-step runs on a 2x2 mesh of fake host devices
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import platform      # noqa: E402
+
+
+D_BITS = 1 << 16  # codec accounting vector size (matches compressor_bench)
+N_WORKERS = 8     # uplink fan-in for the bidirectional combos
+
+# (name, uplink spec, downlink spec or None=dense broadcast) -- pinned; the
+# acceptance row is qsgd16_both_ways
+BIDIR_COMBOS = [
+    ("block_topk_up_dense_down", "block_topk:1024,16", None),
+    ("block_topk_up_qsgd16_down", "block_topk:1024,16", "qsgd:16"),
+    ("qsgd16_both_ways", "qsgd:16", "qsgd:16"),
+    ("sign_up_natural_down", "sign", "natural"),
+]
+
+CODECS = ["identity", "topk:655", "randk:655", "comp:655,6553",
+          "block_topk:1024,16", "sign", "natural", "qsgd:16"]
+
+
+def bits_payload():
+    import jax.numpy as jnp
+
+    from repro.core import Downlink, make_compressor
+    from repro.distributed import wire
+
+    zeros = jnp.zeros((D_BITS,))
+    dense = 32 * D_BITS
+    codec_rows = {}
+    for spec in CODECS:
+        fmt = wire.format_for(make_compressor(spec), zeros)
+        bits = fmt.bits_per_round()
+        codec_rows[spec] = {
+            "payload_bits": bits,
+            "payload_bytes": bits // 8,
+            "vs_dense_fp32": round(bits / dense, 6),
+        }
+
+    combo_rows = {}
+    for name, up_spec, down_spec in BIDIR_COMBOS:
+        up = wire.format_for(make_compressor(up_spec), zeros)
+        down = (None if down_spec is None else
+                Downlink.parse(down_spec).format_for(zeros))
+        total = wire.total_round_bits(up, down, n_workers=N_WORKERS)
+        dense_both = N_WORKERS * dense + dense
+        combo_rows[name] = {
+            "uplink_spec": up_spec,
+            "downlink_spec": down_spec or "dense_fp32",
+            "up_bits": up.bits_per_round(n_workers=N_WORKERS),
+            "down_bits": (dense if down is None
+                          else down.downlink_bits_per_round()),
+            "total_bits": total,
+            "vs_dense_both_ways": round(total / dense_both, 6),
+        }
+    qs = combo_rows["qsgd16_both_ways"]["vs_dense_both_ways"]
+    assert qs <= 0.35, f"qsgd:16 both ways regressed past 0.35x dense: {qs}"
+    return {
+        "schema": 1,
+        "d": D_BITS,
+        "n_workers": N_WORKERS,
+        "codec_bits_per_round": codec_rows,
+        "bidirectional_rounds": combo_rows,
+    }
+
+
+def perf_payload(fast: bool = True):
+    import jax
+
+    from benchmarks import compressor_bench, perf_iter
+
+    smoke = perf_iter.smoke_rows()
+
+    pack_rows = {}
+    for row in compressor_bench.packed_vs_dense(fast=fast):
+        key = row["name"].split("/", 1)[1]
+        pack_rows[key] = {"us_per_call": row["us_per_call"],
+                          "derived": row["derived"]}
+
+    kernel_hlo = {}
+    try:
+        import functools
+
+        import jax.numpy as jnp
+        from jax import export as jexport
+
+        from repro.kernels.pack import (pack_update_pallas,
+                                        qsgd_pack_update_pallas,
+                                        randk_update_pallas)
+
+        sds = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+        idx = jax.ShapeDtypeStruct((32,), jnp.int32)
+        norm = jax.ShapeDtypeStruct((1, 1), jnp.float32)
+        exports = {
+            "block_topk_pack": jexport.export(
+                jax.jit(functools.partial(pack_update_pallas, lam=0.9, kb=16,
+                                          interpret=False)),
+                platforms=["tpu"])(sds, sds),
+            "randk_update": jexport.export(
+                jax.jit(functools.partial(randk_update_pallas, scale=75.0,
+                                          lam=0.9, interpret=False)),
+                platforms=["tpu"])(sds, sds, idx),
+            "qsgd_pack": jexport.export(
+                jax.jit(functools.partial(qsgd_pack_update_pallas, s=16,
+                                          lam=0.9, interpret=False)),
+                platforms=["tpu"])(sds, sds, sds, norm),
+        }
+        kernel_hlo = {k: len(e.mlir_module().encode())
+                      for k, e in exports.items()}
+    except Exception as e:  # jax.export unavailable on some versions
+        kernel_hlo = {"skipped": type(e).__name__}
+
+    return {
+        "schema": 1,
+        "host": {"python": platform.python_version(), "jax": jax.__version__,
+                 "machine": platform.machine()},
+        "smoke_train_step": smoke,
+        "wire_pack_us": pack_rows,
+        "kernel_hlo_bytes": kernel_hlo,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=".")
+    ap.add_argument("--skip-perf", action="store_true",
+                    help="only write the (deterministic) BENCH_bits.json")
+    args = ap.parse_args(argv)
+
+    bits = bits_payload()
+    path = os.path.join(args.out_dir, "BENCH_bits.json")
+    with open(path, "w") as f:
+        json.dump(bits, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"[bench] wrote {path} (qsgd16_both_ways = "
+          f"{bits['bidirectional_rounds']['qsgd16_both_ways']['vs_dense_both_ways']}x"
+          " dense up+down)")
+
+    if not args.skip_perf:
+        perf = perf_payload()
+        path = os.path.join(args.out_dir, "BENCH_perf.json")
+        with open(path, "w") as f:
+            json.dump(perf, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"[bench] wrote {path} "
+              f"(smoke {perf['smoke_train_step']['steps_per_sec']} steps/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,8 +17,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import KEY, make_problem
-from repro.core import (CompKK, EFBV, Participation, run, run_federated,
-                        tune_for)
+from repro.core import (CompKK, Downlink, EFBV, Participation,
+                        make_compressor, run, run_bidirectional,
+                        run_federated, tune_for)
 from repro.distributed import wire
 
 
@@ -57,6 +58,54 @@ def run_bench(fast: bool = True):
                      "derived": f"efbv={finals['efbv'][i]:.3e};"
                                 f"ef21={finals['ef21'][i]:.3e}"})
     rows.extend(participation_rows(fast=fast))
+    rows.extend(bidirectional_rows(fast=fast))
+    return rows
+
+
+def bidirectional_rows(fast: bool = True):
+    """Up/down bits sweep: fixed uplink (the paper's comp-(k, k')), sweep of
+    downlink codecs from dense fp32 to qsgd:16.  Exact total_round_bits
+    (uplink x n + ONE broadcast) against the measured suboptimality after a
+    fixed round budget -- the bidirectional bits-vs-convergence trade-off."""
+    steps = 1500 if fast else 6000
+    n = 50
+    prob = make_problem("phishing", n=n)
+    _, fstar = prob.solve()
+    d = prob.d
+    comp = CompKK(1, d // 2)
+    up_fmt = wire.format_for(comp, jnp.zeros(d))
+    t = tune_for(comp, d, n, mode="efbv", L=prob.L(), Ltilde=prob.L_tilde())
+    algo = EFBV(comp, lam=t.lam, nu=t.nu)
+
+    downs = ["identity", f"topk:{d // 4}", "qsgd:16"]
+    rows, gaps, totals = [], [], []
+    for spec in downs:
+        down = Downlink(make_compressor(spec))
+        # broadcast error feedback tolerates a smaller step for lossy C_s
+        gamma = t.gamma if spec == "identity" else t.gamma * 0.5
+        _, _, m = run_bidirectional(
+            algo=algo, downlink=down, grad_fn=lambda k, x: prob.grads(x),
+            x0=jnp.zeros(d), gamma=gamma, steps=steps, key=KEY, n=n,
+            record=lambda x: prob.f(x) - fstar)
+        down_fmt = down.format_for(jnp.zeros(d))
+        total = wire.total_round_bits(up_fmt, down_fmt, n_workers=n)
+        gaps.append(float(m[-1]))
+        totals.append(float(total))
+        rows.append({"name": f"n_scaling/bidirectional_{spec.split(':')[0]}",
+                     "us_per_call": "",
+                     "derived": f"final_gap={gaps[-1]:.3e};"
+                                f"up_bits={up_fmt.bits_per_round(n_workers=n):g};"
+                                f"down_bits={down_fmt.downlink_bits_per_round():g};"
+                                f"total_bits={total:g}"})
+    # the downlink shrinks total bits monotonically along the sweep while
+    # the gap stays finite (lossy broadcasts still converge)
+    assert all(t1 >= t2 for t1, t2 in zip(totals, totals[1:])), totals
+    assert all(np.isfinite(g) for g in gaps), gaps
+    rows.append({"name": "n_scaling/bidirectional/bits_vs_gap",
+                 "us_per_call": "",
+                 "derived": f"downs={downs};"
+                            f"totals={[f'{t_:g}' for t_ in totals]};"
+                            f"gaps={[f'{g:.2e}' for g in gaps]}"})
     return rows
 
 

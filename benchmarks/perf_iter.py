@@ -6,18 +6,103 @@ report the roofline-term deltas against the recorded baseline.
 
 Each invocation = one hypothesis→change→measure cycle; results append to
 results/perf_iters.jsonl for the EXPERIMENTS §Perf log.
+
+:func:`smoke_rows` is the PINNED smoke slice of this harness used by the CI
+bench job (benchmarks/ci_bench.py -> BENCH_perf.json): one real jitted
+train-step on a small CPU mesh -- measured steps/sec, compile time, and the
+compiled HLO byte count as a code-size trajectory.
 """
 
 import os
-
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse  # noqa: E402
 import json      # noqa: E402
 import time      # noqa: E402
 
+# the pinned CI/`make bench` configuration -- change it and every later
+# BENCH_perf.json entry starts a new trajectory, so don't
+SMOKE = dict(arch="qwen2-0.5b", mesh=(2, 2), steps=4, global_batch=8, seq=32,
+             compressor="block_topk:256,16", agg="sparse_allgather",
+             downlink="qsgd:16")
+
+
+def smoke_rows():
+    """Measure the pinned smoke train-step (see SMOKE): steps/sec excluding
+    compile, compile seconds, and compiled-HLO bytes.  Needs >= 4 XLA host
+    devices (the caller sets XLA_FLAGS before jax initializes)."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.core import Downlink, EFBV, make_compressor
+    from repro.data import SyntheticLM, make_batch_shardings
+    from repro.launch.mesh import make_mesh, num_workers
+    from repro.models import build_model
+    from repro.optim import adamw, cosine
+    from repro.train import (init_train_state, make_train_step,
+                             train_state_shardings)
+
+    cfg = get_smoke_config(SMOKE["arch"])
+    mesh = make_mesh(SMOKE["mesh"])
+    n = num_workers(mesh)
+    model = build_model(cfg)
+    comp = make_compressor(SMOKE["compressor"])
+    algo = EFBV.make(comp, d=max(cfg.d_model * max(cfg.d_ff, 1), 1), n=n)
+    downlink = Downlink.parse(SMOKE["downlink"])
+    opt = adamw(cosine(3e-4, total_steps=SMOKE["steps"], warmup_steps=1))
+
+    params = model.init(jax.random.key(0))
+    state = init_train_state(params, opt, mesh, bidirectional=True)
+    sh = train_state_shardings(mesh, model.param_specs(), state)
+    state = jax.tree.map(lambda x, s: jax.device_put(x, s), state, sh)
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=SMOKE["seq"],
+                       global_batch=SMOKE["global_batch"], n_workers=n,
+                       seed=0)
+    step_fn = make_train_step(model.loss, opt, algo, mesh,
+                              agg_mode=SMOKE["agg"], downlink=downlink)
+
+    key = jax.random.key(0)
+    batch = make_batch_shardings(mesh, data.batch(0))
+    t0 = time.perf_counter()
+    compiled = step_fn.lower(state, batch, key).compile()
+    compile_s = time.perf_counter() - t0
+    hlo_bytes = len(compiled.as_text().encode())
+
+    # drive the AOT-compiled executable directly (calling step_fn again
+    # would recompile through jit's separate dispatch cache): one warmup
+    # dispatch, then the timed steps.  GSPMD may emit a few output leaves
+    # with different shardings than the input layout the step was compiled
+    # for (e.g. a small norm param flipping to 'model'), and AOT calls are
+    # strict about input shardings -- reshard those leaves back outside the
+    # timed region.
+    resync = lambda st: jax.tree.map(
+        lambda x, s: x if x.sharding == s else jax.device_put(x, s), st, sh)
+    state, _ = compiled(state, batch, key)
+    jax.block_until_ready(state.params)
+    times = []
+    for i in range(SMOKE["steps"]):
+        state = resync(state)
+        batch = make_batch_shardings(mesh, data.batch(i + 1))
+        t0 = time.perf_counter()
+        state, metrics = compiled(state, batch, jax.random.fold_in(key, i))
+        jax.block_until_ready(state.params)
+        times.append(time.perf_counter() - t0)
+    sec_per_step = float(np.median(times))
+    return {
+        "config": {k: (list(v) if isinstance(v, tuple) else v)
+                   for k, v in SMOKE.items()},
+        "steps_per_sec": round(1.0 / sec_per_step, 4),
+        "sec_per_step_median": round(sec_per_step, 4),
+        "compile_s": round(compile_s, 2),
+        "train_step_hlo_bytes": hlo_bytes,
+        "final_loss": round(float(metrics["loss"]), 4),
+    }
+
 
 def main():
+    # 512 fake host devices for the roofline meshes; set here (not at import
+    # time) so importers of smoke_rows() keep their own device count
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True)

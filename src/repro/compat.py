@@ -27,6 +27,11 @@ import jax
 
 PyTree = Any
 
+#: oldest jax release the shims below are exercised against; the CI tier-1
+#: matrix pins one leg to this (keep .github/workflows/ci.yml in sync) so a
+#: compat regression surfaces in PR CI, not at seed-repair time.
+OLDEST_SUPPORTED_JAX = "0.4.30"
+
 _HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
 _HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
 _HAS_PCAST = hasattr(jax.lax, "pcast")

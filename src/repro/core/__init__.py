@@ -4,10 +4,12 @@ EF-BV (with EF21 / DIANA as parametrizations) and its tuning theory."""
 from repro.core.contract import Compressor, Wire, bias_variance_estimate  # noqa: F401
 from repro.core.compressors import (  # noqa: F401
     Identity, TopK, RandK, ScaledRandK, CompKK, MixKK, BlockTopK,
-    SignNorm, Natural, QSGD, FracTopK, FracCompKK, MNice, make_compressor,
+    SignNorm, Natural, QSGD, FracTopK, FracCompKK, MNice, expand_fleet,
+    make_compressor, make_fleet,
 )
 from repro.core.efbv import (  # noqa: F401
-    EFBV, EFBVState, Participation, participation_key, proximal_step,
+    Downlink, EFBV, EFBVState, Participation, downlink_key,
+    participation_key, proximal_step,
     prox_zero, prox_l1, prox_l2, run, run_bidirectional, run_federated,
 )
 from repro.core import theory  # noqa: F401

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -604,3 +604,27 @@ def make_compressor(spec: str) -> Compressor:
     if name not in table:
         raise ValueError(f"unknown compressor {name!r}; known: {sorted(table)}")
     return table[name]()
+
+
+def expand_fleet(members: Tuple[Compressor, ...], n: int
+                 ) -> Tuple[Compressor, ...]:
+    """Assign a fleet of compressors to n workers: an explicit length-n list
+    is kept as-is, anything shorter is expanded round-robin (worker i gets
+    members[i % len(members)])."""
+    if not members:
+        raise ValueError("empty compressor fleet")
+    if len(members) > n:
+        raise ValueError(f"fleet of {len(members)} members for only {n} workers")
+    if any(getattr(c, "joint", False) for c in members):
+        raise ValueError("jointly-defined compressors (m-nice) cannot be "
+                         "fleet members: their draws couple all workers")
+    return tuple(members[i % len(members)] for i in range(n))
+
+
+def make_fleet(spec: str, n: int) -> Tuple[Compressor, ...]:
+    """Parse a heterogeneous-fleet spec -- ';'-separated compressor specs,
+    e.g. 'topk:64;randk:64;qsgd:16' -- and assign it to n workers
+    (round-robin when shorter than n, explicit when exactly n)."""
+    members = tuple(make_compressor(s.strip())
+                    for s in spec.split(";") if s.strip())
+    return expand_fleet(members, n)

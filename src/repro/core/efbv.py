@@ -50,6 +50,10 @@ PARTICIPATION_FOLD = 0xFEDE4A7E
 #: fold_in tag for the per-round minibatch-resampling key (stochastic local
 #: gradients) -- decorrelated from both the mask and the compressor draws.
 RESAMPLE_FOLD = 0x5A3D0B17
+#: fold_in tag for the per-round downlink (master -> worker broadcast) key.
+#: One key per round, shared by every worker: the broadcast is a single
+#: message, so present and absent workers decode the SAME payload.
+DOWNLINK_FOLD = 0xD0401B17
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,6 +123,108 @@ def participation_key(round_key: Array) -> Array:
     return jax.random.fold_in(round_key, PARTICIPATION_FOLD)
 
 
+def downlink_key(round_key: Array) -> Array:
+    """The shared derivation of the broadcast key from a round key.  All
+    execution paths (run_bidirectional, both trainers, the differential
+    harness) use this, so the master's compressor draw -- and therefore the
+    broadcast every worker decodes -- is identical everywhere."""
+    return jax.random.fold_in(round_key, DOWNLINK_FOLD)
+
+
+# ------------------------------------------------------------------------------
+# the downlink channel: master -> worker compressed model broadcast
+# ------------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Downlink:
+    """Master-side EF-BV state for the server -> worker model broadcast
+    (EF21-BC generalized to any zoo compressor/codec; Fatkhullin et al. 2021,
+    referenced by the paper as an extension).
+
+    The master keeps its own control variate ``w`` -- the workers' shared
+    reconstruction of the model -- and each round broadcasts the compressed
+    model innovation through the compressor's wire codec:
+
+        q^t   = C_s(x^{t+1} - w^t)          (one message, every worker)
+        w^t+1 = w^t + lam_s * q^t
+
+    Workers evaluate their gradients at ``w``, so the uplink direction is
+    Algorithm 1 unchanged (with h_i tracking grad f_i(w)).  Because the
+    broadcast is ONE payload drawn from the shared :func:`downlink_key`,
+    federated rounds need no special casing: an absent worker decodes the
+    exact same broadcast it would have received while present, so every
+    worker's ``w`` stays replicated -- one copy suffices.
+
+    ``lam_s`` is the downlink scaling (Prop. 1 applies to C_s too); the
+    EF21-BC choice is 1.  With ``C_s = Identity`` (and a lossless f32 wire)
+    the update telescopes to ``w = x`` and the implementation assigns ``x``
+    verbatim, which is what keeps identity-downlink runs *bit-identical* to
+    the uncompressed-broadcast trajectories (pinned by the harness).
+    """
+
+    compressor: Compressor
+    lam: float = 1.0
+
+    @staticmethod
+    def parse(spec: str) -> Optional["Downlink"]:
+        """CLI syntax: '' | 'none' -> None (uncompressed dense broadcast);
+        otherwise any zoo compressor spec, e.g. 'qsgd:16', 'block_topk:256,16',
+        optionally '@lam' for the downlink scaling ('topk:64@0.9')."""
+        if not spec or spec == "none":
+            return None
+        comp_spec, _, lam_s = spec.partition("@")
+        from repro.core.compressors import make_compressor
+        return Downlink(compressor=make_compressor(comp_spec),
+                        lam=float(lam_s) if lam_s else 1.0)
+
+    def _is_lossless(self, wire_dtype: str) -> bool:
+        from repro.core.compressors import Identity
+        return (isinstance(self.compressor, Identity) and self.lam == 1.0
+                and wire_dtype == "float32")
+
+    def init(self, params: PyTree) -> PyTree:
+        """w^0 = x^0 (workers start from the broadcast initial model)."""
+        return jax.tree.map(jnp.asarray, params)
+
+    def format_for(self, tree: PyTree, *, wire_dtype: str = "float32"):
+        """The downlink WireFormat (one broadcast message per round)."""
+        from repro.distributed import wire
+        return wire.format_for(self.compressor, tree, wire_dtype=wire_dtype)
+
+    def broadcast(self, key: Optional[Array], x: PyTree, w: PyTree, *,
+                  wire_dtype: str = "float32"
+                  ) -> Tuple[PyTree, list]:
+        """One downlink round: returns ``(w_new, payloads)``.
+
+        ``payloads`` is the per-leaf wire payload of the single broadcast
+        message (what actually crosses the master -> worker wire;
+        ``wire.payload_bytes`` of it equals ``downlink_bits_per_round / 8``
+        exactly).  ``w_new = w + lam_s * decode(payload)`` -- computed from
+        the DECODED payload, so master and workers agree bit-for-bit on the
+        reconstruction.  The Identity/f32 wire is lossless and assigns
+        ``w_new = x`` verbatim (bitwise; see the class docstring).
+        """
+        from repro.distributed import wire
+        leaves, treedef = jax.tree.flatten(x)
+        w_leaves = treedef.flatten_up_to(w)
+        payloads, new_leaves = [], []
+        for j, (xj, wj) in enumerate(zip(leaves, w_leaves)):
+            codec = wire.codec_of(self.compressor, tuple(xj.shape),
+                                  int(xj.size), wire_dtype)
+            kj = None if key is None else jax.random.fold_in(key, j)
+            delta = (xj.astype(jnp.float32)
+                     - wj.astype(jnp.float32)).reshape(-1)
+            payload = codec.encode(kj, delta)
+            payloads.append(payload)
+            if self._is_lossless(wire_dtype):
+                new_leaves.append(xj)
+            else:
+                q = codec.decode(payload).reshape(xj.shape)
+                new_leaves.append((wj.astype(jnp.float32)
+                                   + self.lam * q).astype(wj.dtype))
+        return jax.tree.unflatten(treedef, new_leaves), payloads
+
+
 class EFBVState(NamedTuple):
     """State of Algorithm 1.
 
@@ -140,22 +246,42 @@ class EFBV:
     lam/nu are the two scaling parameters (Sect. 3): lam controls the control-
     variate update (variance reduction), nu the gradient-estimate update
     (error feedback).  nu = lam -> EF21; nu = 1 -> DIANA.
+
+    ``fleet`` switches on the *heterogeneous* setting (Beznosikov et al.
+    2020): worker i runs its OWN compressor ``fleet[i]`` (length exactly n;
+    round-robin expansion happens at parse time, see
+    ``compressors.make_fleet``).  ``compressor`` then holds ``fleet[0]`` as
+    the representative; (lam, nu) are tuned for the aggregated mixed-fleet
+    constants (theory.tune_fleet).  A homogeneous fleet collapses to
+    ``fleet=None`` so the single-compressor fast paths stay untouched.
     """
 
     compressor: Compressor
     lam: float
     nu: float
+    fleet: Optional[Tuple[Compressor, ...]] = None
 
     # ---- constructors -------------------------------------------------------
 
     @staticmethod
-    def make(compressor: Compressor, d: int, n: int, mode: theory.Mode = "efbv",
+    def make(compressor, d: int, n: int, mode: theory.Mode = "efbv",
              independent: bool = True,
              participation: Optional[float] = None) -> "EFBV":
         """Auto-tuned instance (Remark 1).  ``participation`` is the expected
         per-round participation fraction p; when given, (lam, nu) are tuned
         for the effective compressor b*C, b ~ Bernoulli(p) (theory.tune_partial
-        -- see docs/theory.md)."""
+        -- see docs/theory.md).
+
+        ``compressor`` may be a sequence of compressors -- a heterogeneous
+        fleet, round-robin expanded to n members -- tuned via
+        theory.tune_fleet (worst-case aggregation; see docs/theory.md)."""
+        if isinstance(compressor, (list, tuple)):
+            from repro.core.compressors import expand_fleet
+            members = expand_fleet(tuple(compressor), n)
+            t = theory.tune_for(members, d, n, independent=independent,
+                                mode=mode, participation=participation)
+            fleet = None if len(set(members)) == 1 else members
+            return EFBV(members[0], lam=t.lam, nu=t.nu, fleet=fleet)
         t = theory.tune_for(compressor, d, n, independent=independent, mode=mode,
                             participation=participation)
         return EFBV(compressor, lam=t.lam, nu=t.nu)
@@ -181,15 +307,38 @@ class EFBV:
 
     # ---- algorithm core (shared by reference and distributed paths) ----------
 
-    def compress_delta(self, key: Optional[Array], grad: PyTree, h: PyTree) -> PyTree:
-        """d_i = C_i(grad_i - h_i), leaf-wise with decorrelated keys."""
+    def compress_delta(self, key: Optional[Array], grad: PyTree, h: PyTree,
+                       compressor: Optional[Compressor] = None) -> PyTree:
+        """d_i = C_i(grad_i - h_i), leaf-wise with decorrelated keys.
+
+        ``compressor`` overrides ``self.compressor`` (the heterogeneous-fleet
+        path passes worker i's own member)."""
+        comp = self.compressor if compressor is None else compressor
         leaves, treedef = jax.tree.flatten(grad)
         h_leaves = treedef.flatten_up_to(h)
         outs = []
         for j, (g, hj) in enumerate(zip(leaves, h_leaves)):
             kj = None if key is None else jax.random.fold_in(key, j)
-            outs.append(self.compressor(kj, g - hj))
+            outs.append(comp(kj, g - hj))
         return jax.tree.unflatten(treedef, outs)
+
+    def _compress_fleet(self, keys: Array, grads: PyTree, h: PyTree,
+                        n: int) -> PyTree:
+        """Per-worker d_i = C_i(grad_i - h_i) for a heterogeneous fleet:
+        a static Python loop over workers (each member is a different
+        program), stacked back on the worker axis.  Key derivation matches
+        the vmap path (keys[i] for worker i) so a homogeneous fleet draws
+        identically to :meth:`step`'s vmap."""
+        if len(self.fleet) != n:
+            raise ValueError(f"fleet of {len(self.fleet)} members for {n} "
+                             "workers (expand_fleet sizes it to n)")
+        d_workers = []
+        for i in range(n):
+            g_i = jax.tree.map(lambda a: a[i], grads)
+            h_i = jax.tree.map(lambda a: a[i], h)
+            d_workers.append(
+                self.compress_delta(keys[i], g_i, h_i, self.fleet[i]))
+        return jax.tree.map(lambda *ds: jnp.stack(ds), *d_workers)
 
     def worker_update(self, h: PyTree, d: PyTree) -> PyTree:
         """h_i <- h_i + lam d_i."""
@@ -247,11 +396,11 @@ class EFBV:
 
         keys = jax.random.split(key, n)
 
-        def one_worker(k, g_i, h_i):
-            d_i = self.compress_delta(k, g_i, h_i)
-            return d_i
-
-        d = jax.vmap(one_worker)(keys, grads, state.h)
+        if self.fleet is not None:
+            d = self._compress_fleet(keys, grads, state.h, n)
+        else:
+            d = jax.vmap(lambda k, g_i, h_i: self.compress_delta(k, g_i, h_i)
+                         )(keys, grads, state.h)
         h_new = jax.vmap(self.worker_update)(state.h, d)
         d_bar = jax.tree.map(lambda dj: jnp.mean(dj, axis=0), d)
         g, h_avg_new = self.master_update(state.h_avg, d_bar)
@@ -276,8 +425,11 @@ class EFBV:
                 "themselves; combine them with Participation masks is ambiguous")
         n = jax.tree.leaves(grads)[0].shape[0]
         keys = jax.random.split(key, n)
-        d = jax.vmap(lambda k, g_i, h_i: self.compress_delta(k, g_i, h_i)
-                     )(keys, grads, state.h)
+        if self.fleet is not None:
+            d = self._compress_fleet(keys, grads, state.h, n)
+        else:
+            d = jax.vmap(lambda k, g_i, h_i: self.compress_delta(k, g_i, h_i)
+                         )(keys, grads, state.h)
         h_new = jax.vmap(self.worker_update_masked)(state.h, d, mask)
         d_bar = jax.tree.map(
             lambda dj: jnp.mean(
@@ -321,53 +473,63 @@ def proximal_step(x: PyTree, g: PyTree, gamma: float,
 
 
 # ------------------------------------------------------------------------------
-# beyond-paper: bidirectional compression (server-side model broadcast)
+# beyond-paper: bidirectional compression (master -> worker codec broadcast)
 # ------------------------------------------------------------------------------
 
 def run_bidirectional(
     *,
     algo: "EFBV",
-    server_comp: Compressor,
-    grad_fn: Callable[[PyTree], PyTree],
+    downlink: Downlink,
+    grad_fn: Callable[[Array, PyTree], PyTree],  # (key, w) -> n-leading grads
     x0: PyTree,
     gamma: float,
     steps: int,
     key: Array,
     n: int,
+    participation: Optional[Participation] = None,
+    prox: Callable[[float, PyTree], PyTree] = prox_zero,
     record: Optional[Callable[[PyTree], Array]] = None,
-) -> Tuple[PyTree, Optional[Array]]:
-    """EF-BV with *bidirectional* compression (EF21-BC-style server side,
-    Fatkhullin et al. 2021 -- referenced by the paper as an extension).
+    wire_dtype: str = "float32",
+) -> Tuple[PyTree, PyTree, Optional[Array]]:
+    """EF-BV with a *bidirectional* compressed wire: Algorithm 1 on the
+    uplink, a :class:`Downlink` broadcast channel on the way back, and
+    optionally the federated execution mode on top (per-round client
+    sampling, same mask semantics as :func:`run_federated`).
 
-    The server broadcasts C_s(x^{t+1} - x_hat^t) instead of x^{t+1}; all
-    workers maintain the shared reconstruction x_hat (identical everywhere,
-    so one copy suffices).  Workers evaluate gradients at x_hat -- the
-    worker->server direction is Algorithm 1 unchanged.  With a contractive
-    C_s, x_hat -> x and the method inherits EF-BV's fixed-point.
+    Workers evaluate gradients at the shared reconstruction ``w`` (the
+    master's downlink control variate); the master iterate x advances as
+    usual and each round ends with one compressed broadcast updating w.
+    Absent workers decode the same broadcast as present ones, so w stays
+    replicated across the fleet.  Key derivations (per-round fold, worker
+    fold, PARTICIPATION_FOLD, RESAMPLE_FOLD, DOWNLINK_FOLD) match
+    :func:`run_federated`, so an Identity downlink + full participation
+    reproduces :func:`run_federated` -- and :func:`run` for exact-gradient
+    ``grad_fn`` -- bit-for-bit (pinned by tests/test_efbv.py and the
+    differential harness).
+
+    Returns ``(x, w, metrics)``.
     """
-    state = algo.init(x0, n)
-    x = x0
-    x_hat = x0  # workers' reconstruction of the model
+    part = participation if participation is not None else Participation()
+    state0 = algo.init(x0, n)
+    w0 = downlink.init(x0)
 
     def body(carry, k):
-        x, x_hat, st = carry
-        k_g, k_s = jax.random.split(k)
-        grads = grad_fn(x_hat)                      # workers see x_hat
-        g, st = algo.step(k_g, grads, st)
-        x = jax.tree.map(lambda xv, gv: xv - gamma * gv, x, g)
-        # server-side EF: broadcast the compressed model innovation
-        leaves, treedef = jax.tree.flatten(jax.tree.map(
-            lambda a, b: a - b, x, x_hat))
-        qs = [server_comp(jax.random.fold_in(k_s, j), l)
-              for j, l in enumerate(leaves)]
-        q = jax.tree.unflatten(treedef, qs)
-        x_hat = jax.tree.map(lambda hv, qv: hv + qv, x_hat, q)
-        m = record(x_hat) if record is not None else jnp.zeros(())
-        return (x, x_hat, st), m
+        x, w, st = carry
+        grads = grad_fn(jax.random.fold_in(k, RESAMPLE_FOLD), w)
+        if part.is_full:
+            g, st = algo.step(k, grads, st)
+        else:
+            mask = part.sample_mask(participation_key(k), n)
+            g, st = algo.step_federated(k, grads, st, mask)
+        x = proximal_step(x, g, gamma, prox)
+        w, _ = downlink.broadcast(downlink_key(k), x, w,
+                                  wire_dtype=wire_dtype)
+        m = record(x) if record is not None else jnp.zeros(())
+        return (x, w, st), m
 
     keys = jax.random.split(key, steps)
-    (x, x_hat, _), metrics = jax.lax.scan(body, (x, x_hat, state), keys)
-    return x_hat, (metrics if record is not None else None)
+    (x, w, _), metrics = jax.lax.scan(body, (x0, w0, state0), keys)
+    return x, w, (metrics if record is not None else None)
 
 
 # ------------------------------------------------------------------------------

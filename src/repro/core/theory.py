@@ -245,8 +245,18 @@ def tune_for(compressor, d: int, n: int, *, independent: bool = True,
     """Convenience: read (eta, omega) off a Compressor instance.
 
     ``participation`` (expected per-round participation fraction p) routes
-    through :func:`tune_partial` for the federated regime.
+    through :func:`tune_partial` for the federated regime.  A *sequence* of
+    compressors is a heterogeneous fleet (worker i runs compressor i) and
+    routes through :func:`tune_fleet` with the certified worst-case
+    aggregation.
     """
+    if isinstance(compressor, (list, tuple)):
+        if not independent:
+            raise ValueError("mixed-fleet tuning assumes independent "
+                             "per-worker compressors")
+        etas = [c.eta(d) for c in compressor]
+        omegas = [c.omega(d) for c in compressor]
+        return tune_fleet(etas, omegas, n=n, participation=participation, **kw)
     eta = compressor.eta(d)
     omega = compressor.omega(d)
     if participation is not None and participation < 1.0:
@@ -255,6 +265,67 @@ def tune_for(compressor, d: int, n: int, *, independent: bool = True,
                              "independent per-worker compressors")
         return tune_partial(eta, omega, participation, n=n, **kw)
     omega_av = compressor.omega_av(d, n) if independent else omega
+    return tune(eta, omega, omega_av, **kw)
+
+
+# --- heterogeneous fleets: per-worker (eta_i, omega_i) aggregation --------------
+
+FleetAggregate = Literal["worst", "mean"]
+
+
+def fleet_constants(etas, omegas, *, n: Optional[int] = None,
+                    aggregate: FleetAggregate = "worst"):
+    """Aggregate per-worker certified constants (eta_i, omega_i) of a mixed
+    fleet of INDEPENDENT compressors into one (eta, omega, omega_av) triple
+    the homogeneous theory can consume.
+
+    * ``worst`` (certified): eta = max_i eta_i and omega = max_i omega_i
+      bound every worker's recursion, so Thms. 1-3 hold verbatim with the
+      aggregated constants.
+    * ``mean`` (averaged): eta = mean(eta_i), omega = mean(omega_i) -- exact
+      for homogeneous fleets and for the *averaged* quantities when all
+      workers see innovations of equal norm; a tighter but uncertified
+      stepsize in general.
+
+    Either way the averaged variance keeps the independent-compressor 1/n
+    reduction exactly:  Var[(1/n) sum_i C_i(u_i)] <= (1/n^2) sum_i omega_i
+    ||u_i||^2, i.e. omega_av = mean(omega_i)/n against the mean of ||u_i||^2
+    (worst-case: max(omega_i)/n).  n = None returns (eta, omega) only.
+    """
+    etas, omegas = list(etas), list(omegas)
+    if not etas or len(etas) != len(omegas):
+        raise ValueError(f"need matching non-empty eta/omega lists, got "
+                         f"{len(etas)}/{len(omegas)}")
+    if aggregate == "worst":
+        eta, omega = max(etas), max(omegas)
+    elif aggregate == "mean":
+        eta, omega = sum(etas) / len(etas), sum(omegas) / len(omegas)
+    else:
+        raise ValueError(f"fleet aggregate {aggregate!r} (want worst | mean)")
+    if n is None:
+        return eta, omega
+    return eta, omega, omega / max(n, 1)
+
+
+def tune_fleet(etas, omegas, *, n: int,
+               aggregate: FleetAggregate = "worst",
+               participation: Optional[float] = None, **kw) -> Tuning:
+    """Auto-tuning for a heterogeneous worker fleet (worker i's compressor
+    certified as C(eta_i, omega_i); all independent).
+
+    Composes per-round Bernoulli(p) participation into EACH member first
+    (participation_eta / participation_omega -- skipping a round is a
+    per-worker event), then aggregates (:func:`fleet_constants`) and hands
+    the result to :func:`tune`.  A homogeneous list reproduces
+    :func:`tune_for` / :func:`tune_partial` exactly.
+    """
+    if participation is not None and participation < 1.0:
+        p = participation
+        etas, omegas = zip(*[(participation_eta(p, e),
+                              participation_omega(p, e, o))
+                             for e, o in zip(etas, omegas)])
+    eta, omega, omega_av = fleet_constants(etas, omegas, n=n,
+                                           aggregate=aggregate)
     return tune(eta, omega, omega_av, **kw)
 
 

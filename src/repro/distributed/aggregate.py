@@ -41,7 +41,7 @@ from typing import Any, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.efbv import EFBV
+from repro.core.efbv import EFBV, Downlink
 from repro.distributed import wire
 
 PyTree = Any
@@ -61,6 +61,7 @@ def compress_local(
     mode: str = "dense_psum",
     wire_dtype: str = "float32",
     mask: Optional[jax.Array] = None,
+    worker: Optional[jax.Array] = None,
 ) -> Tuple[PyTree, PyTree]:
     """d_i = C_i(grad_i - h_i); h_i <- h_i + lam d_i.
 
@@ -74,9 +75,24 @@ def compress_local(
     to decode-zero (wire.LeafCodec.mask_message / a zeroed dense d_i) and
     h_i stays STALE; at mask = 1 both gates are bitwise identities, and
     ``mask=None`` (full participation) skips them entirely.
+
+    ``worker`` is this worker's (traced) linear index, required when
+    ``algo.fleet`` is set: a heterogeneous fleet selects worker i's own
+    compressor with lax.switch.  Mixed fleets need a uniform message shape,
+    so they run under dense_psum only; the homogeneous fast paths are
+    untouched (EFBV.make collapses a uniform fleet to fleet=None).
     """
     if mode not in AGG_MODES:
         raise ValueError(f"mode {mode!r} not in {AGG_MODES}")
+    if algo.fleet is not None:
+        if mode != "dense_psum":
+            raise ValueError(
+                "mixed fleets need a uniform per-worker message shape; "
+                "mode='sparse_allgather' cannot stack heterogeneous "
+                "payloads -- use mode='dense_psum'")
+        if worker is None:
+            raise ValueError("mixed-fleet compress_local needs the worker "
+                             "index (worker=)")
 
     leaves, treedef = jax.tree.flatten(grads)
     h_leaves = treedef.flatten_up_to(h_local)
@@ -97,7 +113,20 @@ def compress_local(
             msgs.append(payload)
         else:
             delta = g_leaf - h_leaf
-            d_leaf = algo.compressor(kj, delta)
+            if algo.fleet is not None:
+                # worker-indexed dispatch: every member's program is traced,
+                # the switch picks this worker's at run time (dense outputs
+                # share one shape, so the branches unify)
+                if kj is None:
+                    branches = tuple((lambda dl, c=c: c(None, dl))
+                                     for c in algo.fleet)
+                    d_leaf = jax.lax.switch(worker, branches, delta)
+                else:
+                    branches = tuple((lambda k_, dl, c=c: c(k_, dl))
+                                     for c in algo.fleet)
+                    d_leaf = jax.lax.switch(worker, branches, kj, delta)
+            else:
+                d_leaf = algo.compressor(kj, delta)
             if mask is not None:
                 d_leaf_wire = d_leaf * jnp.asarray(mask, d_leaf.dtype)
             else:
@@ -149,6 +178,30 @@ def combine_global(
 
 
 # --------------------------------------------------------------------------
+# phase 3: master -> worker broadcast (the downlink channel)
+# --------------------------------------------------------------------------
+
+def broadcast_global(
+    downlink: Downlink,
+    key: Optional[jax.Array],
+    params: PyTree,
+    w: PyTree,
+    *,
+    wire_dtype: str = "float32",
+) -> Tuple[PyTree, list]:
+    """One downlink round: the master encodes C_s(x^{t+1} - w^t) through its
+    codec and every worker applies the decoded innovation to the shared
+    reconstruction w.  Returns (w_new, payloads); the payloads are what
+    crosses the wire (``downlink.format_for(params).downlink_bits_per_round()``
+    bits, exactly).  Both trainers and the reference driver call
+    :meth:`repro.core.efbv.Downlink.broadcast` through here, so the downlink
+    math lives in one place.  ``key`` must be the round's
+    ``downlink_key(step_key)`` so all paths draw the same broadcast.
+    """
+    return downlink.broadcast(key, params, w, wire_dtype=wire_dtype)
+
+
+# --------------------------------------------------------------------------
 # single-call reference (used by equivalence tests, runs un-sharded)
 # --------------------------------------------------------------------------
 
@@ -164,16 +217,18 @@ def efbv_aggregate_reference(
     masks: Optional[jax.Array] = None,  # (n,) participation mask
 ) -> Tuple[PyTree, PyTree, PyTree]:
     n = jax.tree.leaves(grads_stacked)[0].shape[0]
+    widx = jnp.arange(n)  # threaded for the mixed-fleet lax.switch dispatch
     if masks is None:
         msg, h_new = jax.vmap(
-            lambda k, g, h: compress_local(algo, k, g, h, mode=mode,
-                                           wire_dtype=wire_dtype)
-        )(keys, grads_stacked, h_stacked)
+            lambda k, g, h, i: compress_local(algo, k, g, h, mode=mode,
+                                              wire_dtype=wire_dtype, worker=i)
+        )(keys, grads_stacked, h_stacked, widx)
     else:
         msg, h_new = jax.vmap(
-            lambda k, g, h, m: compress_local(algo, k, g, h, mode=mode,
-                                              wire_dtype=wire_dtype, mask=m)
-        )(keys, grads_stacked, h_stacked, masks)
+            lambda k, g, h, m, i: compress_local(algo, k, g, h, mode=mode,
+                                                 wire_dtype=wire_dtype,
+                                                 mask=m, worker=i)
+        )(keys, grads_stacked, h_stacked, masks, widx)
     g, h_avg_new = combine_global(algo, msg, h_avg, n_workers=n, mode=mode,
                                   wire_dtype=wire_dtype)
     return g, h_new, h_avg_new

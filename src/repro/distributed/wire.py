@@ -36,6 +36,14 @@ payload decodes to exactly zero, a present worker's is bitwise untouched --
 and ``WireFormat.bits_per_round(participants=...)`` /
 :func:`federated_round_bits` account the variable-participant wire: an
 n-worker participation bitmap plus only the |S_t| sampled payloads.
+
+The wire is bidirectional: the master -> worker broadcast
+(core/efbv.py::Downlink) reuses the same codecs -- ONE message per round
+regardless of n or S_t, ``WireFormat.downlink_bits_per_round()`` exact --
+and :func:`total_round_bits` composes uplink + downlink with the federated
+accounting.  Heterogeneous fleets (per-worker compressors) account their
+mixed payloads through :func:`fleet_formats` / :func:`fleet_bits_per_round`.
+See docs/wire_format.md#the-downlink-payload.
 """
 
 from __future__ import annotations
@@ -543,6 +551,36 @@ class WireFormat:
         bits = 32 * bitmap_words(n_workers) + participants * per_worker
         return int(bits) if float(participants).is_integer() else bits
 
+    def downlink_bits_per_round(self) -> int:
+        """Exact bits of the ONE master -> worker broadcast message of a
+        round.  The downlink is a single payload regardless of n or of the
+        sampled subset S_t: present and absent workers decode the same
+        broadcast, so no participation bitmap and no per-worker factor."""
+        return sum(l.payload_bits for l in self.leaves)
+
+    def dense_bits(self) -> int:
+        """The fp32 dense baseline for this tree (one full copy)."""
+        return 32 * sum(l.size for l in self.leaves)
+
+
+def total_round_bits(up: "WireFormat", down: Optional["WireFormat"] = None, *,
+                     n_workers: int, participants: Optional[float] = None):
+    """Exact wire bits of one FULL round, both directions:
+
+        uplink   -- n_workers payloads (or, federated, a participation
+                    bitmap + the |S_t| sampled payloads), and
+        downlink -- one broadcast message (``down``; None means the
+                    uncompressed dense fp32 broadcast of the same tree).
+
+    ``participants`` composes the PR-3 federated accounting into the uplink
+    term only: the broadcast still goes out (and is decoded by absent
+    workers) every round.
+    """
+    up_bits = up.bits_per_round(n_workers=n_workers, participants=participants)
+    down_bits = (up.dense_bits() if down is None
+                 else down.downlink_bits_per_round())
+    return up_bits + down_bits
+
 
 def federated_round_bits(fmt: "WireFormat", mask) -> int:
     """Exact wire bits of one federated round given its concrete (n,) mask:
@@ -550,6 +588,36 @@ def federated_round_bits(fmt: "WireFormat", mask) -> int:
     m = np.asarray(mask)
     return fmt.bits_per_round(n_workers=int(m.shape[0]),
                               participants=int(m.sum()))
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous fleets: per-worker formats
+# ---------------------------------------------------------------------------
+
+def fleet_formats(fleet: Sequence[Any], tree: PyTree, *,
+                  wire_dtype: str = "float32") -> Tuple["WireFormat", ...]:
+    """One WireFormat per worker of a heterogeneous fleet (worker i's
+    payload layout is its own compressor's)."""
+    return tuple(format_for(c, tree, wire_dtype=wire_dtype) for c in fleet)
+
+
+def fleet_bits_per_round(fmts: Sequence["WireFormat"],
+                         mask: Optional[Any] = None) -> int:
+    """Exact uplink bits of one mixed-fleet round: the sum of the
+    participating workers' (heterogeneous) payloads.
+
+    ``mask`` is the concrete (n,) participation mask of a federated round
+    (adds the n-worker bitmap and drops absent workers' payloads); None is
+    the full-participation round.
+    """
+    if mask is None:
+        return sum(f.bits_per_round() for f in fmts)
+    m = np.asarray(mask)
+    if m.shape[0] != len(fmts):
+        raise ValueError(f"mask of {m.shape[0]} workers for a fleet of "
+                         f"{len(fmts)}")
+    return 32 * bitmap_words(len(fmts)) + sum(
+        f.bits_per_round() for f, mi in zip(fmts, m) if mi > 0)
 
 
 def codec_of(compressor, shape: Tuple[int, ...], size: int,

@@ -35,7 +35,8 @@ import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import ARCHS, get_config, get_smoke_config
-from repro.core import EFBV, Identity, Participation, make_compressor
+from repro.core import (Downlink, EFBV, Identity, Participation,
+                        make_compressor, make_fleet)
 from repro.data import SyntheticLM, make_batch_shardings
 from repro.launch.mesh import make_mesh, num_workers
 from repro.models import build_model
@@ -61,10 +62,18 @@ def parse_args(argv=None):
                     choices=["float32", "bfloat16", "float16"],
                     help="value precision of sparse/dense wire payloads "
                          "(quantized and bit-packed codecs ignore it)")
-    ap.add_argument("--server-comp", default="",
-                    help="compressor spec for the server->worker model "
-                         "broadcast (bidirectional compression, EF21-BC "
-                         "style); empty = uncompressed broadcast")
+    ap.add_argument("--downlink", default="",
+                    help="compressor spec for the master->worker model "
+                         "broadcast (bidirectional compression through the "
+                         "spec's wire codec, e.g. 'qsgd:16' or "
+                         "'block_topk:256,16', optionally '@lam'); empty = "
+                         "uncompressed dense broadcast")
+    ap.add_argument("--worker-comps", default="",
+                    help="heterogeneous fleet: ';'-separated compressor "
+                         "specs assigned round-robin to the n workers (or "
+                         "an explicit length-n list), e.g. "
+                         "'topk:64;randk:64;qsgd:16'.  Overrides "
+                         "--compressor; mixed fleets need --agg dense_psum")
     ap.add_argument("--participation", default="full",
                     help="per-round client sampling: full | bernoulli:p | "
                          "fixed:s (federated execution mode; absent workers "
@@ -114,46 +123,78 @@ def main(argv=None):
     if args.algo == "none":
         algo = EFBV(Identity(), lam=1.0, nu=1.0)
     else:
-        comp = make_compressor(args.compressor)
+        if args.worker_comps:
+            # heterogeneous fleet: worker i runs its own compressor; (lam, nu)
+            # tuned for the aggregated mixed-fleet constants (theory.tune_fleet)
+            comp = make_fleet(args.worker_comps, n)
+        else:
+            comp = make_compressor(args.compressor)
         # federated rounds tune (lam, nu) for the effective compressor b*C,
         # b ~ Bernoulli(E|S_t|/n) -- theory.tune_partial / docs/theory.md
         algo = EFBV.make(comp, d=max(cfg.d_model * max(cfg.d_ff, 1), 1), n=n,
                          mode=args.algo,
                          participation=participation.fraction(n) if federated
                          else None)
-    server_comp = make_compressor(args.server_comp) if args.server_comp else None
-    if server_comp is not None and args.trainer == "fsdp":
-        raise SystemExit("--server-comp requires --trainer shard_map")
+    if algo.fleet is not None and args.agg != "dense_psum":
+        raise SystemExit("--worker-comps with distinct members needs a "
+                         "uniform message shape: use --agg dense_psum")
+    downlink = Downlink.parse(args.downlink)
     print(f"[train] arch={cfg.name} family={cfg.family} params~{cfg.param_count():,} "
           f"workers={n} algo={args.algo} lam={algo.lam:.4g} nu={algo.nu:.4g} "
           f"agg={args.agg}"
           + (f" participation={args.participation}" if federated else "")
-          + (f" server_comp={args.server_comp}" if server_comp else ""))
+          + (f" downlink={args.downlink}" if downlink else "")
+          + (f" fleet={args.worker_comps}" if algo.fleet is not None else ""))
 
     key = jax.random.key(args.seed)
     params = model.init(key)
     state = init_train_state(params, opt, mesh,
-                             bidirectional=server_comp is not None)
+                             bidirectional=downlink is not None)
 
     # exact wire accounting for the codec payload (docs/wire_format.md);
     # every compressor declares a codec, so this always prints
-    if args.agg == "sparse_allgather":
-        from repro.distributed import wire
-        fmt = wire.format_for(algo.compressor, params,
-                              wire_dtype=args.wire_dtype)
-        up = fmt.bits_per_round()
-        dense = sum(l.size for l in fmt.leaves) * 32
-        kinds = sorted({l.kind for l in fmt.leaves})
+    from repro.distributed import wire
+    up_fmt = wire.format_for(algo.compressor, params,
+                             wire_dtype=args.wire_dtype) \
+        if args.agg == "sparse_allgather" else None
+    if up_fmt is not None:
+        up = up_fmt.bits_per_round()
+        dense = up_fmt.dense_bits()
+        kinds = sorted({l.kind for l in up_fmt.leaves})
         print(f"[train] wire: codec={','.join(kinds)} {up} bits/round/worker "
               f"uplink ({up / 8 / 2**20:.2f} MiB, "
               f"{up / max(dense, 1):.4f}x dense fp32)")
         if federated:
             exp_s = participation.fraction(n) * n
-            fed = fmt.bits_per_round(n_workers=n, participants=exp_s)
-            full = fmt.bits_per_round(n_workers=n)
+            fed = up_fmt.bits_per_round(n_workers=n, participants=exp_s)
+            full = up_fmt.bits_per_round(n_workers=n)
             print(f"[train] wire: federated round (mask bitmap + E|S_t|={exp_s:g}"
                   f" of {n} payloads) ~{fed / 8 / 2**20:.2f} MiB total "
                   f"({fed / max(full, 1):.3f}x the full-participation round)")
+    elif algo.fleet is not None:
+        fmts = wire.fleet_formats(algo.fleet, params,
+                                  wire_dtype=args.wire_dtype)
+        bits = wire.fleet_bits_per_round(fmts)
+        per = sorted({f.bits_per_round() for f in fmts})
+        print(f"[train] wire: mixed fleet of {len(set(algo.fleet))} member "
+              f"kinds, per-worker bits in {per}, {bits} bits/round uplink "
+              f"(would-be payload; dense_psum carries dense tensors)")
+    if downlink is not None:
+        # the downlink accounting prints for EVERY agg mode: the broadcast
+        # payload is real regardless of how the uplink travels
+        dfmt = downlink.format_for(params, wire_dtype=args.wire_dtype)
+        down = dfmt.downlink_bits_per_round()
+        dense = dfmt.dense_bits()
+        up = (up_fmt.bits_per_round() if up_fmt is not None else dense)
+        total = wire.total_round_bits(
+            up_fmt, dfmt, n_workers=n,
+            participants=participation.fraction(n) * n if federated
+            else None) if up_fmt is not None else n * up + down
+        dense_total = n * dense + dense  # fp32 both directions
+        print(f"[train] wire: downlink {down} bits/round broadcast "
+              f"({down / max(dense, 1):.4f}x dense fp32); total "
+              f"{total:g} bits/round up+down "
+              f"({total / max(dense_total, 1):.4f}x dense both ways)")
     if args.trainer == "fsdp":
         from repro.train import fsdp_state_shardings
         shardings = fsdp_state_shardings(mesh, model.param_specs(), state)
@@ -175,11 +216,12 @@ def main(argv=None):
         step_fn = make_train_step_fsdp(loss_fn, opt, algo, mesh,
                                        agg_mode=args.agg,
                                        wire_dtype=args.wire_dtype,
+                                       downlink=downlink,
                                        participation=participation)
     else:
         step_fn = make_train_step(loss_fn, opt, algo, mesh, agg_mode=args.agg,
                                   wire_dtype=args.wire_dtype,
-                                  server_comp=server_comp,
+                                  downlink=downlink,
                                   participation=participation)
 
     t_start = time.time()

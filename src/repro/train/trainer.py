@@ -19,6 +19,15 @@ mask before phase 1 and threads it through the shard_map as a worker-sharded
 (n,) array: sampled workers run Algorithm 1 unchanged, absent workers' wire
 messages are gated to decode-zero and their h_i stay stale -- see
 docs/algorithms.md#partial-participation--stochastic-gradients.
+
+Bidirectional compression (``downlink=``) adds a phase 3: workers evaluate
+gradients at the master's downlink control variate w (their shared model
+reconstruction) and the round ends with ONE compressed broadcast through
+the downlink codec (aggregate.broadcast_global) -- identical for present
+and absent workers, so w stays replicated.  Heterogeneous fleets
+(``algo.fleet``) dispatch each worker's own compressor inside phase 1 via
+lax.switch on the worker index (dense_psum mode; mixed payload shapes
+cannot stack).
 """
 
 from __future__ import annotations
@@ -30,9 +39,10 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.core.contract import Compressor
-from repro.core.efbv import EFBV, Participation, participation_key
-from repro.distributed.aggregate import combine_global, compress_local
+from repro.core.efbv import (EFBV, Downlink, Participation, downlink_key,
+                             participation_key)
+from repro.distributed.aggregate import (broadcast_global, combine_global,
+                                         compress_local)
 from repro.distributed.spec import (
     batch_spec, linear_worker_index, stack_worker_spec, to_named_sharding,
 )
@@ -46,11 +56,13 @@ class TrainState(NamedTuple):
     params: PyTree
     opt_state: PyTree
     h: PyTree        # per-worker control variates, leading axis n
-    h_avg: PyTree    # master control variate
+    h_avg: PyTree    # master's uplink control variate
     step: jax.Array
-    # workers' reconstruction of the model under bidirectional compression
-    # (EF21-BC-style server side); None when the broadcast is uncompressed.
-    x_hat: PyTree = None
+    # the master's DOWNLINK control variate w: the workers' shared
+    # reconstruction of the model under bidirectional compression (one
+    # replicated copy -- every worker decodes the same broadcast).  None
+    # when the broadcast is uncompressed.
+    w: PyTree = None
 
 
 def init_train_state(params: PyTree, optimizer: Optimizer, mesh, *,
@@ -64,7 +76,7 @@ def init_train_state(params: PyTree, optimizer: Optimizer, mesh, *,
         h=h,
         h_avg=zeros,
         step=jnp.zeros((), jnp.int32),
-        x_hat=jax.tree.map(jnp.array, params) if bidirectional else None,
+        w=jax.tree.map(jnp.array, params) if bidirectional else None,
     )
 
 
@@ -87,10 +99,10 @@ def train_state_shardings(mesh, param_specs: PyTree, state: TrainState) -> Train
     h_sh = to_named_sharding(mesh, stack_worker_spec(mesh, param_specs))
     havg_sh = jax.tree.map(lambda l: NamedSharding(mesh, spec_for(l)), state.h_avg)
     rep = NamedSharding(mesh, P())
-    xhat_sh = None if state.x_hat is None \
-        else jax.tree.map(lambda _, s: s, state.x_hat, p_shard)
+    w_sh = None if state.w is None \
+        else jax.tree.map(lambda _, s: s, state.w, p_shard)
     return TrainState(params=p_shard, opt_state=opt_sh, h=h_sh, h_avg=havg_sh,
-                      step=rep, x_hat=xhat_sh)
+                      step=rep, w=w_sh)
 
 
 def make_train_step(
@@ -102,7 +114,7 @@ def make_train_step(
     agg_mode: str = "dense_psum",
     wire_dtype: str = "float32",
     remat: bool = False,
-    server_comp: Optional[Compressor] = None,
+    downlink: Optional[Downlink] = None,
     participation: Optional[Participation] = None,
 ) -> Callable[[TrainState, Any, jax.Array], Tuple[TrainState, dict]]:
     """Build the jitted multi-pod train step.
@@ -114,12 +126,15 @@ def make_train_step(
     ``agg_mode='sparse_allgather'`` (float32 / bfloat16 / float16; quantized
     and bit-packed codecs ignore it).
 
-    With ``server_comp`` the step runs *bidirectional* compression (the
-    EF21-BC extension, core/efbv.py::run_bidirectional, ported into the
-    sharded path): workers evaluate gradients at their reconstruction x_hat
-    of the model, and the server broadcasts the compressed model innovation
-    C_s(x^{t+1} - x_hat^t) instead of x^{t+1}.  Requires a TrainState built
-    with ``init_train_state(..., bidirectional=True)``.
+    With ``downlink`` the step runs *bidirectional* compression
+    (core/efbv.py::Downlink / run_bidirectional, same math here): workers
+    evaluate gradients at the master's downlink control variate w -- their
+    shared reconstruction of the model -- and the round ends with ONE
+    compressed broadcast C_s(x^{t+1} - w^t) through the downlink codec,
+    which every worker (present or absent under partial participation)
+    decodes identically.  Requires a TrainState built with
+    ``init_train_state(..., bidirectional=True)``.  An Identity downlink
+    is lossless and keeps the run bit-identical to ``downlink=None``.
 
     ``participation`` switches on the federated execution mode
     (docs/algorithms.md#partial-participation--stochastic-gradients): each
@@ -139,12 +154,13 @@ def make_train_step(
     # ---- phase 1: worker-local grad + compress (manual over worker axes) ----
     # One body shared by both phase-1 formulations below, so the shard_map
     # and vmap paths cannot drift apart.
-    def worker_body(params_for_grad, h_i, batch_i, kw, m=None):
+    def worker_body(params_for_grad, h_i, batch_i, kw, m=None, widx=None):
         (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             params_for_grad, batch_i)
         grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
         message, h_i_new = compress_local(algo, kw, grads, h_i, mode=agg_mode,
-                                          wire_dtype=wire_dtype, mask=m)
+                                          wire_dtype=wire_dtype, mask=m,
+                                          worker=widx)
         local_metrics = {
             "loss": loss,
             "grad_norm": global_norm(grads),
@@ -166,7 +182,7 @@ def make_train_step(
         h_loc = jax.tree.map(lambda a: a[0], h)
         m = None if mask is None else mask[0]
         message, h_loc_new, local_metrics = worker_body(
-            params_v, h_loc, batch, kw, m)
+            params_v, h_loc, batch, kw, m, widx)
         # stack everything on the worker axis
         stack = lambda t: jax.tree.map(lambda a: a[None], t)
         return stack(message), stack(h_loc_new), stack(local_metrics)
@@ -200,21 +216,22 @@ def make_train_step(
 
             def one_worker(i, h_i, wbatch):
                 return worker_body(params, h_i, wbatch,
-                                   jax.random.fold_in(key, i))
+                                   jax.random.fold_in(key, i), widx=i)
 
             if mask is None:
                 return jax.vmap(one_worker)(jnp.arange(n), h, wb)
 
             def one_worker_masked(i, h_i, wbatch, m):
                 return worker_body(params, h_i, wbatch,
-                                   jax.random.fold_in(key, i), m)
+                                   jax.random.fold_in(key, i), m, i)
 
             return jax.vmap(one_worker_masked)(jnp.arange(n), h, wb, mask)
 
     # ---- full step: phase 1 + phase 2 under one jit ---------------------------
     def train_step(state: TrainState, batch, key):
-        # under bidirectional compression workers only ever see x_hat
-        eval_params = state.x_hat if server_comp is not None else state.params
+        # under bidirectional compression workers only ever see w, the
+        # master's downlink control variate (their model reconstruction)
+        eval_params = state.w if downlink is not None else state.params
         if federated:
             # sampled OUTSIDE phase 1 so reference and sharded paths draw the
             # identical subset S_t from the identical key
@@ -239,19 +256,16 @@ def make_train_step(
         if federated:
             metrics["participants"] = jnp.sum(mask)
 
-        x_hat = state.x_hat
-        if server_comp is not None:
-            # server-side EF: broadcast C_s(x^{t+1} - x_hat^t); every worker
-            # applies the same innovation, so one replicated copy suffices.
-            k_s = jax.random.fold_in(key, n + 0x5e)
-            leaves, treedef = jax.tree.flatten(
-                jax.tree.map(lambda a, b: a - b, params, x_hat))
-            q = [server_comp(jax.random.fold_in(k_s, j), l)
-                 for j, l in enumerate(leaves)]
-            x_hat = jax.tree.map(lambda hv, qv: hv + qv, x_hat,
-                                 jax.tree.unflatten(treedef, q))
-            metrics["xhat_err"] = global_norm(
-                jax.tree.map(lambda a, b: a - b, params, x_hat))
+        w = state.w
+        if downlink is not None:
+            # phase 3: one compressed broadcast through the downlink codec;
+            # every worker applies the same decoded innovation, so one
+            # replicated copy of w suffices (and absent workers under
+            # partial participation decode the identical payload).
+            w, _ = broadcast_global(downlink, downlink_key(key), params, w,
+                                    wire_dtype=wire_dtype)
+            metrics["w_err"] = global_norm(
+                jax.tree.map(lambda a, b: a - b, params, w))
 
         new_state = TrainState(
             params=params,
@@ -259,7 +273,7 @@ def make_train_step(
             h=h_new,
             h_avg=h_avg_new,
             step=state.step + 1,
-            x_hat=x_hat,
+            w=w,
         )
         return new_state, metrics
 
@@ -313,8 +327,12 @@ def fsdp_state_shardings(mesh, param_specs: PyTree, state: TrainState
     h_sh = to_named_sharding(mesh, stack_worker_spec(mesh, param_specs))
     havg_sh = jax.tree.map(lambda l: NamedSharding(mesh, spec_for(l)), state.h_avg)
     rep = NamedSharding(mesh, P())
+    # the downlink control variate w shards like the params (FSDP included:
+    # it is read back densely by every worker's grad anyway)
+    w_sh = None if state.w is None \
+        else jax.tree.map(lambda _, s: s, state.w, p_sh)
     return TrainState(params=p_sh, opt_state=opt_sh, h=h_sh, h_avg=havg_sh,
-                      step=rep)
+                      step=rep, w=w_sh)
 
 
 def make_train_step_fsdp(
@@ -325,12 +343,14 @@ def make_train_step_fsdp(
     *,
     agg_mode: str = "dense_psum",
     wire_dtype: str = "float32",
+    downlink: Optional[Downlink] = None,
     participation: Optional[Participation] = None,
 ) -> Callable[[TrainState, Any, jax.Array], Tuple[TrainState, dict]]:
     """Pure-GSPMD train step: vmap over the worker axis for per-worker grads,
     FSDP-sharded params/optimizer state, same EF-BV wire as the shard_map
-    trainer (compress_local / combine_global are shared, incl. the federated
-    participation masking)."""
+    trainer (compress_local / combine_global / broadcast_global are shared,
+    incl. the federated participation masking and the compressed downlink
+    broadcast)."""
     waxes = worker_axes(mesh)
     n = num_workers(mesh)
     federated = participation is not None and not participation.is_full
@@ -352,21 +372,25 @@ def make_train_step_fsdp(
         return loss, aux, grads, keys
 
     def train_step(state: TrainState, batch, key):
-        loss, aux, grads, keys = worker_grads(state.params, batch, key)
+        eval_params = state.w if downlink is not None else state.params
+        loss, aux, grads, keys = worker_grads(eval_params, batch, key)
         # pin the stacked grads to (worker, model)-sharding
         gspec = stack_worker_spec(mesh, jax.tree.map(
             lambda g: P(*([None] * (g.ndim - 1))), state.h_avg))
+        widx = jnp.arange(n)
         if federated:
             mask = participation.sample_mask(participation_key(key), n)
             message, h_new = jax.vmap(
-                lambda k, g, h, m: compress_local(algo, k, g, h, mode=agg_mode,
-                                                  wire_dtype=wire_dtype, mask=m)
-            )(keys, grads, state.h, mask)
+                lambda k, g, h, m, i: compress_local(
+                    algo, k, g, h, mode=agg_mode, wire_dtype=wire_dtype,
+                    mask=m, worker=i)
+            )(keys, grads, state.h, mask, widx)
         else:
             message, h_new = jax.vmap(
-                lambda k, g, h: compress_local(algo, k, g, h, mode=agg_mode,
-                                               wire_dtype=wire_dtype)
-            )(keys, grads, state.h)
+                lambda k, g, h, i: compress_local(
+                    algo, k, g, h, mode=agg_mode, wire_dtype=wire_dtype,
+                    worker=i)
+            )(keys, grads, state.h, widx)
         g, h_avg_new = combine_global(algo, message, state.h_avg,
                                       n_workers=n, mode=agg_mode,
                                       wire_dtype=wire_dtype)
@@ -381,8 +405,14 @@ def make_train_step_fsdp(
                    **{k: jnp.mean(v) for k, v in aux.items()}}
         if federated:
             metrics["participants"] = jnp.sum(mask)
+        w = state.w
+        if downlink is not None:
+            w, _ = broadcast_global(downlink, downlink_key(key), params, w,
+                                    wire_dtype=wire_dtype)
+            metrics["w_err"] = global_norm(
+                jax.tree.map(lambda a, b: a - b, params, w))
         new_state = TrainState(params=params, opt_state=opt_state, h=h_new,
-                               h_avg=h_avg_new, step=state.step + 1)
+                               h_avg=h_avg_new, step=state.step + 1, w=w)
         return new_state, metrics
 
     return jax.jit(train_step, donate_argnums=(0,))

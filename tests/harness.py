@@ -197,6 +197,83 @@ def run_federated_trajectory(kernel: str, *, compressor, steps: int, n: int,
             "round_bits": wire.federated_round_bits(fmt, masks[-1])}
 
 
+def run_bidirectional_trajectory(kernel: str, *, compressor, downlink,
+                                 steps: int, n: int, d: int, lam: float,
+                                 nu: float, gamma: float, participation=None,
+                                 seed: int = 0, wire_dtype: str = "float32"
+                                 ) -> Dict[str, Array]:
+    """EF-BV over a fully bidirectional wire: any uplink codec, any
+    :class:`repro.core.efbv.Downlink` broadcast channel, optionally the
+    federated execution mode on top.
+
+    The uplink is exactly :func:`run_federated_trajectory`'s recursion
+    (same key folds, same pack backend ``kernel``, same mask gating when
+    ``participation`` is given -- an all-ones/None mask reduces to
+    :func:`run_codec_trajectory`); workers evaluate gradients at the shared
+    reconstruction ``w``, and each round ends with ONE broadcast through
+    the downlink codec, drawn from the shared downlink_key derivation.
+    An Identity downlink assigns w = x verbatim, so identity-downlink +
+    full-participation trajectories are BIT-IDENTICAL to
+    run_codec_trajectory's (the PR-3 pinning; tests/test_wire_codecs.py and
+    tests/test_federated.py hold the harness to it).
+
+    Returns the (x, w, h) trajectories, the per-round masks (all-ones when
+    full), the last round's payloads both ways, and the exact bit
+    accounting of the last round: uplink, downlink, total, and the dense
+    fp32 both-ways baseline.
+    """
+    from repro.core.efbv import downlink_key, participation_key
+
+    codec = wire.codec_of(compressor, (d,), d, wire_dtype)
+    grad_fn = quadratic_grads(n, d, seed)
+    key = jax.random.key(seed + 0xC0DEC)
+
+    x = jnp.zeros((d,), jnp.float32)
+    w = jnp.zeros((d,), jnp.float32)  # downlink.init(x0), x0 = 0
+    h = jnp.zeros((n, d), jnp.float32)
+    h_avg = jnp.zeros((d,), jnp.float32)
+    xs, ws, hs, masks = [], [], [], []
+    payload = down_payload = None
+    for t in range(steps):
+        kt = jax.random.fold_in(key, t)
+        mask = (jnp.ones((n,), jnp.float32) if participation is None
+                else participation.sample_mask(participation_key(kt), n))
+        g = grad_fn(w)  # workers only ever see the reconstruction
+        payloads, h_i = [], []
+        for i in range(n):
+            ki = jax.random.fold_in(kt, i)
+            p, h_new = wire.encode_update(codec, ki, g[i], h[i], lam,
+                                          kernel=kernel)
+            if participation is not None:
+                p = codec.mask_message(p, mask[i])
+                h_new = jnp.where(mask[i] > 0, h_new, h[i])
+            payloads.append(p)
+            h_i.append(h_new)
+        h = jnp.stack(h_i)
+        payload = jax.tree.map(lambda *xs_: jnp.stack(xs_), *payloads)
+        d_bar = codec.decode_sum(payload) / n
+        x = x - gamma * (h_avg + nu * d_bar)
+        h_avg = h_avg + lam * d_bar
+        w, down_payload = downlink.broadcast(downlink_key(kt), x, w,
+                                             wire_dtype=wire_dtype)
+        xs.append(x)
+        ws.append(w)
+        hs.append(h)
+        masks.append(mask)
+    fmt = wire.WireFormat((codec,))
+    dfmt = downlink.format_for(jnp.zeros((d,)), wire_dtype=wire_dtype)
+    up_bits = (fmt.bits_per_round(n_workers=n) if participation is None
+               else wire.federated_round_bits(fmt, masks[-1]))
+    down_bits = dfmt.downlink_bits_per_round()
+    return {"x": jnp.stack(xs), "w": jnp.stack(ws), "h": jnp.stack(hs),
+            "masks": jnp.stack(masks), "payload": payload,
+            "down_payload": down_payload, "codec": codec,
+            "down_codec": dfmt.leaves[0],
+            "round_bits": {"up": up_bits, "down": down_bits,
+                           "total": up_bits + down_bits,
+                           "dense_both_ways": 32 * d * n + 32 * d}}
+
+
 def assert_bit_identical(a, b, context: str = ""):
     """Exact equality (values AND dtypes) across two pytrees of arrays."""
     la, lb = jax.tree.leaves(a), jax.tree.leaves(b)

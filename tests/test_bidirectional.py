@@ -1,0 +1,554 @@
+"""Bidirectional wire compression + heterogeneous worker fleets.
+
+Three families of guarantees:
+
+* the differential harness extends to the downlink: oracle == Pallas
+  interpret (== compiled on TPU) over randomized BIDIRECTIONAL and
+  bidirectional-FEDERATED trajectories, and an Identity downlink at full
+  participation is *bit-identical* to the pre-downlink (PR-3)
+  run_codec_trajectory / run_federated_trajectory pinnings;
+
+* the trainers share the same downlink math (broadcast_global from the
+  shared downlink_key), pinned against a hand-rolled reference round;
+
+* mixed fleets: per-worker compressors in the reference step and the
+  dense_psum trainers, with the (eta_i, omega_i) aggregation of
+  theory.tune_fleet (worst-case certified, averaged variant monotone).
+
+The 8-device shard_map leg lives at the bottom (slow marker; the nightly CI
+job runs it).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from harness import (assert_bit_identical, codec_impls,
+                     run_bidirectional_trajectory, run_codec_trajectory,
+                     run_federated_trajectory)
+from repro.core import (
+    BlockTopK, Downlink, EFBV, Identity, Natural, Participation, QSGD, RandK,
+    SignNorm, TopK, make_compressor, make_fleet, run, run_bidirectional,
+    theory, tune_for,
+)
+from repro.core.compressors import MNice, expand_fleet
+from repro.distributed import wire
+from repro.distributed.aggregate import (broadcast_global, compress_local,
+                                         efbv_aggregate_reference)
+
+KEY = jax.random.key(0)
+
+TRAJ = dict(steps=5, n=4, d=256, lam=0.8, nu=0.9, gamma=0.05)
+
+# uplink compressors with fused kernels (the interesting backends) and a
+# deterministic one; downlinks cover sparse, quantized and dense broadcasts
+UPLINKS = [BlockTopK(128, 8), RandK(32), QSGD(16)]
+DOWNLINKS = [Downlink(BlockTopK(128, 16)), Downlink(QSGD(16)),
+             Downlink(TopK(48))]
+
+
+# ---------------------------------------------------------------------------
+# harness: backend bit-identity over bidirectional (+ federated) trajectories
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("up", UPLINKS, ids=lambda c: type(c).__name__)
+@pytest.mark.parametrize("down", DOWNLINKS,
+                         ids=lambda d: type(d.compressor).__name__)
+def test_bidirectional_trajectory_bit_identical_across_backends(up, down):
+    codec = wire.codec_of(up, (TRAJ["d"],), TRAJ["d"])
+    ref = run_bidirectional_trajectory("oracle", compressor=up, downlink=down,
+                                       **TRAJ)
+    for impl in codec_impls(codec):
+        got = run_bidirectional_trajectory(impl, compressor=up, downlink=down,
+                                           **TRAJ)
+        assert_bit_identical(
+            (got["x"], got["w"], got["h"], got["payload"],
+             got["down_payload"]),
+            (ref["x"], ref["w"], ref["h"], ref["payload"],
+             ref["down_payload"]),
+            f"impl={impl} up={up} down={down.compressor}")
+    assert float(jnp.linalg.norm(ref["x"][-1])) > 0
+
+
+@pytest.mark.parametrize("up", UPLINKS, ids=lambda c: type(c).__name__)
+def test_bidirectional_federated_bit_identical_across_backends(up):
+    """Randomized per-round participation on top of a compressed downlink:
+    the backend pinning still holds, and the masks are genuinely random."""
+    part = Participation(kind="bernoulli", p=0.5)
+    down = Downlink(QSGD(16))
+    codec = wire.codec_of(up, (TRAJ["d"],), TRAJ["d"])
+    ref = run_bidirectional_trajectory("oracle", compressor=up, downlink=down,
+                                       participation=part, **TRAJ)
+    m = np.asarray(ref["masks"])
+    assert 0 < m.sum() < m.size  # the trajectory really is partial
+    for impl in codec_impls(codec):
+        got = run_bidirectional_trajectory(impl, compressor=up, downlink=down,
+                                           participation=part, **TRAJ)
+        assert_bit_identical(
+            (got["x"], got["w"], got["h"], got["masks"], got["payload"]),
+            (ref["x"], ref["w"], ref["h"], ref["masks"], ref["payload"]),
+            f"impl={impl} up={up} federated")
+
+
+# ---------------------------------------------------------------------------
+# harness: identity downlink reproduces the PR-3 trajectories bit-for-bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("up", UPLINKS + [SignNorm(), Natural()],
+                         ids=lambda c: type(c).__name__)
+def test_identity_downlink_full_participation_is_pr3_trajectory(up):
+    """downlink=Identity + full participation == run_codec_trajectory
+    (x, h AND the uplink payloads), bit for bit -- the downlink channel is
+    provably a no-op when lossless."""
+    bi = run_bidirectional_trajectory("oracle", compressor=up,
+                                      downlink=Downlink(Identity()), **TRAJ)
+    uni = run_codec_trajectory("oracle", compressor=up, **TRAJ)
+    assert_bit_identical((bi["x"], bi["h"], bi["payload"]),
+                         (uni["x"], uni["h"], uni["payload"]),
+                         f"up={up}")
+    assert_bit_identical(bi["w"], bi["x"], "w == x under identity downlink")
+
+
+def test_identity_downlink_federated_is_pr3_federated_trajectory():
+    """Same pinning for the federated regime: identity downlink + random
+    masks == run_federated_trajectory, including the masks themselves."""
+    part = Participation(kind="bernoulli", p=0.5)
+    up = BlockTopK(128, 8)
+    bi = run_bidirectional_trajectory("oracle", compressor=up,
+                                      downlink=Downlink(Identity()),
+                                      participation=part, **TRAJ)
+    fed = run_federated_trajectory("oracle", compressor=up,
+                                   participation=part, **TRAJ)
+    assert_bit_identical((bi["x"], bi["h"], bi["masks"], bi["payload"]),
+                         (fed["x"], fed["h"], fed["masks"], fed["payload"]),
+                         "identity downlink, federated")
+
+
+# ---------------------------------------------------------------------------
+# bit accounting of the full round
+# ---------------------------------------------------------------------------
+
+def test_qsgd_both_ways_total_round_bits_under_035x():
+    """Acceptance: qsgd:16 on both directions measures <= 0.35x of the
+    dense fp32 up+down traffic on a whole harness trajectory."""
+    out = run_bidirectional_trajectory(
+        "oracle", compressor=QSGD(16), downlink=Downlink(QSGD(16)),
+        steps=3, n=8, d=4096, lam=0.8, nu=0.9, gamma=0.05)
+    rb = out["round_bits"]
+    assert rb["total"] == rb["up"] + rb["down"]
+    assert rb["total"] <= 0.35 * rb["dense_both_ways"], rb
+    # measured, not estimated: stacked uplink payload + one broadcast
+    up_meas = 8 * wire.payload_bytes(out["payload"])
+    down_meas = 8 * wire.payload_bytes(out["down_payload"])
+    assert up_meas == rb["up"]
+    assert down_meas == rb["down"]
+
+
+def test_federated_round_bits_compose_with_downlink():
+    """Federated uplink accounting (mask bitmap + |S_t| payloads) composes
+    with the single downlink broadcast: absent workers still receive it."""
+    part = Participation(kind="fixed", s=2)
+    out = run_bidirectional_trajectory(
+        "oracle", compressor=QSGD(16), downlink=Downlink(QSGD(16)),
+        participation=part, steps=2, n=6, d=512, lam=0.8, nu=0.9, gamma=0.05)
+    fmt = wire.WireFormat((out["codec"],))
+    assert out["round_bits"]["up"] == fmt.bits_per_round(
+        n_workers=6, participants=2)
+    assert out["round_bits"]["down"] \
+        == wire.WireFormat((out["down_codec"],)).downlink_bits_per_round()
+
+
+# ---------------------------------------------------------------------------
+# trainer == reference: the downlink broadcast draws the same key everywhere
+# ---------------------------------------------------------------------------
+
+def test_trainer_downlink_matches_reference_round():
+    """Each shard_map-trainer step with a compressed downlink equals the
+    hand-rolled reference round (compress/combine + broadcast_global from
+    downlink_key(step_key)) on params, h, h_avg and w, with the reference
+    RESYNCED to the trainer's state every round: quantized/sparsified
+    channels are discontinuous, so the ULP-level fusion differences between
+    the trainer's jitted step and the standalone reference would decorrelate
+    whole trajectories (the same reason the 1-vs-8-device legs use
+    allclose).  Per-round agreement is what pins the key folds and the
+    broadcast semantics."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core.efbv import downlink_key
+    from repro.launch.mesh import make_mesh
+    from repro.optim import constant, sgd
+    from repro.optim.optimizers import apply_updates
+    from repro.train import (init_train_state, make_train_step,
+                             train_state_shardings)
+
+    mesh = make_mesh((1, 1))
+    D = 64
+    params = {"p": jax.random.normal(KEY, (D,)) * 0.1}
+    algo = EFBV(QSGD(8), lam=0.9, nu=0.9)
+    down = Downlink(BlockTopK(16, 4))
+    opt = sgd(constant(0.05))
+
+    st = init_train_state(jax.tree.map(jnp.array, params), opt, mesh,
+                          bidirectional=True)
+    sh = train_state_shardings(mesh, {"p": P(None)}, st)
+    st = jax.tree.map(lambda x, s: jax.device_put(x, s), st, sh)
+    step = make_train_step(
+        lambda p, b: (jnp.mean((b["x"] @ p["p"] - b["y"]) ** 2), {}),
+        opt, algo, mesh, agg_mode="sparse_allgather", downlink=down)
+
+    for i in range(4):
+        kb = jax.random.fold_in(jax.random.key(9), i)
+        x = jax.random.normal(kb, (4, D))
+        batch = {"x": x, "y": x @ jnp.ones((D,)) * 0.3}
+        k = jax.random.fold_in(KEY, i)
+        # resync the reference to the trainer's state BEFORE stepping (the
+        # jitted step donates its buffers, so copy out first)
+        w_ref = {"p": jnp.array(st.w["p"])}
+        p_prev = {"p": jnp.array(st.params["p"])}
+        h_prev = {"p": jnp.array(st.h["p"])}
+        havg_prev = {"p": jnp.array(st.h_avg["p"])}
+        st, _ = step(st, batch, k)
+
+        grads = jax.grad(
+            lambda p: jnp.mean((x @ p["p"] - batch["y"]) ** 2))(w_ref)
+        grads = {"p": grads["p"][None]}
+        keys = jax.random.fold_in(k, 0)[None]
+        g, h_ref, havg_ref = efbv_aggregate_reference(
+            algo, keys, grads, h_prev, havg_prev, mode="sparse_allgather")
+        updates, _ = opt.update(g, opt.init(p_prev), p_prev)
+        p_ref = apply_updates(p_prev, updates)
+        # the downlink's top-k selection is discontinuous in params, so the
+        # broadcast is verified against the trainer's OWN params output
+        # (bit-identical inputs -> bit-identical broadcast)
+        w_check, _ = broadcast_global(down, downlink_key(k),
+                                      {"p": jnp.array(st.params["p"])}, w_ref)
+
+        for got, want, name in [(st.params["p"], p_ref["p"], "params"),
+                                (st.h["p"], h_ref["p"], "h"),
+                                (st.h_avg["p"], havg_ref["p"], "h_avg")]:
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-6, atol=1e-7,
+                                       err_msg=f"{name} @ round {i}")
+        np.testing.assert_array_equal(np.asarray(st.w["p"]),
+                                      np.asarray(w_check["p"]),
+                                      err_msg=f"w @ round {i}")
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous fleets: theory aggregation
+# ---------------------------------------------------------------------------
+
+def test_fleet_constants_worst_and_mean():
+    etas, omegas = [0.0, 0.5, 0.9], [15.0, 0.0, 3.0]
+    e_w, o_w, oav_w = theory.fleet_constants(etas, omegas, n=4)
+    assert (e_w, o_w) == (0.9, 15.0)
+    assert oav_w == 15.0 / 4
+    e_m, o_m, oav_m = theory.fleet_constants(etas, omegas, n=4,
+                                             aggregate="mean")
+    assert np.isclose(e_m, sum(etas) / 3) and np.isclose(o_m, 6.0)
+    assert np.isclose(oav_m, 6.0 / 4)
+    with pytest.raises(ValueError):
+        theory.fleet_constants([], [], n=4)
+    with pytest.raises(ValueError):
+        theory.fleet_constants(etas, omegas, n=4, aggregate="median")
+
+
+def test_fleet_tuning_homogeneous_collapses_and_mean_is_tighter():
+    """A homogeneous fleet tunes exactly like the single compressor; the
+    averaged aggregate never yields a smaller stepsize than worst-case."""
+    d, n = 256, 8
+    comp = TopK(16)
+    t_single = tune_for(comp, d, n, L=1.0, Ltilde=1.0)
+    t_fleet = tune_for((comp,) * n, d, n, L=1.0, Ltilde=1.0)
+    assert t_single.lam == t_fleet.lam and t_single.nu == t_fleet.nu
+    assert t_single.gamma == t_fleet.gamma
+
+    mixed = [TopK(16), RandK(64), QSGD(16)]
+    etas = [c.eta(d) for c in mixed]
+    omegas = [c.omega(d) for c in mixed]
+    t_worst = theory.tune_fleet(etas, omegas, n=n, L=1.0, Ltilde=1.0)
+    t_mean = theory.tune_fleet(etas, omegas, n=n, aggregate="mean",
+                               L=1.0, Ltilde=1.0)
+    assert t_mean.gamma >= t_worst.gamma
+    assert 0 < t_worst.r < 1
+
+
+def test_fleet_tuning_composes_participation_per_member():
+    """Bernoulli(p) participation composes into EACH member before the
+    aggregation (skipping a round is a per-worker event); p = 1 is a
+    no-op."""
+    d, n, p = 256, 8, 0.5
+    mixed = [TopK(16), QSGD(16)]
+    etas = [c.eta(d) for c in mixed]
+    omegas = [c.omega(d) for c in mixed]
+    t_p1 = theory.tune_fleet(etas, omegas, n=n, participation=1.0)
+    t_ref = theory.tune_fleet(etas, omegas, n=n)
+    assert (t_p1.lam, t_p1.nu) == (t_ref.lam, t_ref.nu)
+    t_half = theory.tune_fleet(etas, omegas, n=n, participation=p)
+    e_comp = [theory.participation_eta(p, e) for e in etas]
+    o_comp = [theory.participation_omega(p, e, o)
+              for e, o in zip(etas, omegas)]
+    e, o, oav = theory.fleet_constants(e_comp, o_comp, n=n)
+    assert t_half.eta == e and t_half.omega == o and t_half.omega_av == oav
+    # and the sampled regime shrinks the contraction budget
+    assert t_half.r >= t_ref.r
+
+
+def test_tune_for_accepts_fleet_and_efbv_make_collapses_uniform():
+    d, n = 256, 6
+    fleet = make_fleet("topk:16;qsgd:16", n)
+    assert len(fleet) == n
+    assert isinstance(fleet[0], TopK) and isinstance(fleet[1], QSGD)
+    assert fleet[2] == fleet[0]  # round-robin
+    t = tune_for(fleet, d, n)
+    assert 0 < t.lam <= 1.0
+
+    algo = EFBV.make(fleet, d=d, n=n)
+    assert algo.fleet == fleet and algo.compressor == fleet[0]
+    uniform = EFBV.make(make_fleet("topk:16", n), d=d, n=n)
+    assert uniform.fleet is None  # collapses to the homogeneous fast path
+
+    with pytest.raises(ValueError):
+        make_fleet("topk:16;" * 7, n)  # 7 members, 6 workers
+    with pytest.raises(ValueError):
+        expand_fleet((MNice(4, 2),), n)  # joint draws cannot be a fleet
+    with pytest.raises(ValueError):
+        make_fleet("", n)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous fleets: execution
+# ---------------------------------------------------------------------------
+
+def test_fleet_reference_step_runs_each_members_compressor():
+    """EFBV.step with a fleet: worker i's innovation is compressed by ITS
+    member (pinned against per-worker manual compress_delta calls)."""
+    n, d = 3, 96
+    fleet = make_fleet("topk:7;randk:9;sign", n)
+    algo = EFBV(fleet[0], lam=0.7, nu=0.9, fleet=fleet)
+    grads = jax.random.normal(KEY, (n, d))
+    st = algo.init(jnp.zeros((d,)), n)
+    k = jax.random.fold_in(KEY, 1)
+    g, st2 = algo.step(k, grads, st)
+
+    keys = jax.random.split(k, n)
+    d_manual = jnp.stack([
+        algo.compress_delta(keys[i], grads[i], jnp.zeros((d,)), fleet[i])
+        for i in range(n)])
+    np.testing.assert_array_equal(
+        np.asarray(st2.h), np.asarray(algo.lam * d_manual))
+    d_bar = jnp.mean(d_manual, axis=0)
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(algo.nu * d_bar))
+
+
+def test_fleet_dense_psum_aggregate_matches_reference_step():
+    """The dense_psum aggregation path (lax.switch worker dispatch) agrees
+    with the reference fleet step on one round."""
+    n, d = 4, 64
+    fleet = make_fleet("topk:5;qsgd:8", n)
+    algo = EFBV(fleet[0], lam=0.8, nu=1.0, fleet=fleet)
+    grads = {"p": jax.random.normal(KEY, (n, d))}
+    h = {"p": jax.random.normal(jax.random.key(1), (n, d)) * 0.1}
+    h_avg = {"p": jnp.zeros((d,))}
+    keys = jax.random.split(jax.random.key(2), n)
+
+    g, h_new, h_avg_new = efbv_aggregate_reference(
+        algo, keys, grads, h, h_avg, mode="dense_psum")
+
+    d_manual = jnp.stack([
+        algo.compress_delta(keys[i], grads["p"][i], h["p"][i], fleet[i])
+        for i in range(n)])
+    np.testing.assert_array_equal(
+        np.asarray(h_new["p"]), np.asarray(h["p"] + algo.lam * d_manual))
+    d_bar = jnp.mean(d_manual, axis=0)
+    np.testing.assert_allclose(np.asarray(g["p"]),
+                               np.asarray(algo.nu * d_bar), rtol=1e-7)
+
+
+def test_fleet_rejects_sparse_allgather_and_requires_worker_index():
+    n, d = 2, 32
+    fleet = make_fleet("topk:4;sign", n)
+    algo = EFBV(fleet[0], lam=0.8, nu=1.0, fleet=fleet)
+    g = jnp.ones((d,))
+    with pytest.raises(ValueError, match="uniform per-worker message"):
+        compress_local(algo, KEY, g, jnp.zeros((d,)),
+                       mode="sparse_allgather", worker=jnp.asarray(0))
+    with pytest.raises(ValueError, match="worker index"):
+        compress_local(algo, KEY, g, jnp.zeros((d,)), mode="dense_psum")
+
+
+def test_fleet_run_converges_on_quadratic():
+    """A mixed top-k / rand-k / QSGD fleet still converges under the
+    worst-case tuned stepsize (the certified aggregate)."""
+    n, d = 6, 32
+    key = jax.random.key(3)
+    A = jax.random.normal(key, (n, d, d)) / np.sqrt(d)
+    Q = jnp.einsum("nij,nkj->nik", A, A) + 0.5 * jnp.eye(d)
+    b = jax.random.normal(jax.random.key(4), (n, d))
+    x_star = jnp.linalg.solve(jnp.mean(Q, 0), jnp.mean(b, 0))
+    L = float(jnp.linalg.norm(jnp.mean(Q, 0), 2))
+    Lt = float(jnp.sqrt(jnp.mean(jnp.asarray(
+        [jnp.linalg.norm(Q[i], 2) ** 2 for i in range(n)]))))
+
+    fleet = make_fleet("topk:8;randk:16;qsgd:16", n)
+    t = tune_for(fleet, d, n, L=L, Ltilde=Lt)
+    algo = EFBV.make(fleet, d=d, n=n)
+    _, _, m = run(algo=algo,
+                  grad_fn=lambda x: jnp.einsum("nij,j->ni", Q, x) - b,
+                  x0=jnp.zeros(d), gamma=t.gamma, steps=3000, key=KEY, n=n,
+                  record=lambda x: jnp.sum((x - x_star) ** 2))
+    # worst-case mixed-fleet tuning is conservative (r close to 1 with the
+    # unbiased members' omega): ask for 3 orders of magnitude, not exactness
+    assert float(m[-1]) < 1e-3 * float(m[0]), (float(m[0]), float(m[-1]))
+
+
+def test_fleet_bidirectional_run_converges():
+    """Fleet uplink + compressed downlink in the reference driver."""
+    n, d = 4, 32
+    key = jax.random.key(5)
+    A = jax.random.normal(key, (n, d, d)) / np.sqrt(d)
+    Q = jnp.einsum("nij,nkj->nik", A, A) + 0.5 * jnp.eye(d)
+    b = jax.random.normal(jax.random.key(6), (n, d))
+    x_star = jnp.linalg.solve(jnp.mean(Q, 0), jnp.mean(b, 0))
+
+    fleet = make_fleet("topk:8;qsgd:16", n)
+    algo = EFBV.make(fleet, d=d, n=n)
+    x, w, m = run_bidirectional(
+        algo=algo, downlink=Downlink(TopK(16)),
+        grad_fn=lambda k, x: jnp.einsum("nij,j->ni", Q, x) - b,
+        x0=jnp.zeros(d), gamma=0.05, steps=4000, key=KEY, n=n,
+        record=lambda x: jnp.sum((x - x_star) ** 2))
+    assert float(m[-1]) < 1e-5 * max(float(jnp.sum(x_star ** 2)), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# the shard_map leg (slow; nightly CI)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_bidirectional_federated_trainer_8dev_matches_reference():
+    """8-fake-device shard_map trainer with a compressed downlink AND
+    bernoulli:0.5 participation vs the single-process reference
+    (efbv_aggregate_reference + broadcast_global): per-worker packing and
+    the broadcast are deterministic given the shared key folds, so params,
+    h and w agree to all-reduce reordering tolerance."""
+    from conftest import run_with_devices
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.core import BlockTopK, Downlink, EFBV, Participation, QSGD
+        from repro.core.efbv import downlink_key, participation_key
+        from repro.optim import sgd, constant
+        from repro.optim.optimizers import apply_updates
+        from repro.train import (make_train_step, init_train_state,
+                                 train_state_shardings)
+        from repro.launch.mesh import make_mesh
+        from repro.distributed.aggregate import (broadcast_global,
+                                                 efbv_aggregate_reference)
+
+        D, n, key = 16, 8, jax.random.key(0)
+        params = {"p": jax.random.normal(key, (D,)) * 0.1}
+        algo = EFBV(BlockTopK(8, 2), lam=0.8, nu=0.9)
+        down = Downlink(QSGD(8))
+        part = Participation(kind="bernoulli", p=0.5)
+        opt = sgd(constant(0.05))
+
+        def loss_fn(p, batch):
+            return jnp.mean((batch["x"] @ p["p"] - batch["y"]) ** 2), {}
+
+        def batches(i):
+            kb = jax.random.fold_in(jax.random.key(42), i)
+            x = jax.random.normal(kb, (16, D))
+            return x, x @ jnp.ones((D,)) * 0.3
+
+        mesh = make_mesh((8, 1))
+        st = init_train_state(jax.tree.map(jnp.array, params), opt, mesh,
+                              bidirectional=True)
+        sh = train_state_shardings(mesh, {"p": P(None)}, st)
+        st = jax.tree.map(lambda x, s: jax.device_put(x, s), st, sh)
+        step = make_train_step(loss_fn, opt, algo, mesh,
+                               agg_mode="sparse_allgather",
+                               downlink=down, participation=part)
+        for i in range(6):
+            x, y = batches(i)
+            batch = {"x": jax.device_put(x, NamedSharding(mesh, P("data"))),
+                     "y": jax.device_put(y, NamedSharding(mesh, P("data")))}
+            st, _ = step(st, batch, jax.random.fold_in(key, i))
+
+        p_ref = jax.tree.map(jnp.array, params)
+        w_ref = jax.tree.map(jnp.array, params)
+        h, h_avg = jnp.zeros((n, D)), jnp.zeros((D,))
+        opt_state = opt.init(p_ref)
+        for i in range(6):
+            k = jax.random.fold_in(key, i)
+            x, y = batches(i)
+            xw, yw = x.reshape(n, 2, D), y.reshape(n, 2)
+            grads = jax.vmap(lambda xb, yb: jax.grad(
+                lambda p: jnp.mean((xb @ p - yb) ** 2))(w_ref["p"]))(xw, yw)
+            keys = jax.vmap(lambda j: jax.random.fold_in(k, j))(jnp.arange(n))
+            mask = part.sample_mask(participation_key(k), n)
+            g, hh, hav = efbv_aggregate_reference(
+                algo, keys, {"p": grads}, {"p": h}, {"p": h_avg},
+                mode="sparse_allgather", masks=mask)
+            h, h_avg = hh["p"], hav["p"]
+            updates, opt_state = opt.update(g, opt_state, p_ref)
+            p_ref = apply_updates(p_ref, updates)
+            w_ref, _ = broadcast_global(down, downlink_key(k), p_ref, w_ref)
+
+        np.testing.assert_allclose(np.asarray(st.params["p"]),
+                                   np.asarray(p_ref["p"]),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(st.h["p"]), np.asarray(h),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(st.w["p"]),
+                                   np.asarray(w_ref["p"]),
+                                   rtol=1e-6, atol=1e-6)
+        print("BIDIR_8DEV_OK")
+    """, n_devices=8)
+    assert "BIDIR_8DEV_OK" in out
+
+
+@pytest.mark.slow
+def test_fleet_dense_psum_trainer_8dev_runs():
+    """8-device shard_map trainer with a 3-member mixed fleet under
+    dense_psum: the lax.switch worker dispatch works inside the manual
+    region and the loss decreases."""
+    from conftest import run_with_devices
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.core import EFBV, make_fleet
+        from repro.optim import sgd, constant
+        from repro.train import (make_train_step, init_train_state,
+                                 train_state_shardings)
+        from repro.launch.mesh import make_mesh
+
+        D, n, key = 32, 8, jax.random.key(0)
+        params = {"p": jnp.zeros((D,))}
+        fleet = make_fleet("topk:8;randk:8;qsgd:16", n)
+        algo = EFBV.make(fleet, d=D, n=n)
+        assert algo.fleet is not None
+        opt = sgd(constant(0.1))
+
+        def loss_fn(p, batch):
+            return jnp.mean((batch["x"] @ p["p"] - batch["y"]) ** 2), {}
+
+        mesh = make_mesh((8, 1))
+        st = init_train_state(jax.tree.map(jnp.array, params), opt, mesh)
+        sh = train_state_shardings(mesh, {"p": P(None)}, st)
+        st = jax.tree.map(lambda x, s: jax.device_put(x, s), st, sh)
+        step = make_train_step(loss_fn, opt, algo, mesh,
+                               agg_mode="dense_psum")
+        losses = []
+        for i in range(20):
+            kb = jax.random.fold_in(jax.random.key(42), i)
+            x = jax.random.normal(kb, (16, D))
+            batch = {"x": jax.device_put(x, NamedSharding(mesh, P("data"))),
+                     "y": jax.device_put(x @ (jnp.arange(D) / D),
+                                         NamedSharding(mesh, P("data")))}
+            st, m = step(st, batch, jax.random.fold_in(key, i))
+            losses.append(float(m["loss"]))
+        assert losses[-1] < 0.5 * losses[0], losses
+        print("FLEET_8DEV_OK")
+    """, n_devices=8)
+    assert "FLEET_8DEV_OK" in out

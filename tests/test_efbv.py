@@ -176,16 +176,38 @@ def test_logreg_efbv_beats_ef21_bits():
 
 
 def test_bidirectional_compression_converges():
-    """Beyond-paper: server-side broadcast compression (EF21-BC-style) on top
-    of EF-BV still converges to the exact solution."""
-    from repro.core import run_bidirectional, TopK
+    """Beyond-paper: master-side broadcast compression (the Downlink
+    channel, EF21-BC-style) on top of EF-BV still converges to the exact
+    solution."""
+    from repro.core import Downlink, run_bidirectional, TopK
     grads, x_star, mu, L, Lt = quad_problem()
     comp = TopK(4)
     t = tune_for(comp, 16, n=8, mode="efbv", L=L, Ltilde=Lt)
     algo = EFBV(comp, lam=t.lam, nu=t.nu)
-    x_hat, m = run_bidirectional(
-        algo=algo, server_comp=TopK(6), grad_fn=grads, x0=jnp.zeros(16),
+    x, w, m = run_bidirectional(
+        algo=algo, downlink=Downlink(TopK(6)),
+        grad_fn=lambda k, x: grads(x), x0=jnp.zeros(16),
         gamma=t.gamma * 0.5,  # broadcast error feedback tolerates a smaller step
         steps=6000, key=KEY, n=8,
         record=lambda x: jnp.sum((x - x_star) ** 2))
     assert float(m[-1]) < 1e-7 * float(jnp.sum(x_star**2)), float(m[-1])
+    # the workers' reconstruction has converged to the same point
+    assert float(jnp.sum((w - x_star) ** 2)) < 1e-6 * float(jnp.sum(x_star**2))
+
+
+def test_bidirectional_identity_downlink_is_bitwise_run():
+    """Identity downlink + full participation reproduces the unidirectional
+    run() trajectory BIT-FOR-BIT (the downlink assigns w = x verbatim and
+    every key derivation is shared)."""
+    from repro.core import Downlink, Identity, run_bidirectional
+    grads, x_star, mu, L, Lt = quad_problem()
+    comp = TopK(4)
+    t = tune_for(comp, 16, n=8, mode="efbv", L=L, Ltilde=Lt)
+    algo = EFBV(comp, lam=t.lam, nu=t.nu)
+    kw = dict(algo=algo, x0=jnp.zeros(16), gamma=t.gamma, steps=40, key=KEY,
+              n=8, record=lambda x: jnp.sum((x - x_star) ** 2))
+    _, _, m_uni = run(grad_fn=grads, **kw)
+    x_bi, w_bi, m_bi = run_bidirectional(
+        downlink=Downlink(Identity()), grad_fn=lambda k, x: grads(x), **kw)
+    np.testing.assert_array_equal(np.asarray(m_uni), np.asarray(m_bi))
+    np.testing.assert_array_equal(np.asarray(x_bi), np.asarray(w_bi))

@@ -244,11 +244,13 @@ def test_sparse_allgather_equals_dense_psum(comp):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
 
 
-def test_bidirectional_identity_server_matches_unidirectional():
-    """With C_s = Identity the bidirectional trainer reproduces the
-    unidirectional trajectory (up to fp association: x_hat is updated as
-    x_hat + (x - x_hat), which re-rounds one ULP)."""
+def test_bidirectional_identity_downlink_matches_unidirectional():
+    """With an Identity downlink the bidirectional trainer reproduces the
+    unidirectional trajectory BIT-FOR-BIT: the lossless f32 broadcast
+    assigns w = x verbatim (no x_hat + (x - x_hat) re-rounding), so the
+    workers' gradients see bit-identical params every round."""
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import Downlink
     from repro.launch.mesh import make_mesh
     from repro.optim import constant, sgd
     from repro.train import (init_train_state, make_train_step,
@@ -265,15 +267,15 @@ def test_bidirectional_identity_server_matches_unidirectional():
     algo = EFBV(BlockTopK(8, 2), lam=0.9, nu=0.9)
     opt = sgd(constant(0.05))
 
-    def run(server_comp):
+    def run(downlink):
         # fresh copies: the jitted step donates its state buffers
         st = init_train_state(jax.tree.map(jnp.array, params), opt, mesh,
-                              bidirectional=server_comp is not None)
+                              bidirectional=downlink is not None)
         sh = train_state_shardings(mesh, specs, st)
         st = jax.tree.map(lambda x, s: jax.device_put(x, s), st, sh)
         step = make_train_step(loss_fn, opt, algo, mesh,
                                agg_mode="sparse_allgather",
-                               server_comp=server_comp)
+                               downlink=downlink)
         for i in range(5):
             kb_ = jax.random.fold_in(jax.random.key(42), i)
             x = jax.random.normal(kb_, (4, D))
@@ -282,14 +284,14 @@ def test_bidirectional_identity_server_matches_unidirectional():
         return st, m
 
     st_uni, _ = run(None)
-    st_bi, m_bi = run(Identity())
-    np.testing.assert_allclose(np.asarray(st_uni.params["w"]),
-                               np.asarray(st_bi.params["w"]),
-                               rtol=1e-6, atol=1e-8)
-    np.testing.assert_allclose(np.asarray(st_bi.params["w"]),
-                               np.asarray(st_bi.x_hat["w"]),
-                               rtol=1e-6, atol=1e-8)
-    assert float(m_bi["xhat_err"]) < 1e-6
+    st_bi, m_bi = run(Downlink(Identity()))
+    np.testing.assert_array_equal(np.asarray(st_uni.params["w"]),
+                                  np.asarray(st_bi.params["w"]))
+    np.testing.assert_array_equal(np.asarray(st_uni.h["w"]),
+                                  np.asarray(st_bi.h["w"]))
+    np.testing.assert_array_equal(np.asarray(st_bi.params["w"]),
+                                  np.asarray(st_bi.w["w"]))
+    assert float(m_bi["w_err"]) == 0.0
 
 
 @pytest.mark.slow
@@ -364,13 +366,17 @@ def test_wire_trajectory_1_vs_8_devices():
     assert "WIRE_1V8_OK" in out
 
 
-def test_bidirectional_compressed_server_tracks_model():
-    """With a contractive C_s, x_hat tracks the model: the reconstruction
-    error stays bounded and training still reduces the loss."""
+@pytest.mark.parametrize("trainer", ["shard_map", "fsdp"])
+def test_bidirectional_compressed_downlink_tracks_model(trainer):
+    """With a contractive downlink C_s, w tracks the model: the
+    reconstruction error stays bounded and training still reduces the loss
+    -- in BOTH trainers (the FSDP path shares broadcast_global)."""
     from jax.sharding import PartitionSpec as P
+    from repro.core import Downlink
     from repro.launch.mesh import make_mesh
     from repro.optim import constant, sgd
-    from repro.train import (init_train_state, make_train_step,
+    from repro.train import (fsdp_state_shardings, init_train_state,
+                             make_train_step, make_train_step_fsdp,
                              train_state_shardings)
 
     mesh = make_mesh((1, 1))
@@ -384,11 +390,15 @@ def test_bidirectional_compressed_server_tracks_model():
     algo = EFBV(BlockTopK(8, 4), lam=1.0, nu=1.0)
     opt = sgd(constant(0.1))
     st = init_train_state(params, opt, mesh, bidirectional=True)
-    sh = train_state_shardings(mesh, specs, st)
+    make_sh = (fsdp_state_shardings if trainer == "fsdp"
+               else train_state_shardings)
+    sh = make_sh(mesh, specs, st)
     st = jax.tree.map(lambda x, s: jax.device_put(x, s), st, sh)
-    step = make_train_step(loss_fn, opt, algo, mesh,
-                           agg_mode="sparse_allgather",
-                           server_comp=BlockTopK(8, 4))
+    make_step = (make_train_step_fsdp if trainer == "fsdp"
+                 else make_train_step)
+    step = make_step(loss_fn, opt, algo, mesh,
+                     agg_mode="sparse_allgather",
+                     downlink=Downlink(BlockTopK(8, 4)))
     losses = []
     for i in range(30):
         kb_ = jax.random.fold_in(jax.random.key(7), i)
@@ -397,4 +407,4 @@ def test_bidirectional_compressed_server_tracks_model():
         st, m = step(st, batch, jax.random.fold_in(KEY, i))
         losses.append(float(m["loss"]))
     assert losses[-1] < 0.5 * losses[0], losses
-    assert float(m["xhat_err"]) < 1.0
+    assert float(m["w_err"]) < 1.0
