@@ -7,7 +7,7 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test-tier1 test-all test-slow bench bench-micro smoke smoke-federated \
-	smoke-bidirectional docs-test docs-check
+	smoke-bidirectional smoke-spec docs-test docs-check
 
 test-tier1:
 	JAX_PLATFORMS=cpu $(PY) -m pytest -x -q
@@ -48,3 +48,10 @@ smoke-bidirectional:
 	JAX_PLATFORMS=cpu $(PY) -m repro.launch.train --arch qwen2-0.5b --smoke \
 	    --mesh 2x2 --steps 4 --global-batch 8 --seq 32 \
 	    --compressor qsgd:16 --agg sparse_allgather --downlink qsgd:16
+
+# spec-file driven run: the whole experiment from one committed
+# ExperimentSpec JSON (docs/api.md)
+smoke-spec:
+	JAX_PLATFORMS=cpu $(PY) -m repro.launch.train \
+	    --spec examples/specs/qsgd_bidirectional.json --smoke \
+	    --global-batch 8 --seq 32

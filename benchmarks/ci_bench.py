@@ -15,9 +15,18 @@ Two files, two kinds of signal:
 * BENCH_bits.json -- exact and machine-independent: measured payload bytes
   == bits/8 for every registered wire codec, and the bidirectional
   up+down accounting (uplink x n + ONE broadcast) for pinned combos,
-  including the acceptance row `qsgd16_both_ways` whose ratio vs dense
-  fp32 both ways must stay <= 0.35 (also pinned by
+  including the acceptance row named `qsgd16_both_ways` whose ratio vs
+  dense fp32 both ways must stay <= 0.35 (also pinned by
   tests/test_bidirectional.py).
+
+Since schema 2, every row is KEYED by the stable fingerprint of the
+canonical repro.core.ExperimentSpec it measures (the human-readable
+compressor/downlink specs stay inside the row): within each table, a row
+with the same key across commits measures the same experiment by
+construction.  The two tables are two MEASUREMENTS -- per-worker codec
+payload vs whole bidirectional round -- so the same experiment (e.g. an
+uplink codec with the dense broadcast) may legitimately appear in both
+under the same key; duplicates WITHIN a table are rejected.
 """
 
 import os
@@ -48,6 +57,21 @@ CODECS = ["identity", "topk:655", "randk:655", "comp:655,6553",
           "block_topk:1024,16", "sign", "natural", "qsgd:16"]
 
 
+def _bench_spec(up_spec: str, down_spec=None):
+    """The canonical ExperimentSpec of one bench row.  Its stable
+    fingerprint is the row KEY in BENCH_bits.json: a row with the same
+    fingerprint across commits measures the same experiment, so the bench
+    trajectory survives renames and row reordering."""
+    from repro.core import ExperimentSpec
+
+    agg = ("dense_psum"
+           if len({s.strip() for s in up_spec.split(";")}) > 1
+           else "sparse_allgather")
+    return ExperimentSpec(compressor=up_spec, downlink=down_spec or "",
+                          agg=agg, backend="reference", problem="quadratic",
+                          n=N_WORKERS, d=D_BITS, steps=1, seed=0)
+
+
 def bits_payload():
     import jax.numpy as jnp
 
@@ -57,10 +81,12 @@ def bits_payload():
     zeros = jnp.zeros((D_BITS,))
     dense = 32 * D_BITS
     codec_rows = {}
-    for spec in CODECS:
-        fmt = wire.format_for(make_compressor(spec), zeros)
+    for spec_str in CODECS:
+        spec = _bench_spec(spec_str)
+        fmt = wire.format_for(make_compressor(spec_str), zeros)
         bits = fmt.bits_per_round()
-        codec_rows[spec] = {
+        codec_rows[spec.fingerprint()] = {
+            "compressor": spec_str,
             "payload_bits": bits,
             "payload_bytes": bits // 8,
             "vs_dense_fp32": round(bits / dense, 6),
@@ -68,12 +94,18 @@ def bits_payload():
 
     combo_rows = {}
     for name, up_spec, down_spec in BIDIR_COMBOS:
+        spec = _bench_spec(up_spec, down_spec)
+        assert spec.fingerprint() not in combo_rows, (
+            f"combo {name!r} duplicates the spec of "
+            f"{combo_rows[spec.fingerprint()]['name']!r}: the trajectory "
+            "would silently drop one row")
         up = wire.format_for(make_compressor(up_spec), zeros)
         down = (None if down_spec is None else
                 Downlink.parse(down_spec).format_for(zeros))
         total = wire.total_round_bits(up, down, n_workers=N_WORKERS)
         dense_both = N_WORKERS * dense + dense
-        combo_rows[name] = {
+        combo_rows[spec.fingerprint()] = {
+            "name": name,
             "uplink_spec": up_spec,
             "downlink_spec": down_spec or "dense_fp32",
             "up_bits": up.bits_per_round(n_workers=N_WORKERS),
@@ -82,10 +114,11 @@ def bits_payload():
             "total_bits": total,
             "vs_dense_both_ways": round(total / dense_both, 6),
         }
-    qs = combo_rows["qsgd16_both_ways"]["vs_dense_both_ways"]
+    qs = next(r["vs_dense_both_ways"] for r in combo_rows.values()
+              if r["name"] == "qsgd16_both_ways")
     assert qs <= 0.35, f"qsgd:16 both ways regressed past 0.35x dense: {qs}"
     return {
-        "schema": 1,
+        "schema": 2,  # schema 2: rows keyed by ExperimentSpec fingerprint
         "d": D_BITS,
         "n_workers": N_WORKERS,
         "codec_bits_per_round": codec_rows,
@@ -99,6 +132,23 @@ def perf_payload(fast: bool = True):
     from benchmarks import compressor_bench, perf_iter
 
     smoke = perf_iter.smoke_rows()
+    # key the smoke row by the ACTUAL train-step experiment it measures
+    # (same identity scheme as the BENCH_bits.json rows); worker count and
+    # tuning dimension come from the canonical shared helpers, so this
+    # fingerprint can never drift from the one the train driver embeds
+    from repro.configs import get_smoke_config
+    from repro.core import ExperimentSpec
+    from repro.core.spec import mesh_worker_count
+    from repro.launch.train import tuning_dim
+
+    s = perf_iter.SMOKE
+    smoke["spec_fingerprint"] = ExperimentSpec(
+        compressor=s["compressor"], agg=s["agg"], downlink=s["downlink"],
+        backend="shard_map", problem=s["arch"], smoke=True,
+        mesh="x".join(str(x) for x in s["mesh"]),
+        n=mesh_worker_count(s["mesh"]),
+        d=tuning_dim(get_smoke_config(s["arch"])), steps=s["steps"],
+        seed=0).fingerprint()
 
     pack_rows = {}
     for row in compressor_bench.packed_vs_dense(fast=fast):
@@ -161,9 +211,10 @@ def main(argv=None):
     with open(path, "w") as f:
         json.dump(bits, f, indent=1, sort_keys=True)
         f.write("\n")
-    print(f"[bench] wrote {path} (qsgd16_both_ways = "
-          f"{bits['bidirectional_rounds']['qsgd16_both_ways']['vs_dense_both_ways']}x"
-          " dense up+down)")
+    qs = next(r["vs_dense_both_ways"]
+              for r in bits["bidirectional_rounds"].values()
+              if r["name"] == "qsgd16_both_ways")
+    print(f"[bench] wrote {path} (qsgd16_both_ways = {qs}x dense up+down)")
 
     if not args.skip_perf:
         perf = perf_payload()

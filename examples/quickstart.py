@@ -1,40 +1,42 @@
-"""Quickstart: EF-BV on distributed logistic regression in ~40 lines.
+"""Quickstart: EF-BV through the declarative ExperimentSpec API in ~40 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds the paper's comp-(k, d/2) compressor, auto-tunes (lam*, nu*, gamma)
-from the theory (Remark 1 -- nothing left to tune), and runs Algorithm 1
-against EF21 and DIANA on a heterogeneous logistic-regression problem.
+ONE frozen, serializable spec declares the whole experiment -- compressor,
+algorithm parametrization, problem, workers, rounds -- and
+``repro.core.build(spec)`` turns it into a runnable ``Run``: auto-tuned
+(lam*, nu*, gamma) from the theory (Remark 1 -- nothing left to tune) and
+driven through the unified reference driver.  Swapping EF-BV for EF21 or
+DIANA is a one-field change, not a different code path.  See docs/api.md.
 """
 
-import jax
-import jax.numpy as jnp
+import dataclasses
 
-from repro.core import CompKK, EFBV, run, tune_for
-from repro.problems import LogReg, make_synthetic
+from repro.core import ExperimentSpec, build
 
-n, d, steps = 100, 64, 3000
+# the paper's compressor comp-(1, d/2): biased AND random -- outside both
+# classical compressor classes, but in C(eta, omega)
+spec = ExperimentSpec(compressor="comp:1,32", mode="efbv",
+                      backend="reference", problem="logreg",
+                      n=100, d=64, steps=3000, seed=0)
+print(f"spec fingerprint={spec.fingerprint()}  (JSON round-trips losslessly:"
+      f" {ExperimentSpec.from_json(spec.to_json()) == spec})")
 
-# heterogeneous data split across n workers (Appendix C setup)
-A, b = make_synthetic(jax.random.key(0), N=1200, d=d)
-prob = LogReg.split(A, b, n=n, mu_reg=0.1)
+prob = build(spec).problem_instance()   # heterogeneous logreg (Appendix C)
 x_star, f_star = prob.solve()
 
-# the paper's compressor: biased AND random -- outside both classical classes
-comp = CompKK(1, d // 2)
+comp = build(spec).compressor
+d = spec.d
 print(f"comp-(1, {d // 2}): eta={comp.eta(d):.3f} omega={comp.omega(d):.1f} "
       f"(not contractive: eta^2 + omega = {comp.eta(d)**2 + comp.omega(d):.1f} > 1)")
 
 for mode in ["efbv", "ef21", "diana"]:
-    tuning = tune_for(comp, d, n, mode=mode, L=prob.L(), Ltilde=prob.L_tilde())
-    algo = EFBV(comp, lam=tuning.lam, nu=tuning.nu)
-    _, _, gaps = run(
-        algo=algo, grad_fn=prob.grads, x0=jnp.zeros(d), gamma=tuning.gamma,
-        steps=steps, key=jax.random.key(1), n=n,
-        record=lambda x: prob.f(x) - f_star)
-    print(f"{mode:6s} lam={tuning.lam:.4f} nu={tuning.nu:.4f} "
-          f"gamma={tuning.gamma:.2e}  f-f* after {steps} rounds: "
-          f"{float(gaps[-1]):.3e}")
+    run = build(dataclasses.replace(spec, mode=mode))
+    t = run.tuned
+    res = run.reference(record=lambda x: prob.f(x) - f_star)
+    print(f"{mode:6s} lam={t.lam:.4f} nu={t.nu:.4f} "
+          f"f-f* after {spec.steps} rounds: {float(res.metrics[-1]):.3e} "
+          f"({run.round_bits()['up']} uplink bits/round, all {spec.n} workers)")
 
 print("\nEF-BV exploits omega_av = omega/n (independent compressors): larger "
       "nu and gamma than EF21,\nwhile still handling the biased compressor "

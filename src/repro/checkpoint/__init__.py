@@ -1,1 +1,3 @@
-from repro.checkpoint.npz import save_checkpoint, restore_checkpoint, latest_step  # noqa: F401
+from repro.checkpoint.npz import (  # noqa: F401
+    latest_step, restore_checkpoint, save_checkpoint, saved_spec,
+)

@@ -5,6 +5,14 @@ restore validates structure against a template pytree.  Arrays are pulled to
 host (sharded arrays are fully gathered -- fine at the scales this repo
 executes on CPU; a production TPU deployment would swap in per-shard writes
 behind the same interface).
+
+Checkpoints carry their experiment identity: ``save_checkpoint(...,
+spec=...)`` embeds the :class:`repro.core.spec.ExperimentSpec` JSON and its
+stable fingerprint alongside the arrays, and ``restore_checkpoint(...,
+spec=...)`` REFUSES a resume whose spec fingerprint does not match (the
+error message prints both specs, so a mismatched field is one diff away).
+Old spec-less checkpoints keep restoring; :func:`saved_spec` reads the
+embedded spec back without touching the arrays.
 """
 
 from __future__ import annotations
@@ -18,6 +26,12 @@ import numpy as np
 
 PyTree = Any
 _SEP = "|"
+
+#: reserved npz entry names for the embedded experiment identity (never
+#: valid tree paths: leaf keys cannot start with '__spec')
+SPEC_JSON_KEY = "__spec_json__"
+SPEC_FINGERPRINT_KEY = "__spec_fingerprint__"
+_META_KEYS = frozenset({SPEC_JSON_KEY, SPEC_FINGERPRINT_KEY})
 
 
 def _flatten(tree: PyTree):
@@ -37,11 +51,18 @@ def _path_str(p) -> str:
     return str(p)
 
 
-def save_checkpoint(ckpt_dir: str, step: int, tree: PyTree) -> str:
+def save_checkpoint(ckpt_dir: str, step: int, tree: PyTree, *,
+                    spec=None) -> str:
+    """Write one atomic npz checkpoint; ``spec`` (an ExperimentSpec) embeds
+    the experiment identity for fingerprint-gated resume."""
     os.makedirs(ckpt_dir, exist_ok=True)
     path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
     tmp = os.path.join(ckpt_dir, f".tmp_step_{step:08d}.npz")
-    np.savez(tmp, **_flatten(tree))  # .npz suffix keeps numpy from renaming
+    flat = _flatten(tree)
+    if spec is not None:
+        flat[SPEC_JSON_KEY] = np.asarray(spec.to_json())
+        flat[SPEC_FINGERPRINT_KEY] = np.asarray(spec.fingerprint())
+    np.savez(tmp, **flat)  # .npz suffix keeps numpy from renaming
     os.replace(tmp, path)
     return path
 
@@ -54,12 +75,50 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def restore_checkpoint(ckpt_dir: str, step: int, template: PyTree) -> PyTree:
+def saved_spec(ckpt_dir: str, step: int):
+    """The ExperimentSpec embedded in a checkpoint, or None for a spec-less
+    (pre-spec-era) file."""
+    from repro.core.spec import ExperimentSpec
+
     path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
     data = np.load(path)
+    if SPEC_JSON_KEY not in data.files:
+        return None
+    return ExperimentSpec.from_json(str(data[SPEC_JSON_KEY][()]))
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, template: PyTree, *,
+                       spec=None) -> PyTree:
+    """Restore a checkpoint into ``template``'s structure.
+
+    ``spec`` gates the resume on experiment identity: the embedded
+    fingerprint must match ``spec.fingerprint()`` exactly, otherwise the
+    restore is REFUSED with both specs printed (resuming a qsgd:16 run from
+    a block_topk checkpoint silently corrupts the control variates -- the
+    fingerprint makes that a loud error).  A spec-less checkpoint cannot
+    satisfy a spec-gated restore; pass ``spec=None`` to opt out.
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    data = np.load(path)
+    if spec is not None:
+        if SPEC_FINGERPRINT_KEY not in data.files:
+            raise ValueError(
+                f"checkpoint {path} embeds no experiment spec but the "
+                "restore is spec-gated; re-save with save_checkpoint(..., "
+                "spec=...) or pass spec=None to skip the identity check")
+        saved_fp = str(data[SPEC_FINGERPRINT_KEY][()])
+        want_fp = spec.fingerprint()
+        if saved_fp != want_fp:
+            saved_json = str(data[SPEC_JSON_KEY][()]) \
+                if SPEC_JSON_KEY in data.files else "<missing>"
+            raise ValueError(
+                f"refusing resume: checkpoint spec fingerprint {saved_fp} "
+                f"!= requested {want_fp}.\n--- checkpoint spec ---\n"
+                f"{saved_json}\n--- requested spec ---\n{spec.to_json()}")
     flat = _flatten(template)
-    missing = set(flat) - set(data.files)
-    extra = set(data.files) - set(flat)
+    files = set(data.files) - _META_KEYS
+    missing = set(flat) - files
+    extra = files - set(flat)
     if missing or extra:
         raise ValueError(f"checkpoint mismatch: missing={sorted(missing)[:5]} "
                          f"extra={sorted(extra)[:5]}")

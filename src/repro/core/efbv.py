@@ -473,8 +473,156 @@ def proximal_step(x: PyTree, g: PyTree, gamma: float,
 
 
 # ------------------------------------------------------------------------------
-# beyond-paper: bidirectional compression (master -> worker codec broadcast)
+# THE reference driver: one lax.scan subsuming every execution mode
 # ------------------------------------------------------------------------------
+
+class ReferenceRun(NamedTuple):
+    """Result of :func:`run_reference`.
+
+    x:       final iterate.
+    state:   final :class:`EFBVState` (per-worker + master control variates).
+    w:       final downlink control variate (workers' shared model
+             reconstruction) under bidirectional compression; None otherwise.
+    metrics: per-round scalars from ``record``; None when not recording.
+    """
+
+    x: PyTree
+    state: EFBVState
+    w: Optional[PyTree]
+    metrics: Optional[Array]
+
+
+def run_reference(
+    *,
+    algo: EFBV,
+    grad_fn: Callable[[Array, PyTree], PyTree],  # (key, x|w) -> n-leading grads
+    x0: PyTree,
+    gamma: float,
+    steps: int,
+    key: Array,
+    n: int,
+    participation: Optional[Participation] = None,
+    downlink: Optional[Downlink] = None,
+    prox: Callable[[float, PyTree], PyTree] = prox_zero,
+    record: Optional[Callable[[PyTree], Array]] = None,
+    wire_dtype: str = "float32",
+) -> ReferenceRun:
+    """jit-compiled lax.scan over Algorithm 1 -- the ONE reference driver.
+
+    The execution mode is selected by what is (not) supplied, exactly the
+    cross-product :class:`repro.core.spec.ExperimentSpec` declares:
+
+    * ``participation`` None / full -- the paper's full-participation regime
+      (:meth:`EFBV.step`); otherwise per-round client sampling with the
+      shared :func:`participation_key` mask derivation and
+      :meth:`EFBV.step_federated` (absent workers keep h_i stale).
+    * ``downlink`` None -- uncompressed model broadcast (workers read x);
+      otherwise the bidirectional wire: workers evaluate gradients at the
+      shared reconstruction ``w`` and each round ends with ONE compressed
+      broadcast drawn from :func:`downlink_key`.
+    * ``grad_fn(key, x)`` may consume the per-round resampling key
+      (fold_in(round_key, RESAMPLE_FOLD)) for stochastic local gradients;
+      exact-gradient callers simply ignore it.
+
+    Each simpler mode reduces *bitwise* to the corresponding specialization:
+    the masked ops are arithmetic identities at m = 1 and the Identity/f32
+    downlink assigns w = x verbatim, so the deprecated shims :func:`run`,
+    :func:`run_federated` and :func:`run_bidirectional` stay bit-identical
+    to their historical trajectories (pinned by tests/test_spec.py).
+    """
+    part = participation if participation is not None else Participation()
+    state0 = algo.init(x0, n)
+    w0 = downlink.init(x0) if downlink is not None else None
+
+    def body(carry, k):
+        x, w, st = carry
+        # under bidirectional compression workers only ever see w
+        eval_at = w if downlink is not None else x
+        grads = grad_fn(jax.random.fold_in(k, RESAMPLE_FOLD), eval_at)
+        if part.is_full:
+            g, st = algo.step(k, grads, st)
+        else:
+            mask = part.sample_mask(participation_key(k), n)
+            g, st = algo.step_federated(k, grads, st, mask)
+        x = proximal_step(x, g, gamma, prox)
+        if downlink is not None:
+            w, _ = downlink.broadcast(downlink_key(k), x, w,
+                                      wire_dtype=wire_dtype)
+        m = record(x) if record is not None else jnp.zeros(())
+        return (x, w, st), m
+
+    keys = jax.random.split(key, steps)
+    (x, w, state), metrics = jax.lax.scan(body, (x0, w0, state0), keys)
+    return ReferenceRun(x=x, state=state, w=w,
+                        metrics=metrics if record is not None else None)
+
+
+# ------------------------------------------------------------------------------
+# deprecated drivers, kept as thin bit-identical shims over run_reference
+# ------------------------------------------------------------------------------
+
+def _warn_deprecated(old: str, hint: str) -> None:
+    import warnings
+
+    warnings.warn(
+        f"repro.core.efbv.{old} is deprecated: {hint} (see docs/api.md for "
+        "the ExperimentSpec migration table)", DeprecationWarning,
+        stacklevel=3)
+
+
+def run(
+    *,
+    algo: EFBV,
+    grad_fn: Callable[[PyTree], PyTree],  # x -> per-worker grads (n-leading)
+    x0: PyTree,
+    gamma: float,
+    steps: int,
+    key: Array,
+    prox: Callable[[float, PyTree], PyTree] = prox_zero,
+    n: int,
+    record: Optional[Callable[[PyTree], Array]] = None,
+) -> Tuple[PyTree, EFBVState, Optional[Array]]:
+    """Deprecated shim: exact-gradient, full-participation Algorithm 1.
+
+    Use ``repro.core.build(spec).reference()`` / :func:`run_reference`; this
+    wrapper stays bit-identical to the unified driver (the masked step at an
+    all-ones mask and the key plumbing are arithmetic identities)."""
+    _warn_deprecated("run", "use repro.core.build(spec).reference() or "
+                     "run_reference")
+    res = run_reference(algo=algo, grad_fn=lambda _k, x: grad_fn(x), x0=x0,
+                        gamma=gamma, steps=steps, key=key, n=n, prox=prox,
+                        record=record)
+    return res.x, res.state, res.metrics
+
+
+def run_federated(
+    *,
+    algo: EFBV,
+    grad_fn: Callable[[Array, PyTree], PyTree],  # (key, x) -> n-leading grads
+    x0: PyTree,
+    gamma: float,
+    steps: int,
+    key: Array,
+    n: int,
+    participation: Optional[Participation] = None,
+    prox: Callable[[float, PyTree], PyTree] = prox_zero,
+    record: Optional[Callable[[PyTree], Array]] = None,
+) -> Tuple[PyTree, EFBVState, Optional[Array]]:
+    """Deprecated shim: Algorithm 1 under per-round client sampling +
+    stochastic local gradients (docs/algorithms.md).
+
+    Use ``repro.core.build(spec).reference()`` / :func:`run_reference` --
+    bit-identical: both draw the mask from :func:`participation_key` and the
+    minibatch key from fold_in(round_key, RESAMPLE_FOLD), and the full-
+    participation fast path (:meth:`EFBV.step`) equals
+    :meth:`EFBV.step_federated` at an all-ones mask bitwise."""
+    _warn_deprecated("run_federated", "use repro.core.build(spec).reference()"
+                     " or run_reference(participation=...)")
+    res = run_reference(algo=algo, grad_fn=grad_fn, x0=x0, gamma=gamma,
+                        steps=steps, key=key, n=n,
+                        participation=participation, prox=prox, record=record)
+    return res.x, res.state, res.metrics
+
 
 def run_bidirectional(
     *,
@@ -491,122 +639,16 @@ def run_bidirectional(
     record: Optional[Callable[[PyTree], Array]] = None,
     wire_dtype: str = "float32",
 ) -> Tuple[PyTree, PyTree, Optional[Array]]:
-    """EF-BV with a *bidirectional* compressed wire: Algorithm 1 on the
-    uplink, a :class:`Downlink` broadcast channel on the way back, and
-    optionally the federated execution mode on top (per-round client
-    sampling, same mask semantics as :func:`run_federated`).
+    """Deprecated shim: EF-BV with a bidirectional compressed wire
+    (:class:`Downlink` broadcast channel), optionally federated.
 
-    Workers evaluate gradients at the shared reconstruction ``w`` (the
-    master's downlink control variate); the master iterate x advances as
-    usual and each round ends with one compressed broadcast updating w.
-    Absent workers decode the same broadcast as present ones, so w stays
-    replicated across the fleet.  Key derivations (per-round fold, worker
-    fold, PARTICIPATION_FOLD, RESAMPLE_FOLD, DOWNLINK_FOLD) match
-    :func:`run_federated`, so an Identity downlink + full participation
-    reproduces :func:`run_federated` -- and :func:`run` for exact-gradient
-    ``grad_fn`` -- bit-for-bit (pinned by tests/test_efbv.py and the
-    differential harness).
-
-    Returns ``(x, w, metrics)``.
-    """
-    part = participation if participation is not None else Participation()
-    state0 = algo.init(x0, n)
-    w0 = downlink.init(x0)
-
-    def body(carry, k):
-        x, w, st = carry
-        grads = grad_fn(jax.random.fold_in(k, RESAMPLE_FOLD), w)
-        if part.is_full:
-            g, st = algo.step(k, grads, st)
-        else:
-            mask = part.sample_mask(participation_key(k), n)
-            g, st = algo.step_federated(k, grads, st, mask)
-        x = proximal_step(x, g, gamma, prox)
-        w, _ = downlink.broadcast(downlink_key(k), x, w,
-                                  wire_dtype=wire_dtype)
-        m = record(x) if record is not None else jnp.zeros(())
-        return (x, w, st), m
-
-    keys = jax.random.split(key, steps)
-    (x, w, _), metrics = jax.lax.scan(body, (x0, w0, state0), keys)
-    return x, w, (metrics if record is not None else None)
-
-
-# ------------------------------------------------------------------------------
-# driver: full Algorithm 1 loop on an explicit finite-sum problem
-# ------------------------------------------------------------------------------
-
-def run(
-    *,
-    algo: EFBV,
-    grad_fn: Callable[[PyTree], PyTree],  # x -> per-worker grads (n-leading)
-    x0: PyTree,
-    gamma: float,
-    steps: int,
-    key: Array,
-    prox: Callable[[float, PyTree], PyTree] = prox_zero,
-    n: int,
-    record: Optional[Callable[[PyTree], Array]] = None,
-) -> Tuple[PyTree, EFBVState, Optional[Array]]:
-    """jit-compiled lax.scan over Algorithm 1; optionally records a scalar
-    metric (e.g. f(x)-f*) per iteration for the benchmark plots."""
-
-    state0 = algo.init(x0, n)
-
-    def body(carry, k):
-        x, st = carry
-        grads = grad_fn(x)
-        g, st = algo.step(k, grads, st)
-        x = proximal_step(x, g, gamma, prox)
-        m = record(x) if record is not None else jnp.zeros(())
-        return (x, st), m
-
-    keys = jax.random.split(key, steps)
-    (x, state), metrics = jax.lax.scan(body, (x0, state0), keys)
-    return x, state, (metrics if record is not None else None)
-
-
-# ------------------------------------------------------------------------------
-# driver: federated Algorithm 1 (client sampling + stochastic local gradients)
-# ------------------------------------------------------------------------------
-
-def run_federated(
-    *,
-    algo: EFBV,
-    grad_fn: Callable[[Array, PyTree], PyTree],  # (key, x) -> n-leading grads
-    x0: PyTree,
-    gamma: float,
-    steps: int,
-    key: Array,
-    n: int,
-    participation: Optional[Participation] = None,
-    prox: Callable[[float, PyTree], PyTree] = prox_zero,
-    record: Optional[Callable[[PyTree], Array]] = None,
-) -> Tuple[PyTree, EFBVState, Optional[Array]]:
-    """Algorithm 1 in the federated execution mode
-    (docs/algorithms.md#partial-participation--stochastic-gradients).
-
-    ``grad_fn(key, x)`` returns the per-worker gradient stack and may consume
-    the key for per-round minibatch resampling (e.g.
-    problems.LogReg.minibatch_grads); pass ``lambda k, x: grads(x)`` for the
-    exact-gradient regime.  The per-round participation mask is drawn from
-    fold_in(round_key, PARTICIPATION_FOLD), the minibatch key from
-    fold_in(round_key, RESAMPLE_FOLD) -- both decorrelated from the
-    compressor keys, so full participation + exact gradients reproduces
-    :func:`run` bit-for-bit.
-    """
-    part = participation if participation is not None else Participation()
-    state0 = algo.init(x0, n)
-
-    def body(carry, k):
-        x, st = carry
-        mask = part.sample_mask(participation_key(k), n)
-        grads = grad_fn(jax.random.fold_in(k, RESAMPLE_FOLD), x)
-        g, st = algo.step_federated(k, grads, st, mask)
-        x = proximal_step(x, g, gamma, prox)
-        m = record(x) if record is not None else jnp.zeros(())
-        return (x, st), m
-
-    keys = jax.random.split(key, steps)
-    (x, state), metrics = jax.lax.scan(body, (x0, state0), keys)
-    return x, state, (metrics if record is not None else None)
+    Use ``repro.core.build(spec).reference()`` / :func:`run_reference` --
+    this wrapper IS the unified driver with ``downlink`` supplied, returning
+    the historical ``(x, w, metrics)`` triple."""
+    _warn_deprecated("run_bidirectional", "use repro.core.build(spec)"
+                     ".reference() or run_reference(downlink=...)")
+    res = run_reference(algo=algo, grad_fn=grad_fn, x0=x0, gamma=gamma,
+                        steps=steps, key=key, n=n,
+                        participation=participation, downlink=downlink,
+                        prox=prox, record=record, wire_dtype=wire_dtype)
+    return res.x, res.w, res.metrics

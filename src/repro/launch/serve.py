@@ -52,13 +52,14 @@ def main(argv=None):
         return nxt, cache
 
     # prefill via teacher-forced decode (exercises the same serve_step the
-    # dry-run lowers; a production deployment would use model.prefill + cache)
-    tok = prompts[:, :1]
+    # dry-run lowers; a production deployment would use model.prefill + cache).
+    # An empty prompt (--prompt-len 0) skips prefill and generates from a
+    # BOS-style zero token.
+    tok = jnp.zeros((B, 1), jnp.int32)
     t0 = time.time()
     for t in range(args.prompt_len):
-        nxt, cache = step(params, cache, prompts[:, t:t + 1], jnp.int32(t))
+        tok, cache = step(params, cache, prompts[:, t:t + 1], jnp.int32(t))
     generated = []
-    tok = nxt
     for t in range(args.prompt_len, args.prompt_len + args.gen):
         tok, cache = step(params, cache, tok, jnp.int32(t))
         generated.append(np.asarray(tok[:, 0]))

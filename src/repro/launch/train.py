@@ -6,46 +6,72 @@ Example (CPU, reduced config):
         --mesh 2x2 --steps 50 --compressor block_topk:256,16 --algo efbv
 
 On a real cluster the same entry point takes --arch <id> (full config) and
---mesh 16x16 / 2x16x16.  The EF-BV layer is selected with --algo
-{efbv, ef21, diana, none} and --agg {dense_psum, sparse_allgather}; the
-federated execution mode with --participation {full, bernoulli:p, fixed:s}
-and --local-batch-resample (see
-docs/algorithms.md#partial-participation--stochastic-gradients).
+--mesh 16x16 / 2x16x16.
+
+Every algorithmic knob is ONE declarative object: the flag namespace is
+folded into a :class:`repro.core.ExperimentSpec` (:func:`spec_from_args`)
+and the whole run -- EF-BV tuning, trainer dispatch (shard_map vs FSDP),
+federated sampling, bidirectional downlink, wire accounting -- is built via
+``repro.core.build(spec)``.  ``--spec path.json`` loads a serialized spec
+instead (the individual algorithmic flags are then ignored); the spec JSON
++ fingerprint are embedded in every checkpoint, so a mismatched resume is
+refused.  See docs/api.md.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import math
 import os
 import sys
 import time
 
 # On CPU hosts, force enough XLA host devices for the requested mesh BEFORE
-# jax initializes (same constraint as launch/dryrun.py).
-if "--mesh" in sys.argv and "XLA_FLAGS" not in os.environ:
-    _shape = sys.argv[sys.argv.index("--mesh") + 1]
-    _n = math.prod(int(x) for x in _shape.split("x"))
-    if _n > 1:
-        os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_n}"
+# jax initializes (same constraint as launch/dryrun.py).  The mesh comes
+# from --mesh, or -- for spec-driven runs -- from the --spec file itself.
+
+
+def _mesh_from_argv(argv):
+    try:
+        if "--mesh" in argv:
+            return argv[argv.index("--mesh") + 1]
+        for i, a in enumerate(argv):
+            if a == "--spec" or a.startswith("--spec="):
+                path = a.split("=", 1)[1] if "=" in a else argv[i + 1]
+                with open(path) as f:
+                    return json.load(f).get("mesh", "")
+    except (IndexError, OSError, ValueError):
+        pass  # malformed argv / unreadable spec: argparse or main() reports
+    return ""
+
+
+if "XLA_FLAGS" not in os.environ:
+    _shape = _mesh_from_argv(sys.argv)
+    if _shape:
+        _n = math.prod(int(x) for x in _shape.split("x"))
+        if _n > 1:
+            os.environ["XLA_FLAGS"] = \
+                f"--xla_force_host_platform_device_count={_n}"
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import ARCHS, get_config, get_smoke_config
-from repro.core import (Downlink, EFBV, Identity, Participation,
-                        make_compressor, make_fleet)
+from repro.core import ExperimentSpec, SpecError, build
 from repro.data import SyntheticLM, make_batch_shardings
 from repro.launch.mesh import make_mesh, num_workers
 from repro.models import build_model
 from repro.optim import adamw, cosine, wsd
-from repro.train import init_train_state, make_train_step, train_state_shardings
 
 
 def parse_args(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--spec", default="",
+                    help="path to an ExperimentSpec JSON: the declarative "
+                         "form of every algorithmic flag below (which are "
+                         "then ignored); see docs/api.md and examples/specs/")
     ap.add_argument("--arch", default="qwen2-0.5b", choices=ARCHS)
     ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
     ap.add_argument("--mesh", default="2x2", help="e.g. 2x2, 16x16, 2x16x16")
@@ -95,68 +121,117 @@ def parse_args(argv=None):
     return ap.parse_args(argv)
 
 
+def tuning_dim(cfg) -> int:
+    """THE tuning dimension of an arch: its dominant layer size.  Shared by
+    spec_from_args and the CI bench's spec keying, so the fingerprint the
+    driver embeds and the one the bench rows carry can never drift."""
+    return max(cfg.d_model * max(cfg.d_ff, 1), 1)
+
+
+def spec_from_args(args, n: int) -> ExperimentSpec:
+    """Fold the driver's flag namespace into the declarative spec (the
+    runtime-only knobs -- batch/seq/lr/schedule/ckpt/logging -- stay flags).
+
+    The tuning dimension d is the arch's dominant layer size, computed from
+    the config the run actually uses (smoke or full), so the spec is
+    self-contained: re-running it reproduces the identical (lam, nu)."""
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    return ExperimentSpec(
+        compressor=args.worker_comps if args.worker_comps else args.compressor,
+        mode=args.algo,
+        agg=args.agg,
+        wire_dtype=args.wire_dtype,
+        downlink=args.downlink,
+        participation=args.participation,
+        resample=args.local_batch_resample,
+        backend="fsdp" if args.trainer == "fsdp" else "shard_map",
+        problem=args.arch,
+        smoke=args.smoke,
+        mesh=args.mesh,
+        n=n,
+        d=tuning_dim(cfg),
+        steps=args.steps,
+        seed=args.seed,
+    )
+
+
 def main(argv=None):
     args = parse_args(argv)
-    mesh = make_mesh([int(x) for x in args.mesh.split("x")])
+    try:
+        if args.spec:
+            with open(args.spec) as f:
+                spec = ExperimentSpec.from_json(f.read())
+            if args.smoke and not spec.smoke:
+                # --smoke changes the MODEL (reduced config), so it is part
+                # of the experiment identity: fold it into the spec --
+                # including the tuning dimension, which must come from the
+                # config the run actually uses -- before anything derives
+                # from or embeds the fingerprint
+                import dataclasses
+                spec = dataclasses.replace(
+                    spec, smoke=True,
+                    d=tuning_dim(get_smoke_config(spec.problem))
+                    if spec.problem in ARCHS else spec.d)
+            if spec.backend == "reference":
+                raise SpecError(
+                    "the train driver runs the distributed trainers; a "
+                    "backend='reference' spec runs via "
+                    "repro.core.build(spec).reference()")
+            if spec.problem not in ARCHS:
+                # valid spec (e.g. a logreg trainer run wired up in user
+                # code, like examples/distributed_logreg.py), but this
+                # driver only trains the LM arch zoo
+                raise SpecError(
+                    f"this driver trains model archs {sorted(ARCHS)}; "
+                    f"problem={spec.problem!r} specs supply their own "
+                    "loss via repro.core.build(spec).train_step(...)")
+        else:
+            mesh_probe = make_mesh([int(x) for x in args.mesh.split("x")])
+            spec = spec_from_args(args, num_workers(mesh_probe))
+        run = build(spec)
+    except (SpecError, ValueError, OSError) as e:
+        raise SystemExit(f"[train] bad experiment spec: {e}")
+
+    mesh = run.make_mesh()
     n = num_workers(mesh)
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = (get_smoke_config(spec.problem) if spec.smoke
+           else get_config(spec.problem))
     model = build_model(cfg)
 
     # WSD schedule for minicpm (its assigned training recipe), cosine otherwise
     sched_kind = args.schedule
     if sched_kind == "auto":
-        sched_kind = "wsd" if args.arch.startswith("minicpm") else "cosine"
+        sched_kind = "wsd" if spec.problem.startswith("minicpm") else "cosine"
     if sched_kind == "wsd":
-        sched = wsd(args.lr, warmup_steps=max(args.steps // 20, 1),
-                    stable_steps=int(args.steps * 0.7),
-                    decay_steps=max(int(args.steps * 0.25), 1))
+        sched = wsd(args.lr, warmup_steps=max(spec.steps // 20, 1),
+                    stable_steps=int(spec.steps * 0.7),
+                    decay_steps=max(int(spec.steps * 0.25), 1))
     else:
-        sched = cosine(args.lr, total_steps=args.steps,
-                       warmup_steps=max(args.steps // 20, 1))
+        sched = cosine(args.lr, total_steps=spec.steps,
+                       warmup_steps=max(spec.steps // 20, 1))
     opt = adamw(sched, weight_decay=0.01)
 
-    participation = Participation.parse(args.participation)
-    if participation.kind == "fixed" and participation.s > n:
-        raise SystemExit(f"--participation fixed:{participation.s} needs at "
-                         f"least that many workers, mesh has {n}")
-    federated = not participation.is_full
-    if args.algo == "none":
-        algo = EFBV(Identity(), lam=1.0, nu=1.0)
-    else:
-        if args.worker_comps:
-            # heterogeneous fleet: worker i runs its own compressor; (lam, nu)
-            # tuned for the aggregated mixed-fleet constants (theory.tune_fleet)
-            comp = make_fleet(args.worker_comps, n)
-        else:
-            comp = make_compressor(args.compressor)
-        # federated rounds tune (lam, nu) for the effective compressor b*C,
-        # b ~ Bernoulli(E|S_t|/n) -- theory.tune_partial / docs/theory.md
-        algo = EFBV.make(comp, d=max(cfg.d_model * max(cfg.d_ff, 1), 1), n=n,
-                         mode=args.algo,
-                         participation=participation.fraction(n) if federated
-                         else None)
-    if algo.fleet is not None and args.agg != "dense_psum":
-        raise SystemExit("--worker-comps with distinct members needs a "
-                         "uniform message shape: use --agg dense_psum")
-    downlink = Downlink.parse(args.downlink)
+    algo, downlink, participation = run.algo, run.downlink, run.participation
+    federated = run.federated
     print(f"[train] arch={cfg.name} family={cfg.family} params~{cfg.param_count():,} "
-          f"workers={n} algo={args.algo} lam={algo.lam:.4g} nu={algo.nu:.4g} "
-          f"agg={args.agg}"
-          + (f" participation={args.participation}" if federated else "")
-          + (f" downlink={args.downlink}" if downlink else "")
-          + (f" fleet={args.worker_comps}" if algo.fleet is not None else ""))
+          f"workers={n} algo={spec.mode} lam={algo.lam:.4g} nu={algo.nu:.4g} "
+          f"agg={spec.agg}"
+          + (f" participation={spec.participation}" if federated else "")
+          + (f" downlink={spec.downlink}" if downlink else "")
+          + (f" fleet={spec.compressor}" if algo.fleet is not None else ""))
+    print(f"[train] spec fingerprint={spec.fingerprint()}"
+          + (f" (from {args.spec})" if args.spec else ""))
 
-    key = jax.random.key(args.seed)
+    key = jax.random.key(spec.seed)
     params = model.init(key)
-    state = init_train_state(params, opt, mesh,
-                             bidirectional=downlink is not None)
+    state = run.init_state(params, opt, mesh)
 
     # exact wire accounting for the codec payload (docs/wire_format.md);
     # every compressor declares a codec, so this always prints
     from repro.distributed import wire
     up_fmt = wire.format_for(algo.compressor, params,
-                             wire_dtype=args.wire_dtype) \
-        if args.agg == "sparse_allgather" else None
+                             wire_dtype=spec.wire_dtype) \
+        if spec.agg == "sparse_allgather" else None
     if up_fmt is not None:
         up = up_fmt.bits_per_round()
         dense = up_fmt.dense_bits()
@@ -173,7 +248,7 @@ def main(argv=None):
                   f"({fed / max(full, 1):.3f}x the full-participation round)")
     elif algo.fleet is not None:
         fmts = wire.fleet_formats(algo.fleet, params,
-                                  wire_dtype=args.wire_dtype)
+                                  wire_dtype=spec.wire_dtype)
         bits = wire.fleet_bits_per_round(fmts)
         per = sorted({f.bits_per_round() for f in fmts})
         print(f"[train] wire: mixed fleet of {len(set(algo.fleet))} member "
@@ -182,7 +257,7 @@ def main(argv=None):
     if downlink is not None:
         # the downlink accounting prints for EVERY agg mode: the broadcast
         # payload is real regardless of how the uplink travels
-        dfmt = downlink.format_for(params, wire_dtype=args.wire_dtype)
+        dfmt = downlink.format_for(params, wire_dtype=spec.wire_dtype)
         down = dfmt.downlink_bits_per_round()
         dense = dfmt.dense_bits()
         up = (up_fmt.bits_per_round() if up_fmt is not None else dense)
@@ -195,37 +270,23 @@ def main(argv=None):
               f"({down / max(dense, 1):.4f}x dense fp32); total "
               f"{total:g} bits/round up+down "
               f"({total / max(dense_total, 1):.4f}x dense both ways)")
-    if args.trainer == "fsdp":
-        from repro.train import fsdp_state_shardings
-        shardings = fsdp_state_shardings(mesh, model.param_specs(), state)
-    else:
-        shardings = train_state_shardings(mesh, model.param_specs(), state)
+
+    shardings = run.state_shardings(mesh, model.param_specs(), state)
     state = jax.tree.map(lambda x, s: jax.device_put(x, s), state, shardings)
 
     data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq,
                        global_batch=args.global_batch, n_workers=n,
-                       seed=args.seed, heterogeneity=args.heterogeneity,
-                       resample_from_shard=args.local_batch_resample,
+                       seed=spec.seed, heterogeneity=args.heterogeneity,
+                       resample_from_shard=spec.resample,
                        shard_size=args.shard_size)
 
     def loss_fn(p, batch):
         return model.loss(p, batch)
 
-    if args.trainer == "fsdp":
-        from repro.train import make_train_step_fsdp
-        step_fn = make_train_step_fsdp(loss_fn, opt, algo, mesh,
-                                       agg_mode=args.agg,
-                                       wire_dtype=args.wire_dtype,
-                                       downlink=downlink,
-                                       participation=participation)
-    else:
-        step_fn = make_train_step(loss_fn, opt, algo, mesh, agg_mode=args.agg,
-                                  wire_dtype=args.wire_dtype,
-                                  downlink=downlink,
-                                  participation=participation)
+    step_fn = run.train_step(loss_fn, opt, mesh)
 
     t_start = time.time()
-    for step in range(args.steps):
+    for step in range(spec.steps):
         batch = make_batch_shardings(mesh, data.batch(step))
         if cfg.family == "vlm":
             batch["vision_embeds"] = jax.device_put(
@@ -238,7 +299,7 @@ def main(argv=None):
                     (args.global_batch, cfg.encoder_frames, cfg.d_model),
                     dtype=np.float32))
         state, metrics = step_fn(state, batch, jax.random.fold_in(key, step))
-        if step % args.log_every == 0 or step == args.steps - 1:
+        if step % args.log_every == 0 or step == spec.steps - 1:
             m = {k: float(v) for k, v in metrics.items()}
             part_str = f"|S|={int(m['participants'])}/{n} " \
                 if "participants" in m else ""
@@ -247,10 +308,12 @@ def main(argv=None):
                   f"h_res={m['h_residual']:.3f} {part_str}"
                   f"({(time.time()-t_start)/(step+1):.2f}s/step)")
         if args.ckpt_dir and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
-            save_checkpoint(args.ckpt_dir, step + 1, {"params": state.params})
+            save_checkpoint(args.ckpt_dir, step + 1, {"params": state.params},
+                            spec=spec)
             print(f"[train] checkpoint @ {step + 1}")
     if args.ckpt_dir:
-        save_checkpoint(args.ckpt_dir, args.steps, {"params": state.params})
+        save_checkpoint(args.ckpt_dir, spec.steps, {"params": state.params},
+                        spec=spec)
     print(f"[train] done: final loss {float(metrics['loss']):.4f}")
     return float(metrics["loss"])
 

@@ -28,6 +28,12 @@ and absent workers, so w stays replicated.  Heterogeneous fleets
 (``algo.fleet``) dispatch each worker's own compressor inside phase 1 via
 lax.switch on the worker index (dense_psum mode; mixed payload shapes
 cannot stack).
+
+The declarative way to obtain a train step is
+``repro.core.build(spec).train_step(loss_fn, opt, mesh)``: the
+:class:`repro.core.ExperimentSpec` selects this builder vs
+:func:`make_train_step_fsdp` from ``spec.backend`` and threads
+agg/wire_dtype/downlink/participation from its fields (docs/api.md).
 """
 
 from __future__ import annotations

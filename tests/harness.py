@@ -12,17 +12,24 @@ Because the kernels reproduce the oracles' f32 arithmetic op-for-op
 (jax.lax.top_k's selection order for block-top-k, the SMEM index mask for
 rand-k, the stochastic-rounding chain for QSGD), any divergence -- one ULP,
 one swapped tie -- is a bug, and equality composes over steps: if round t is
-bit-equal, round t+1 sees identical inputs.  ``run_wire_trajectory`` drives
-the block-top-k pipeline; ``run_codec_trajectory`` drives ANY compressor
-through its declared codec (tests/test_wire.py and tests/test_wire_codecs.py
-parametrize over the zoo); ``run_federated_trajectory`` adds randomized
-per-round participation masks on top (tests/test_federated.py);
+bit-equal, round t+1 sees identical inputs.
+
+There is ONE trajectory driver, :func:`run_trajectory`, taking a
+:class:`repro.core.ExperimentSpec`: the spec's codec / participation /
+downlink fields select the execution mode exactly as they do for
+``repro.core.build``.  The historical legs -- ``run_codec_trajectory``
+(any compressor through its codec), ``run_federated_trajectory``
+(randomized per-round masks on top) and ``run_bidirectional_trajectory``
+(compressed broadcast on the way back) -- are thin wrappers over the same
+internal loop, kept so every existing pin still executes, and pinned
+bit-identical to the spec-driven driver by tests/test_spec.py.
+``run_wire_trajectory`` drives the raw block-sparse pack path;
 test_distributed.py reuses run_with_devices for the 1-vs-8-fake-device leg.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,16 +58,12 @@ def codec_impls(codec) -> List[str]:
 
 def quadratic_grads(n: int, d: int, seed: int = 0):
     """Per-worker gradient oracle of a strongly convex quadratic finite sum:
-    grad_i(x) = Q_i x - b_i, returned as an (n, d) stack."""
-    key = jax.random.key(seed)
-    A = jax.random.normal(key, (n, d, d)) / np.sqrt(d)
-    Q = jnp.einsum("nij,nkj->nik", A, A) + 0.5 * jnp.eye(d)
-    b = jax.random.normal(jax.random.key(seed + 1), (n, d))
+    grad_i(x) = Q_i x - b_i, returned as an (n, d) stack.  Same construction
+    as repro.core.spec.Quadratic, so spec-driven reference runs and the
+    harness draw identical gradients."""
+    from repro.core.spec import Quadratic
 
-    def grad_fn(x):
-        return jnp.einsum("nij,j->ni", Q, x) - b
-
-    return grad_fn
+    return Quadratic.make(n, d, seed).grads
 
 
 def run_wire_trajectory(kernel: str, *, steps: int, n: int, d: int,
@@ -101,126 +104,27 @@ def run_wire_trajectory(kernel: str, *, steps: int, n: int, d: int,
             "lw": lw}
 
 
-def run_codec_trajectory(kernel: str, *, compressor, steps: int, n: int,
-                         d: int, lam: float, nu: float, gamma: float,
-                         seed: int = 0, wire_dtype: str = "float32"
-                         ) -> Dict[str, Array]:
-    """EF-BV (Algorithm 1) over ANY compressor's declared wire codec.
+# ---------------------------------------------------------------------------
+# the ONE codec trajectory: any uplink codec x any participation x any
+# downlink, every pack backend
+# ---------------------------------------------------------------------------
 
-    Every worker runs wire.encode_update (codec pack + h update, fused
-    kernel when kernel != 'oracle' and the codec has one), the master
-    decode-sums the worker-stacked payload -- exactly the sparse_allgather
-    data path.  Returns the (x, h) trajectory plus the last round's stacked
-    payload for byte accounting.
-    """
-    codec = wire.codec_of(compressor, (d,), d, wire_dtype)
-    grad_fn = quadratic_grads(n, d, seed)
-    key = jax.random.key(seed + 0xC0DEC)
+def _codec_trajectory(kernel: str, *, compressor, steps: int, n: int, d: int,
+                      lam: float, nu: float, gamma: float,
+                      participation=None, downlink=None, seed: int = 0,
+                      wire_dtype: str = "float32") -> Dict[str, Array]:
+    """The shared recursion behind every harness leg.
 
-    x = jnp.zeros((d,), jnp.float32)
-    h = jnp.zeros((n, d), jnp.float32)
-    h_avg = jnp.zeros((d,), jnp.float32)
-    xs, hs = [], []
-    payload = None
-    for t in range(steps):
-        g = grad_fn(x)
-        payloads, h_i = [], []
-        for i in range(n):
-            ki = jax.random.fold_in(jax.random.fold_in(key, t), i)
-            p, h_new = wire.encode_update(codec, ki, g[i], h[i], lam,
-                                          kernel=kernel)
-            payloads.append(p)
-            h_i.append(h_new)
-        h = jnp.stack(h_i)
-        payload = jax.tree.map(lambda *xs_: jnp.stack(xs_), *payloads)
-        d_bar = codec.decode_sum(payload) / n
-        x = x - gamma * (h_avg + nu * d_bar)
-        h_avg = h_avg + lam * d_bar
-        xs.append(x)
-        hs.append(h)
-    return {"x": jnp.stack(xs), "h": jnp.stack(hs), "payload": payload,
-            "codec": codec}
-
-
-def run_federated_trajectory(kernel: str, *, compressor, steps: int, n: int,
-                             d: int, lam: float, nu: float, gamma: float,
-                             participation, seed: int = 0,
-                             wire_dtype: str = "float32") -> Dict[str, Array]:
-    """EF-BV over a compressor's wire codec under per-round client sampling.
-
-    Same recursion as :func:`run_codec_trajectory` plus the federated gating:
-    each round draws a participation mask (Participation.sample_mask from the
-    shared participation_key derivation), every worker still encodes with the
-    requested pack backend, then absent workers' payloads are gated to
-    decode-zero (codec.mask_message) and their h_i kept stale -- exactly the
-    masked sparse_allgather data path.  With an all-ones mask (bernoulli
-    p = 1) the trajectory is bit-identical to run_codec_trajectory's;
-    randomized masks extend the oracle==interpret==compiled pinning to the
-    federated regime.  Returns the (x, h) trajectory, the per-round masks and
-    the exact federated wire bits of the last round.
-    """
-    from repro.core.efbv import participation_key
-
-    codec = wire.codec_of(compressor, (d,), d, wire_dtype)
-    grad_fn = quadratic_grads(n, d, seed)
-    key = jax.random.key(seed + 0xC0DEC)
-
-    x = jnp.zeros((d,), jnp.float32)
-    h = jnp.zeros((n, d), jnp.float32)
-    h_avg = jnp.zeros((d,), jnp.float32)
-    xs, hs, masks = [], [], []
-    payload = None
-    for t in range(steps):
-        kt = jax.random.fold_in(key, t)
-        mask = participation.sample_mask(participation_key(kt), n)
-        g = grad_fn(x)
-        payloads, h_i = [], []
-        for i in range(n):
-            ki = jax.random.fold_in(kt, i)
-            p, h_new = wire.encode_update(codec, ki, g[i], h[i], lam,
-                                          kernel=kernel)
-            p = codec.mask_message(p, mask[i])
-            h_new = jnp.where(mask[i] > 0, h_new, h[i])
-            payloads.append(p)
-            h_i.append(h_new)
-        h = jnp.stack(h_i)
-        payload = jax.tree.map(lambda *xs_: jnp.stack(xs_), *payloads)
-        d_bar = codec.decode_sum(payload) / n
-        x = x - gamma * (h_avg + nu * d_bar)
-        h_avg = h_avg + lam * d_bar
-        xs.append(x)
-        hs.append(h)
-        masks.append(mask)
-    fmt = wire.WireFormat((codec,))
-    return {"x": jnp.stack(xs), "h": jnp.stack(hs), "payload": payload,
-            "masks": jnp.stack(masks), "codec": codec,
-            "round_bits": wire.federated_round_bits(fmt, masks[-1])}
-
-
-def run_bidirectional_trajectory(kernel: str, *, compressor, downlink,
-                                 steps: int, n: int, d: int, lam: float,
-                                 nu: float, gamma: float, participation=None,
-                                 seed: int = 0, wire_dtype: str = "float32"
-                                 ) -> Dict[str, Array]:
-    """EF-BV over a fully bidirectional wire: any uplink codec, any
-    :class:`repro.core.efbv.Downlink` broadcast channel, optionally the
-    federated execution mode on top.
-
-    The uplink is exactly :func:`run_federated_trajectory`'s recursion
-    (same key folds, same pack backend ``kernel``, same mask gating when
-    ``participation`` is given -- an all-ones/None mask reduces to
-    :func:`run_codec_trajectory`); workers evaluate gradients at the shared
-    reconstruction ``w``, and each round ends with ONE broadcast through
-    the downlink codec, drawn from the shared downlink_key derivation.
-    An Identity downlink assigns w = x verbatim, so identity-downlink +
-    full-participation trajectories are BIT-IDENTICAL to
-    run_codec_trajectory's (the PR-3 pinning; tests/test_wire_codecs.py and
-    tests/test_federated.py hold the harness to it).
-
-    Returns the (x, w, h) trajectories, the per-round masks (all-ones when
-    full), the last round's payloads both ways, and the exact bit
-    accounting of the last round: uplink, downlink, total, and the dense
-    fp32 both-ways baseline.
+    Per round: kt = fold_in(key, t); an optional participation mask drawn
+    from the shared participation_key derivation; every worker i encodes
+    with fold_in(kt, i) through the requested pack backend (mask-gated to
+    decode-zero + stale h_i when ``participation`` is given); the master
+    decode-sums the stacked payload; and -- when ``downlink`` is given --
+    ONE broadcast through the downlink codec (shared downlink_key) updates
+    the reconstruction w that workers evaluate gradients at.  Each optional
+    piece is absent from the computation entirely when not requested, so
+    the specialized wrappers below reproduce their historical trajectories
+    bit-for-bit.
     """
     from repro.core.efbv import downlink_key, participation_key
 
@@ -238,7 +142,7 @@ def run_bidirectional_trajectory(kernel: str, *, compressor, downlink,
         kt = jax.random.fold_in(key, t)
         mask = (jnp.ones((n,), jnp.float32) if participation is None
                 else participation.sample_mask(participation_key(kt), n))
-        g = grad_fn(w)  # workers only ever see the reconstruction
+        g = grad_fn(w if downlink is not None else x)
         payloads, h_i = [], []
         for i in range(n):
             ki = jax.random.fold_in(kt, i)
@@ -254,24 +158,122 @@ def run_bidirectional_trajectory(kernel: str, *, compressor, downlink,
         d_bar = codec.decode_sum(payload) / n
         x = x - gamma * (h_avg + nu * d_bar)
         h_avg = h_avg + lam * d_bar
-        w, down_payload = downlink.broadcast(downlink_key(kt), x, w,
-                                             wire_dtype=wire_dtype)
+        if downlink is not None:
+            w, down_payload = downlink.broadcast(downlink_key(kt), x, w,
+                                                 wire_dtype=wire_dtype)
+            ws.append(w)
         xs.append(x)
-        ws.append(w)
         hs.append(h)
         masks.append(mask)
+
     fmt = wire.WireFormat((codec,))
-    dfmt = downlink.format_for(jnp.zeros((d,)), wire_dtype=wire_dtype)
     up_bits = (fmt.bits_per_round(n_workers=n) if participation is None
                else wire.federated_round_bits(fmt, masks[-1]))
-    down_bits = dfmt.downlink_bits_per_round()
-    return {"x": jnp.stack(xs), "w": jnp.stack(ws), "h": jnp.stack(hs),
-            "masks": jnp.stack(masks), "payload": payload,
-            "down_payload": down_payload, "codec": codec,
-            "down_codec": dfmt.leaves[0],
-            "round_bits": {"up": up_bits, "down": down_bits,
-                           "total": up_bits + down_bits,
-                           "dense_both_ways": 32 * d * n + 32 * d}}
+    # down = the honest dense fp32 broadcast when no downlink codec is
+    # configured -- the same convention as wire.total_round_bits and
+    # Run.round_bits, so the two spec-driven surfaces agree
+    down_bits = 32 * d
+    out = {"x": jnp.stack(xs), "h": jnp.stack(hs), "payload": payload,
+           "masks": jnp.stack(masks), "codec": codec}
+    if downlink is not None:
+        dfmt = downlink.format_for(jnp.zeros((d,)), wire_dtype=wire_dtype)
+        down_bits = dfmt.downlink_bits_per_round()
+        out.update({"w": jnp.stack(ws), "down_payload": down_payload,
+                    "down_codec": dfmt.leaves[0]})
+    out["round_bits"] = {"up": up_bits, "down": down_bits,
+                         "total": up_bits + down_bits,
+                         "dense_both_ways": 32 * d * n + 32 * d}
+    return out
+
+
+def run_trajectory(spec, kernel: str = "oracle", *,
+                   lam: Optional[float] = None, nu: Optional[float] = None,
+                   gamma: Optional[float] = None) -> Dict[str, Array]:
+    """Spec-driven differential trajectory: ONE driver for every harness leg.
+
+    ``spec`` is a :class:`repro.core.ExperimentSpec`; its compressor /
+    participation / downlink / wire_dtype / steps / n / d / seed fields
+    select the execution mode (heterogeneous fleets are not a codec-level
+    trajectory and are rejected).  ``lam``/``nu`` default to the spec's
+    auto-tuning (Remark 1); ``gamma`` to ``spec.gamma``.  The historical
+    legs below are wrappers over the same loop and bit-identical to this
+    driver for equivalent arguments (pinned by tests/test_spec.py).
+    """
+    from repro.core import build
+
+    if len(spec.fleet_specs()) > 1:
+        raise ValueError("run_trajectory drives ONE codec; heterogeneous "
+                         "fleets aggregate dense (see tests/test_bidirectional.py)")
+    run = build(spec)
+    if lam is None or nu is None:
+        t = run.tuned
+        if t is None:
+            raise ValueError("mode='none' has no tuning; pass lam/nu")
+        lam = t.lam if lam is None else lam
+        nu = t.nu if nu is None else nu
+    if gamma is None:
+        if spec.gamma <= 0.0:
+            raise ValueError("pass gamma= or set spec.gamma > 0")
+        gamma = spec.gamma
+    return _codec_trajectory(
+        kernel, compressor=run.compressor, steps=spec.steps, n=spec.n,
+        d=spec.d, lam=lam, nu=nu, gamma=gamma,
+        participation=run.participation if run.federated else None,
+        downlink=run.downlink, seed=spec.seed, wire_dtype=spec.wire_dtype)
+
+
+def run_codec_trajectory(kernel: str, *, compressor, steps: int, n: int,
+                         d: int, lam: float, nu: float, gamma: float,
+                         seed: int = 0, wire_dtype: str = "float32"
+                         ) -> Dict[str, Array]:
+    """EF-BV (Algorithm 1) over ANY compressor's declared wire codec
+    (wrapper over :func:`run_trajectory`'s loop: full participation, no
+    downlink).  Returns the (x, h) trajectory plus the last round's stacked
+    payload for byte accounting."""
+    return _codec_trajectory(kernel, compressor=compressor, steps=steps,
+                             n=n, d=d, lam=lam, nu=nu, gamma=gamma,
+                             seed=seed, wire_dtype=wire_dtype)
+
+
+def run_federated_trajectory(kernel: str, *, compressor, steps: int, n: int,
+                             d: int, lam: float, nu: float, gamma: float,
+                             participation, seed: int = 0,
+                             wire_dtype: str = "float32") -> Dict[str, Array]:
+    """EF-BV over a compressor's wire codec under per-round client sampling
+    (wrapper over :func:`run_trajectory`'s loop with mask gating: absent
+    workers' payloads decode to zero, their h_i stay stale).  With an
+    all-ones mask the trajectory is bit-identical to
+    :func:`run_codec_trajectory`'s.  Returns the (x, h) trajectory, the
+    per-round masks and the exact federated wire bits of the last round.
+    """
+    out = dict(_codec_trajectory(kernel, compressor=compressor, steps=steps,
+                                 n=n, d=d, lam=lam, nu=nu, gamma=gamma,
+                                 participation=participation, seed=seed,
+                                 wire_dtype=wire_dtype))
+    out["round_bits"] = out["round_bits"]["up"]  # historical: uplink int
+    return out
+
+
+def run_bidirectional_trajectory(kernel: str, *, compressor, downlink,
+                                 steps: int, n: int, d: int, lam: float,
+                                 nu: float, gamma: float, participation=None,
+                                 seed: int = 0, wire_dtype: str = "float32"
+                                 ) -> Dict[str, Array]:
+    """EF-BV over a fully bidirectional wire: any uplink codec, any
+    :class:`repro.core.efbv.Downlink` broadcast channel, optionally the
+    federated execution mode on top (wrapper over :func:`run_trajectory`'s
+    loop).  Workers evaluate gradients at the shared reconstruction ``w``;
+    an Identity downlink assigns w = x verbatim, so identity-downlink +
+    full-participation trajectories are BIT-IDENTICAL to
+    run_codec_trajectory's (the PR-3 pinning).  Returns the (x, w, h)
+    trajectories, the per-round masks (all-ones when full), the last
+    round's payloads both ways, and the exact bit accounting of the last
+    round: uplink, downlink, total, and the dense fp32 both-ways baseline.
+    """
+    return _codec_trajectory(kernel, compressor=compressor, steps=steps,
+                             n=n, d=d, lam=lam, nu=nu, gamma=gamma,
+                             participation=participation, downlink=downlink,
+                             seed=seed, wire_dtype=wire_dtype)
 
 
 def assert_bit_identical(a, b, context: str = ""):

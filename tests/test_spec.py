@@ -1,0 +1,497 @@
+"""The declarative ExperimentSpec surface (repro/core/spec.py).
+
+Four obligations, all acceptance-critical:
+
+1. *Serialization is lossless and stable*: parse -> to_json -> from_json is
+   the identity, fingerprints ignore field ordering, and every codec /
+   fleet / downlink / participation combination the wire-codec suite
+   exercises round-trips losslessly.
+2. *Inconsistent specs are rejected loudly* with actionable messages
+   (sparse wire + heterogeneous fleet, oversized fixed participation, ...).
+3. *The deprecated shims are bit-identical to their spec-driven
+   replacements*: run / run_federated / run_bidirectional vs
+   build(spec).reference(), and the three historical harness legs vs the
+   spec-driven run_trajectory.
+4. *Checkpoints carry the spec*: the embedded fingerprint gates resume.
+"""
+
+import dataclasses
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _prop import given, settings, st
+
+from harness import (run_bidirectional_trajectory, run_codec_trajectory,
+                     run_federated_trajectory, run_trajectory,
+                     assert_bit_identical)
+from repro.core import (Downlink, ExperimentSpec, Participation, SpecError,
+                        build, make_compressor, run, run_bidirectional,
+                        run_federated, run_reference)
+
+# every codec spec exercised by tests/test_wire_codecs.py's registry test,
+# plus the fleet / downlink / participation axes the suite uses
+CODEC_SPECS = ["identity", "topk:8", "randk:4", "scaled_randk:4", "comp:2,8",
+               "mix:2,4", "block_topk:16,2", "sign", "natural", "qsgd:16",
+               "frac_topk:50", "frac_comp:20,400"]
+FLEET_SPECS = ["topk:7;qsgd:16;sign", "frac_topk:50;qsgd:16"]
+DOWNLINK_SPECS = ["", "qsgd:16", "block_topk:16,2", "topk:48", "sign@0.9"]
+PARTICIPATIONS = ["full", "bernoulli:0.5", "bernoulli:1.0", "fixed:3"]
+
+
+# ---------------------------------------------------------------------------
+# 1. lossless serialization
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("comp", CODEC_SPECS + FLEET_SPECS)
+@pytest.mark.parametrize("down", DOWNLINK_SPECS)
+def test_roundtrip_every_codec_and_downlink(comp, down):
+    """to_json/from_json is the identity for every codec x downlink combo
+    the wire-codec suite exercises (fleets forced onto the dense wire)."""
+    spec = ExperimentSpec(compressor=comp, downlink=down,
+                          agg="dense_psum" if ";" in comp
+                          else "sparse_allgather", n=8, d=96)
+    back = ExperimentSpec.from_json(spec.to_json())
+    assert back == spec
+    assert back.fingerprint() == spec.fingerprint()
+
+
+@pytest.mark.parametrize("part", PARTICIPATIONS)
+def test_roundtrip_every_participation(part):
+    spec = ExperimentSpec(participation=part, n=8)
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+
+
+@given(n=st.integers(1, 64), d=st.integers(1, 4096),
+       steps=st.integers(1, 10**6), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_parse_tojson_fromjson_identity(n, d, steps, seed):
+    """Property: CLI parse -> JSON -> parse is the identity, over random
+    numeric fields and both CLI token forms."""
+    argv = (f"--compressor qsgd:16 --participation bernoulli:0.5 "
+            f"--downlink sign --n {n} --d {d} --steps {steps} "
+            f"--seed {seed} --resample --problem logreg")
+    spec = ExperimentSpec.parse(argv)
+    assert spec.n == n and spec.resample is True
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    # key=value token form parses to the same spec
+    alt = ExperimentSpec.parse(
+        ["compressor=qsgd:16", "participation=bernoulli:0.5",
+         "downlink=sign", f"n={n}", f"d={d}", f"steps={steps}",
+         f"seed={seed}", "resample=true", "problem=logreg"])
+    assert alt == spec and alt.fingerprint() == spec.fingerprint()
+
+
+def test_fingerprint_stable_across_field_ordering():
+    spec = ExperimentSpec(compressor="qsgd:16", downlink="sign", n=4, d=128)
+    d = json.loads(spec.to_json())
+    reordered = dict(sorted(d.items(), reverse=True))
+    assert ExperimentSpec.from_dict(reordered).fingerprint() \
+        == spec.fingerprint()
+    # and differs for a different experiment
+    other = dataclasses.replace(spec, downlink="qsgd:16")
+    assert other.fingerprint() != spec.fingerprint()
+
+
+def test_fingerprint_includes_defaults():
+    """A default-valued field is part of the identity: constructing it
+    explicitly changes nothing."""
+    assert ExperimentSpec().fingerprint() \
+        == ExperimentSpec(mode="efbv", seed=0).fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# 2. rejection of inconsistent combos
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad,fragment", [
+    (dict(compressor="topk:4;qsgd:16", agg="sparse_allgather"),
+     "dense_psum"),
+    (dict(compressor="qsgd:16;qsgd:16;qsgd:16", n=2), "fleet of 3"),
+    (dict(participation="fixed:9", n=4), "fixed:9"),
+    (dict(backend="shard_map"), "mesh"),
+    (dict(backend="shard_map", mesh="2x2", n=4), "workers"),
+    (dict(problem="qwen2-0.5b"), "backend"),
+    (dict(backend="shard_map", mesh="2x2", n=2, problem="nope"), "unknown"),
+    (dict(mode="sgd"), "mode"),
+    (dict(agg="ring"), "agg"),
+    (dict(wire_dtype="int4"), "wire_dtype"),
+    (dict(compressor="bogus:1"), "bogus"),
+    (dict(downlink="bogus:1"), "bogus"),
+    (dict(participation="sometimes"), "participation"),
+    (dict(resample=True, problem="quadratic"), "resample"),
+    (dict(mesh="2x2"), "mesh"),
+    (dict(n=0), "positive"),
+    (dict(gamma=-1.0), "gamma"),
+    (dict(compressor=""), "empty"),
+])
+def test_inconsistent_specs_rejected_with_actionable_messages(bad, fragment):
+    with pytest.raises((SpecError, ValueError), match=fragment):
+        ExperimentSpec(**bad)
+
+
+def test_unknown_fields_rejected():
+    with pytest.raises(SpecError, match="unknown spec field"):
+        ExperimentSpec.parse("--compresor qsgd:16")
+    with pytest.raises(SpecError, match="unknown spec fields"):
+        ExperimentSpec.from_dict({"compresor": "qsgd:16"})
+    with pytest.raises(SpecError, match="spec_version"):
+        ExperimentSpec.from_dict({"spec_version": 99})
+
+
+def test_parse_bad_values_rejected():
+    with pytest.raises(SpecError, match="wants int"):
+        ExperimentSpec.parse("--n eight")
+    with pytest.raises(SpecError, match="boolean"):
+        ExperimentSpec.parse("--resample maybe")
+    with pytest.raises(SpecError, match="missing a value"):
+        ExperimentSpec.parse(["--compressor"])
+
+
+# ---------------------------------------------------------------------------
+# 3a. deprecated reference drivers == spec-driven replacement, bitwise
+# ---------------------------------------------------------------------------
+
+def _silence():
+    warnings.simplefilter("ignore", DeprecationWarning)
+
+
+def test_run_shim_bit_identical_to_spec_reference():
+    """The historical run() == build(spec).reference() bit-for-bit."""
+    _silence()
+    spec = ExperimentSpec(compressor="comp:2,16", problem="quadratic",
+                          n=6, d=32, steps=15, seed=0, gamma=0.04)
+    r = build(spec)
+    prob = r.problem_instance()
+    res = r.reference(record=prob.f)
+    x, state, m = run(algo=r.algo, grad_fn=prob.grads, x0=jnp.zeros(32),
+                      gamma=0.04, steps=15,
+                      key=jax.random.fold_in(jax.random.key(0), 0x5EED),
+                      n=6, record=prob.f)
+    assert_bit_identical((res.x, res.state.h, res.metrics),
+                         (x, state.h, m), "run shim")
+    assert res.w is None
+
+
+def test_run_federated_shim_bit_identical_to_spec_reference():
+    _silence()
+    spec = ExperimentSpec(compressor="qsgd:8", problem="logreg",
+                          participation="bernoulli:0.5", resample=True,
+                          n=5, d=24, steps=10, seed=1, gamma=0.05)
+    r = build(spec)
+    prob = r.problem_instance()
+    gf = lambda k, x: prob.minibatch_grads(k, x, max(1, prob.A.shape[1] // 8))  # noqa: E731
+    res = r.reference(record=prob.f)
+    x, state, m = run_federated(
+        algo=r.algo, grad_fn=gf, x0=jnp.zeros(24), gamma=0.05, steps=10,
+        key=jax.random.fold_in(jax.random.key(1), 0x5EED), n=5,
+        participation=r.participation, record=prob.f)
+    assert_bit_identical((res.x, res.state.h, res.metrics),
+                         (x, state.h, m), "run_federated shim")
+
+
+def test_run_bidirectional_shim_bit_identical_to_spec_reference():
+    _silence()
+    spec = ExperimentSpec(compressor="qsgd:8", downlink="block_topk:8,2",
+                          participation="fixed:3", problem="quadratic",
+                          n=5, d=24, steps=10, seed=2, gamma=0.03)
+    r = build(spec)
+    prob = r.problem_instance()
+    res = r.reference(record=prob.f)
+    x, w, m = run_bidirectional(
+        algo=r.algo, downlink=r.downlink,
+        grad_fn=lambda _k, x: prob.grads(x), x0=jnp.zeros(24), gamma=0.03,
+        steps=10, key=jax.random.fold_in(jax.random.key(2), 0x5EED), n=5,
+        participation=r.participation, record=prob.f)
+    assert_bit_identical((res.x, res.w, res.metrics), (x, w, m),
+                         "run_bidirectional shim")
+
+
+def test_shims_emit_deprecation_warnings():
+    spec = ExperimentSpec(n=2, d=8, steps=1, gamma=0.1)
+    r = build(spec)
+    prob = r.problem_instance()
+    with pytest.warns(DeprecationWarning, match="run_reference"):
+        run(algo=r.algo, grad_fn=prob.grads, x0=jnp.zeros(8), gamma=0.1,
+            steps=1, key=jax.random.key(0), n=2)
+
+
+def test_run_reference_full_equals_federated_full_bitwise():
+    """The is_full fast path (EFBV.step) == the masked path at an all-ones
+    mask, through whole run_reference trajectories."""
+    spec = ExperimentSpec(compressor="randk:4", n=4, d=16, steps=8,
+                          gamma=0.05, seed=3)
+    r = build(spec)
+    prob = r.problem_instance()
+    kw = dict(algo=r.algo, grad_fn=lambda _k, x: prob.grads(x),
+              x0=jnp.zeros(16), gamma=0.05, steps=8,
+              key=jax.random.key(3), n=4, record=prob.f)
+    a = run_reference(**kw)
+    b = run_reference(participation=Participation.parse("bernoulli:1.0"),
+                      **kw)
+    assert_bit_identical((a.x, a.state.h, a.metrics),
+                         (b.x, b.state.h, b.metrics), "full == bern(1)")
+
+
+# ---------------------------------------------------------------------------
+# 3b. historical harness legs == spec-driven run_trajectory, bitwise
+# ---------------------------------------------------------------------------
+
+def test_codec_leg_bit_identical_to_spec_trajectory():
+    spec = ExperimentSpec(compressor="qsgd:16", agg="sparse_allgather",
+                          n=3, d=96, steps=4, seed=0)
+    got = run_trajectory(spec, "oracle", lam=0.8, nu=0.9, gamma=0.05)
+    ref = run_codec_trajectory("oracle", compressor=make_compressor("qsgd:16"),
+                               steps=4, n=3, d=96, lam=0.8, nu=0.9,
+                               gamma=0.05, seed=0)
+    assert_bit_identical((got["x"], got["h"], got["payload"]),
+                         (ref["x"], ref["h"], ref["payload"]), "codec leg")
+
+
+def test_federated_leg_bit_identical_to_spec_trajectory():
+    spec = ExperimentSpec(compressor="block_topk:16,4",
+                          agg="sparse_allgather",
+                          participation="bernoulli:0.5", n=4, d=64,
+                          steps=5, seed=1)
+    got = run_trajectory(spec, "oracle", lam=0.7, nu=0.8, gamma=0.05)
+    ref = run_federated_trajectory(
+        "oracle", compressor=make_compressor("block_topk:16,4"), steps=5,
+        n=4, d=64, lam=0.7, nu=0.8, gamma=0.05,
+        participation=Participation.parse("bernoulli:0.5"), seed=1)
+    assert_bit_identical((got["x"], got["h"], got["masks"], got["payload"]),
+                         (ref["x"], ref["h"], ref["masks"], ref["payload"]),
+                         "federated leg")
+    assert got["round_bits"]["up"] == ref["round_bits"]
+
+
+def test_bidirectional_leg_bit_identical_to_spec_trajectory():
+    spec = ExperimentSpec(compressor="randk:8", agg="sparse_allgather",
+                          downlink="qsgd:16", participation="fixed:2",
+                          n=4, d=64, steps=5, seed=2)
+    got = run_trajectory(spec, "oracle", lam=0.6, nu=0.7, gamma=0.04)
+    ref = run_bidirectional_trajectory(
+        "oracle", compressor=make_compressor("randk:8"),
+        downlink=Downlink.parse("qsgd:16"), steps=5, n=4, d=64, lam=0.6,
+        nu=0.7, gamma=0.04, participation=Participation.parse("fixed:2"),
+        seed=2)
+    assert_bit_identical(
+        (got["x"], got["w"], got["h"], got["masks"], got["payload"],
+         got["down_payload"]),
+        (ref["x"], ref["w"], ref["h"], ref["masks"], ref["payload"],
+         ref["down_payload"]), "bidirectional leg")
+    assert got["round_bits"] == ref["round_bits"]
+
+
+def test_spec_trajectory_defaults_from_tuning():
+    """lam/nu default to the spec's auto-tuning; gamma must come from the
+    spec (or explicitly)."""
+    spec = ExperimentSpec(compressor="qsgd:16", agg="sparse_allgather",
+                          n=3, d=96, steps=2, gamma=0.05)
+    run_ = build(spec)
+    got = run_trajectory(spec)
+    ref = run_codec_trajectory("oracle",
+                               compressor=make_compressor("qsgd:16"),
+                               steps=2, n=3, d=96, lam=run_.tuned.lam,
+                               nu=run_.tuned.nu, gamma=0.05, seed=0)
+    assert_bit_identical(got["x"], ref["x"], "tuned defaults")
+    with pytest.raises(ValueError, match="gamma"):
+        run_trajectory(dataclasses.replace(spec, gamma=0.0))
+    with pytest.raises(ValueError, match="fleet"):
+        run_trajectory(ExperimentSpec(compressor="topk:4;qsgd:16",
+                                      agg="dense_psum", n=4))
+
+
+# ---------------------------------------------------------------------------
+# 4. checkpoints embed the spec and refuse mismatched resumes
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_embeds_spec_and_gates_resume(tmp_path):
+    from repro.checkpoint import (restore_checkpoint, save_checkpoint,
+                                  saved_spec)
+
+    spec = ExperimentSpec(compressor="qsgd:16", n=4, d=32, steps=7, seed=5)
+    tree = {"params": {"x": jnp.arange(6, dtype=jnp.float32)},
+            "h_avg": jnp.ones((3,))}
+    save_checkpoint(str(tmp_path), 7, tree, spec=spec)
+
+    assert saved_spec(str(tmp_path), 7) == spec
+    # matching spec restores bit-exactly
+    out = restore_checkpoint(str(tmp_path), 7, tree, spec=spec)
+    np.testing.assert_array_equal(np.asarray(out["params"]["x"]),
+                                  np.arange(6, dtype=np.float32))
+    # mismatched spec is refused, with both specs in the message
+    other = dataclasses.replace(spec, compressor="block_topk:16,4")
+    with pytest.raises(ValueError, match="refusing resume"):
+        restore_checkpoint(str(tmp_path), 7, tree, spec=other)
+    # opting out of the gate still works
+    restore_checkpoint(str(tmp_path), 7, tree)
+
+
+def test_checkpoint_specless_files_still_restore(tmp_path):
+    from repro.checkpoint import (restore_checkpoint, save_checkpoint,
+                                  saved_spec)
+
+    tree = {"x": jnp.ones((4,))}
+    save_checkpoint(str(tmp_path), 1, tree)
+    assert saved_spec(str(tmp_path), 1) is None
+    restore_checkpoint(str(tmp_path), 1, tree)  # ungated: fine
+    with pytest.raises(ValueError, match="embeds no experiment spec"):
+        restore_checkpoint(str(tmp_path), 1, tree, spec=ExperimentSpec())
+
+
+# ---------------------------------------------------------------------------
+# Run object surface
+# ---------------------------------------------------------------------------
+
+def test_round_bits_delegates_to_wire_accounting():
+    from repro.distributed import wire
+
+    spec = ExperimentSpec(compressor="qsgd:16", downlink="block_topk:16,4",
+                          participation="fixed:3", agg="sparse_allgather",
+                          n=8, d=96)
+    r = build(spec)
+    rb = r.round_bits()
+    up_fmt = wire.format_for(r.compressor, jnp.zeros((96,)))
+    down_fmt = r.downlink.format_for(jnp.zeros((96,)))
+    assert rb["total"] == wire.total_round_bits(up_fmt, down_fmt,
+                                                n_workers=8, participants=3)
+    assert rb["up"] == up_fmt.bits_per_round(n_workers=8, participants=3)
+    assert rb["down"] == down_fmt.downlink_bits_per_round()
+    assert rb["dense_both_ways"] == 8 * 32 * 96 + 32 * 96
+
+
+def test_harness_round_bits_agrees_with_run_round_bits():
+    """The two spec-driven surfaces report the same wire accounting,
+    including the dense-broadcast convention when no downlink is set."""
+    for spec in [
+        ExperimentSpec(compressor="qsgd:16", agg="sparse_allgather",
+                       n=3, d=96, steps=2, gamma=0.05),
+        ExperimentSpec(compressor="qsgd:16", agg="sparse_allgather",
+                       downlink="sign", n=3, d=96, steps=2, gamma=0.05),
+    ]:
+        traj = run_trajectory(spec)
+        assert traj["round_bits"] == build(spec).round_bits(), spec.downlink
+
+
+def test_reference_custom_grad_fn_requires_gamma():
+    """Auto-tuned stepsizes come from the problem's smoothness constants;
+    a custom grad_fn with no gamma must raise, not silently tune against
+    the unrelated built-in problem."""
+    r = build(ExperimentSpec(n=2, d=8, steps=1))
+    with pytest.raises(SpecError, match="gamma"):
+        r.reference(grad_fn=lambda x: jnp.zeros((2, 8)))
+    # explicit gamma works without ever building the built-in problem
+    res = r.reference(grad_fn=lambda x: jnp.zeros((2, 8)), gamma=0.1)
+    assert res.x.shape == (8,)
+
+
+def test_train_driver_missing_spec_file_is_friendly():
+    from repro.launch.train import main
+
+    with pytest.raises(SystemExit, match="bad experiment spec"):
+        main(["--spec", "/nonexistent/spec.json"])
+
+
+def test_train_driver_rejects_builtin_problem_specs(tmp_path):
+    """A valid logreg trainer spec is not an LM-driver experiment: the
+    driver refuses it with the friendly spec error, not a KeyError."""
+    import os
+
+    from repro.launch.train import main
+
+    spec = ExperimentSpec(backend="shard_map", problem="logreg", mesh="1x1",
+                          n=1, d=16, steps=1)
+    path = os.path.join(str(tmp_path), "s.json")
+    with open(path, "w") as f:
+        f.write(spec.to_json())
+    with pytest.raises(SystemExit, match="model archs"):
+        main(["--spec", path])
+
+
+def test_round_bits_fleet_delegates_to_fleet_accounting():
+    from repro.core.compressors import make_fleet
+    from repro.distributed import wire
+
+    spec = ExperimentSpec(compressor="topk:7;qsgd:16;sign",
+                          agg="dense_psum", n=6, d=96)
+    r = build(spec)
+    fmts = wire.fleet_formats(make_fleet(spec.compressor, 6),
+                              jnp.zeros((96,)))
+    assert r.round_bits()["up"] == wire.fleet_bits_per_round(fmts)
+
+
+def test_round_bits_fleet_composes_participation():
+    """Federated fleet accounting: bitmap + inclusion-probability-weighted
+    per-worker payloads (the fleet analogue of bits_per_round's
+    participants= term)."""
+    from repro.core.compressors import make_fleet
+    from repro.distributed import wire
+
+    spec = ExperimentSpec(compressor="topk:4;qsgd:16", agg="dense_psum",
+                          participation="bernoulli:0.5", n=8, d=64)
+    rb = build(spec).round_bits()
+    fmts = wire.fleet_formats(make_fleet(spec.compressor, 8),
+                              jnp.zeros((64,)))
+    want = 32 * wire.bitmap_words(8) \
+        + 0.5 * sum(f.bits_per_round() for f in fmts)
+    assert rb["up"] == want
+    # full participation stays the plain fleet sum
+    full = build(dataclasses.replace(spec, participation="full"))
+    assert full.round_bits()["up"] == wire.fleet_bits_per_round(fmts)
+
+
+def test_smoke_field_is_part_of_the_identity():
+    """smoke selects a different model config, so it must change the
+    fingerprint (the checkpoint gate separates smoke from full runs)."""
+    full = ExperimentSpec(backend="shard_map", problem="qwen2-0.5b",
+                          mesh="2x2", n=2, d=131072)
+    smoke = dataclasses.replace(full, smoke=True)
+    assert smoke.fingerprint() != full.fingerprint()
+    with pytest.raises(SpecError, match="smoke"):
+        ExperimentSpec(smoke=True)  # built-in problems have no smoke config
+
+
+def test_run_tuned_matches_theory_tune_for():
+    from repro.core import tune_for
+
+    spec = ExperimentSpec(compressor="qsgd:16", n=4, d=256,
+                          participation="bernoulli:0.5")
+    t = build(spec).tuned
+    want = tune_for(make_compressor("qsgd:16"), 256, 4, mode="efbv",
+                    participation=0.5)
+    assert (t.lam, t.nu, t.r) == (want.lam, want.nu, want.r)
+    assert build(ExperimentSpec(mode="none")).tuned is None
+
+
+def test_build_rejects_non_spec():
+    with pytest.raises(SpecError, match="ExperimentSpec"):
+        build("qsgd:16")
+    # dict form is accepted (the JSON-file path)
+    assert build({"compressor": "qsgd:16"}).spec.compressor == "qsgd:16"
+
+
+def test_reference_backend_has_no_trainer_and_vice_versa():
+    r = build(ExperimentSpec())
+    with pytest.raises(SpecError, match="train_step|reference"):
+        r.train_step(lambda p, b: (0.0, {}), None)
+    with pytest.raises(SpecError, match="mesh"):
+        r.make_mesh()
+
+
+def test_example_spec_files_parse_and_fingerprint(request):
+    """The committed canonical specs under examples/specs/ stay valid and
+    their fingerprints match a fresh re-serialization."""
+    import pathlib
+
+    spec_dir = pathlib.Path(__file__).resolve().parent.parent \
+        / "examples" / "specs"
+    files = sorted(spec_dir.glob("*.json"))
+    assert len(files) >= 3, files
+    for f in files:
+        spec = ExperimentSpec.from_json(f.read_text())
+        assert ExperimentSpec.from_json(spec.to_json()) == spec
+        # the file on disk IS the canonical serialization
+        assert f.read_text() == spec.to_json(), f
