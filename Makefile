@@ -7,7 +7,7 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test-tier1 test-all test-slow bench bench-micro smoke smoke-federated \
-	smoke-bidirectional smoke-spec docs-test docs-check
+	smoke-bidirectional smoke-spec smoke-pipelined docs-test docs-check
 
 test-tier1:
 	JAX_PLATFORMS=cpu $(PY) -m pytest -x -q
@@ -54,4 +54,11 @@ smoke-bidirectional:
 smoke-spec:
 	JAX_PLATFORMS=cpu $(PY) -m repro.launch.train \
 	    --spec examples/specs/qsgd_bidirectional.json --smoke \
+	    --global-batch 8 --seq 32
+
+# pipelined (one-round-stale) schedule: the committed depth:1 spec drives a
+# double-buffered train step (docs/algorithms.md#pipelined-rounds)
+smoke-pipelined:
+	JAX_PLATFORMS=cpu $(PY) -m repro.launch.train \
+	    --spec examples/specs/pipelined_blocktopk.json --smoke \
 	    --global-batch 8 --seq 32

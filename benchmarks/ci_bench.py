@@ -131,8 +131,7 @@ def perf_payload(fast: bool = True):
 
     from benchmarks import compressor_bench, perf_iter
 
-    smoke = perf_iter.smoke_rows()
-    # key the smoke row by the ACTUAL train-step experiment it measures
+    # key each smoke row by the ACTUAL train-step experiment it measures
     # (same identity scheme as the BENCH_bits.json rows); worker count and
     # tuning dimension come from the canonical shared helpers, so this
     # fingerprint can never drift from the one the train driver embeds
@@ -142,13 +141,34 @@ def perf_payload(fast: bool = True):
     from repro.launch.train import tuning_dim
 
     s = perf_iter.SMOKE
-    smoke["spec_fingerprint"] = ExperimentSpec(
-        compressor=s["compressor"], agg=s["agg"], downlink=s["downlink"],
-        backend="shard_map", problem=s["arch"], smoke=True,
-        mesh="x".join(str(x) for x in s["mesh"]),
-        n=mesh_worker_count(s["mesh"]),
-        d=tuning_dim(get_smoke_config(s["arch"])), steps=s["steps"],
-        seed=0).fingerprint()
+
+    def smoke_fingerprint(pipeline: str = "off") -> str:
+        return ExperimentSpec(
+            compressor=s["compressor"], agg=s["agg"], downlink=s["downlink"],
+            backend="shard_map", problem=s["arch"], smoke=True,
+            mesh="x".join(str(x) for x in s["mesh"]),
+            n=mesh_worker_count(s["mesh"]),
+            d=tuning_dim(get_smoke_config(s["arch"])), steps=s["steps"],
+            seed=0, pipeline=pipeline).fingerprint()
+
+    smoke = perf_iter.smoke_rows()
+    # the pipelined smoke row + the perf gate: the depth-1 schedule only
+    # removes a data dependence, so its steps/sec must never lose to the
+    # sequential row measured in the SAME run.  Both sides re-measure on a
+    # losing attempt -- a transiently loaded host slows whichever row it
+    # happens to overlap, and one fresh pair beats comparing a noisy row
+    # against a stale one.
+    smoke_pipe = perf_iter.smoke_rows("depth:1")
+    for _ in range(2):
+        if smoke_pipe["steps_per_sec"] >= smoke["steps_per_sec"]:
+            break
+        smoke = perf_iter.smoke_rows()
+        smoke_pipe = perf_iter.smoke_rows("depth:1")
+    assert smoke_pipe["steps_per_sec"] >= smoke["steps_per_sec"], (
+        f"pipelined smoke regressed below the sequential baseline: "
+        f"{smoke_pipe['steps_per_sec']} < {smoke['steps_per_sec']} steps/s")
+    smoke["spec_fingerprint"] = smoke_fingerprint()
+    smoke_pipe["spec_fingerprint"] = smoke_fingerprint("depth:1")
 
     pack_rows = {}
     for row in compressor_bench.packed_vs_dense(fast=fast):
@@ -194,6 +214,7 @@ def perf_payload(fast: bool = True):
         "host": {"python": platform.python_version(), "jax": jax.__version__,
                  "machine": platform.machine()},
         "smoke_train_step": smoke,
+        "smoke_train_step_pipelined": smoke_pipe,
         "wire_pack_us": pack_rows,
         "kernel_hlo_bytes": kernel_hlo,
     }
@@ -223,7 +244,10 @@ def main(argv=None):
             json.dump(perf, f, indent=1, sort_keys=True)
             f.write("\n")
         print(f"[bench] wrote {path} "
-              f"(smoke {perf['smoke_train_step']['steps_per_sec']} steps/s)")
+              f"(smoke {perf['smoke_train_step']['steps_per_sec']} steps/s, "
+              f"pipelined "
+              f"{perf['smoke_train_step_pipelined']['steps_per_sec']} "
+              f"steps/s)")
 
 
 if __name__ == "__main__":

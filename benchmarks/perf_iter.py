@@ -26,15 +26,20 @@ SMOKE = dict(arch="qwen2-0.5b", mesh=(2, 2), steps=4, global_batch=8, seq=32,
              downlink="qsgd:16")
 
 
-def smoke_rows():
+def smoke_rows(pipeline: str = "off"):
     """Measure the pinned smoke train-step (see SMOKE): steps/sec excluding
-    compile, compile seconds, and compiled-HLO bytes.  Needs >= 4 XLA host
-    devices (the caller sets XLA_FLAGS before jax initializes)."""
+    compile and warmup, compile seconds, and compiled-HLO bytes.  Needs >= 4
+    XLA host devices (the caller sets XLA_FLAGS before jax initializes).
+
+    ``pipeline`` ('off' | 'depth:1') selects the execution schedule; the
+    depth:1 row lands in BENCH_perf.json next to the sequential baseline
+    under its own spec fingerprint."""
     import jax
     import numpy as np
 
     from repro.configs import get_smoke_config
     from repro.core import Downlink, EFBV, make_compressor
+    from repro.core.efbv import Pipeline
     from repro.data import SyntheticLM, make_batch_shardings
     from repro.launch.mesh import make_mesh, num_workers
     from repro.models import build_model
@@ -47,19 +52,23 @@ def smoke_rows():
     n = num_workers(mesh)
     model = build_model(cfg)
     comp = make_compressor(SMOKE["compressor"])
-    algo = EFBV.make(comp, d=max(cfg.d_model * max(cfg.d_ff, 1), 1), n=n)
+    pipe = Pipeline.parse(pipeline)
+    algo = EFBV.make(comp, d=max(cfg.d_model * max(cfg.d_ff, 1), 1), n=n,
+                     pipeline=pipe.depth or None)
     downlink = Downlink.parse(SMOKE["downlink"])
     opt = adamw(cosine(3e-4, total_steps=SMOKE["steps"], warmup_steps=1))
 
     params = model.init(jax.random.key(0))
-    state = init_train_state(params, opt, mesh, bidirectional=True)
+    state = init_train_state(params, opt, mesh, bidirectional=True,
+                             algo=algo, agg_mode=SMOKE["agg"], pipeline=pipe)
     sh = train_state_shardings(mesh, model.param_specs(), state)
     state = jax.tree.map(lambda x, s: jax.device_put(x, s), state, sh)
     data = SyntheticLM(vocab=cfg.vocab, seq_len=SMOKE["seq"],
                        global_batch=SMOKE["global_batch"], n_workers=n,
                        seed=0)
     step_fn = make_train_step(model.loss, opt, algo, mesh,
-                              agg_mode=SMOKE["agg"], downlink=downlink)
+                              agg_mode=SMOKE["agg"], downlink=downlink,
+                              pipeline=pipe)
 
     key = jax.random.key(0)
     batch = make_batch_shardings(mesh, data.batch(0))
@@ -77,20 +86,25 @@ def smoke_rows():
     # timed region.
     resync = lambda st: jax.tree.map(
         lambda x, s: x if x.sharding == s else jax.device_put(x, s), st, sh)
-    state, _ = compiled(state, batch, key)
-    jax.block_until_ready(state.params)
+    state, warm_metrics = compiled(state, batch, key)
+    # warmup synchronizes on EVERYTHING it produced, so no async dispatch
+    # (or lazy host transfer) bleeds into the first timed step
+    jax.block_until_ready((state, warm_metrics))
     times = []
     for i in range(SMOKE["steps"]):
         state = resync(state)
         batch = make_batch_shardings(mesh, data.batch(i + 1))
         t0 = time.perf_counter()
         state, metrics = compiled(state, batch, jax.random.fold_in(key, i))
-        jax.block_until_ready(state.params)
+        # the step isn't done until every output leaf is: blocking only on
+        # params used to stop the clock while h / h_avg / w / the in-flight
+        # payload / metrics could still be computing
+        jax.block_until_ready((state, metrics))
         times.append(time.perf_counter() - t0)
     sec_per_step = float(np.median(times))
     return {
-        "config": {k: (list(v) if isinstance(v, tuple) else v)
-                   for k, v in SMOKE.items()},
+        "config": {**{k: (list(v) if isinstance(v, tuple) else v)
+                      for k, v in SMOKE.items()}, "pipeline": pipeline},
         "steps_per_sec": round(1.0 / sec_per_step, 4),
         "sec_per_step_median": round(sec_per_step, 4),
         "compile_s": round(compile_s, 2),

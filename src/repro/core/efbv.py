@@ -54,6 +54,11 @@ RESAMPLE_FOLD = 0x5A3D0B17
 #: One key per round, shared by every worker: the broadcast is a single
 #: message, so present and absent workers decode the SAME payload.
 DOWNLINK_FOLD = 0xD0401B17
+#: fold_in tag for the pipelined schedule's PRIMING payload key: the round-0
+#: in-flight buffer is a real wire message that decodes to zero (encode of a
+#: zero vector, participation-masked to zero), drawn once from
+#: fold_in(key(0), PIPELINE_FOLD) so every execution path primes identically.
+PIPELINE_FOLD = 0xF1FE11E
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,6 +134,54 @@ def downlink_key(round_key: Array) -> Array:
     harness) use this, so the master's compressor draw -- and therefore the
     broadcast every worker decodes -- is identical everywhere."""
     return jax.random.fold_in(round_key, DOWNLINK_FOLD)
+
+
+@dataclasses.dataclass(frozen=True)
+class Pipeline:
+    """The pipelined (one-round-stale) execution schedule.
+
+    ``depth = 0`` is the sequential schedule of the paper: round t's
+    aggregate is computed from round t's messages.  ``depth = 1``
+    double-buffers the compressed payload: round t *applies* the messages
+    compressed at round t-1 while round t's own messages are still on the
+    wire -- the allgather/broadcast overlaps the next backward pass.
+    Workers advance their control variates h_i on time; only the master's
+    (g, h_avg) update lags one round, which the auto-tuning absorbs via
+    :func:`repro.core.theory.pipeline_eta` / ``pipeline_omega``.  Depths
+    beyond 1 would need a ring of in-flight buffers and are rejected.
+    """
+
+    depth: int = 0
+
+    def __post_init__(self):
+        if not isinstance(self.depth, int) or self.depth < 0:
+            raise ValueError(
+                f"pipeline depth must be an int >= 0, got {self.depth!r}")
+        if self.depth > 1:
+            raise ValueError(
+                f"pipeline depth {self.depth} not implemented: the trainers "
+                "double-buffer exactly ONE in-flight payload; use 'off' or "
+                "'depth:1'")
+
+    @staticmethod
+    def parse(spec: str) -> "Pipeline":
+        """Parse the CLI syntax: '' | 'off' | 'depth:k' (k in {0, 1})."""
+        if not spec or spec == "off":
+            return Pipeline()
+        name, _, arg = spec.partition(":")
+        if name == "depth" and arg:
+            try:
+                depth = int(arg)
+            except ValueError:
+                raise ValueError(f"pipeline spec {spec!r} (want off | "
+                                 "depth:0 | depth:1)") from None
+            return Pipeline(depth=depth)
+        raise ValueError(f"pipeline spec {spec!r} (want off | depth:0 | "
+                         "depth:1)")
+
+    @property
+    def is_off(self) -> bool:
+        return self.depth == 0
 
 
 # ------------------------------------------------------------------------------
@@ -266,11 +319,15 @@ class EFBV:
     @staticmethod
     def make(compressor, d: int, n: int, mode: theory.Mode = "efbv",
              independent: bool = True,
-             participation: Optional[float] = None) -> "EFBV":
+             participation: Optional[float] = None,
+             pipeline: Optional[int] = None) -> "EFBV":
         """Auto-tuned instance (Remark 1).  ``participation`` is the expected
         per-round participation fraction p; when given, (lam, nu) are tuned
         for the effective compressor b*C, b ~ Bernoulli(p) (theory.tune_partial
-        -- see docs/theory.md).
+        -- see docs/theory.md).  ``pipeline`` is the staleness depth of the
+        pipelined schedule; when given, the one-round delay is folded into
+        the certified constants (theory.pipeline_eta / pipeline_omega) --
+        None / 0 is an exact no-op.
 
         ``compressor`` may be a sequence of compressors -- a heterogeneous
         fleet, round-robin expanded to n members -- tuned via
@@ -279,11 +336,12 @@ class EFBV:
             from repro.core.compressors import expand_fleet
             members = expand_fleet(tuple(compressor), n)
             t = theory.tune_for(members, d, n, independent=independent,
-                                mode=mode, participation=participation)
+                                mode=mode, participation=participation,
+                                pipeline=pipeline)
             fleet = None if len(set(members)) == 1 else members
             return EFBV(members[0], lam=t.lam, nu=t.nu, fleet=fleet)
         t = theory.tune_for(compressor, d, n, independent=independent, mode=mode,
-                            participation=participation)
+                            participation=participation, pipeline=pipeline)
         return EFBV(compressor, lam=t.lam, nu=t.nu)
 
     @staticmethod
@@ -369,18 +427,25 @@ class EFBV:
 
     # ---- reference (vmap-over-workers) step ----------------------------------
 
-    def step(self, key: Array, grads: PyTree, state: EFBVState
-             ) -> Tuple[PyTree, EFBVState]:
-        """One round of Algorithm 1.
-
-        grads: per-worker gradients with leading axis n on every leaf
-               (grads_i = nabla f_i(x^t)).
-        Returns (g^{t+1}, new state); the caller applies
-        x^{t+1} = prox_{gamma R}(x^t - gamma g^{t+1}).
-        """
+    def compress_round(self, key: Array, grads: PyTree, state: EFBVState,
+                       mask: Optional[Array] = None
+                       ) -> Tuple[PyTree, PyTree]:
+        """The worker half of one round: returns ``(d_bar, h_new)`` --
+        the normalized aggregate d_bar = (1/n) sum_i [m_i] C_i(grad_i - h_i)
+        and the advanced per-worker control variates -- WITHOUT the master
+        update.  Factored out of :meth:`step` / :meth:`step_federated`
+        (which compose it with :meth:`master_update`, bit-identical to
+        their historical bodies) so the pipelined schedule can apply a
+        one-round-stale d_bar while h_i advances on time."""
         n = jax.tree.leaves(grads)[0].shape[0]
 
         if getattr(self.compressor, "joint", False):
+            if mask is not None:
+                raise ValueError(
+                    "jointly-defined compressors (m-nice) model participation "
+                    "themselves; combine them with Participation masks is "
+                    "ambiguous")
+
             # jointly-defined compressors (m-nice partial participation,
             # Sect. 2.4): every worker samples from the SAME round key
             def one_worker(i, g_i, h_i):
@@ -391,18 +456,34 @@ class EFBV:
             d = jax.vmap(one_worker)(jnp.arange(n), grads, state.h)
             h_new = jax.vmap(self.worker_update)(state.h, d)
             d_bar = jax.tree.map(lambda dj: jnp.mean(dj, axis=0), d)
-            g, h_avg_new = self.master_update(state.h_avg, d_bar)
-            return g, EFBVState(h=h_new, h_avg=h_avg_new, step=state.step + 1)
+            return d_bar, h_new
 
         keys = jax.random.split(key, n)
-
         if self.fleet is not None:
             d = self._compress_fleet(keys, grads, state.h, n)
         else:
             d = jax.vmap(lambda k, g_i, h_i: self.compress_delta(k, g_i, h_i)
                          )(keys, grads, state.h)
-        h_new = jax.vmap(self.worker_update)(state.h, d)
-        d_bar = jax.tree.map(lambda dj: jnp.mean(dj, axis=0), d)
+        if mask is None:
+            h_new = jax.vmap(self.worker_update)(state.h, d)
+            d_bar = jax.tree.map(lambda dj: jnp.mean(dj, axis=0), d)
+        else:
+            h_new = jax.vmap(self.worker_update_masked)(state.h, d, mask)
+            d_bar = jax.tree.map(
+                lambda dj: jnp.mean(
+                    mask.reshape((n,) + (1,) * (dj.ndim - 1)) * dj, axis=0), d)
+        return d_bar, h_new
+
+    def step(self, key: Array, grads: PyTree, state: EFBVState
+             ) -> Tuple[PyTree, EFBVState]:
+        """One round of Algorithm 1.
+
+        grads: per-worker gradients with leading axis n on every leaf
+               (grads_i = nabla f_i(x^t)).
+        Returns (g^{t+1}, new state); the caller applies
+        x^{t+1} = prox_{gamma R}(x^t - gamma g^{t+1}).
+        """
+        d_bar, h_new = self.compress_round(key, grads, state)
         g, h_avg_new = self.master_update(state.h_avg, d_bar)
         return g, EFBVState(h=h_new, h_avg=h_avg_new, step=state.step + 1)
 
@@ -423,17 +504,7 @@ class EFBV:
             raise ValueError(
                 "jointly-defined compressors (m-nice) model participation "
                 "themselves; combine them with Participation masks is ambiguous")
-        n = jax.tree.leaves(grads)[0].shape[0]
-        keys = jax.random.split(key, n)
-        if self.fleet is not None:
-            d = self._compress_fleet(keys, grads, state.h, n)
-        else:
-            d = jax.vmap(lambda k, g_i, h_i: self.compress_delta(k, g_i, h_i)
-                         )(keys, grads, state.h)
-        h_new = jax.vmap(self.worker_update_masked)(state.h, d, mask)
-        d_bar = jax.tree.map(
-            lambda dj: jnp.mean(
-                mask.reshape((n,) + (1,) * (dj.ndim - 1)) * dj, axis=0), d)
+        d_bar, h_new = self.compress_round(key, grads, state, mask)
         g, h_avg_new = self.master_update(state.h_avg, d_bar)
         return g, EFBVState(h=h_new, h_avg=h_avg_new, step=state.step + 1)
 
@@ -484,12 +555,16 @@ class ReferenceRun(NamedTuple):
     w:       final downlink control variate (workers' shared model
              reconstruction) under bidirectional compression; None otherwise.
     metrics: per-round scalars from ``record``; None when not recording.
+    pending: the in-flight aggregate d_bar of the LAST round under the
+             pipelined schedule (compressed but not yet applied by the
+             master); None for the sequential schedule.
     """
 
     x: PyTree
     state: EFBVState
     w: Optional[PyTree]
     metrics: Optional[Array]
+    pending: Optional[PyTree] = None
 
 
 def run_reference(
@@ -506,6 +581,7 @@ def run_reference(
     prox: Callable[[float, PyTree], PyTree] = prox_zero,
     record: Optional[Callable[[PyTree], Array]] = None,
     wire_dtype: str = "float32",
+    pipeline: Optional[Pipeline] = None,
 ) -> ReferenceRun:
     """jit-compiled lax.scan over Algorithm 1 -- the ONE reference driver.
 
@@ -523,6 +599,11 @@ def run_reference(
     * ``grad_fn(key, x)`` may consume the per-round resampling key
       (fold_in(round_key, RESAMPLE_FOLD)) for stochastic local gradients;
       exact-gradient callers simply ignore it.
+    * ``pipeline`` None / depth 0 -- the sequential schedule; depth 1 is
+      the exact dense oracle of the trainers' pipelined schedule: the
+      master applies the aggregate compressed one round earlier (round 0
+      applies a zero buffer, so x is unchanged while h_i advances), and
+      the last round's aggregate is returned as ``.pending``.
 
     Each simpler mode reduces *bitwise* to the corresponding specialization:
     the masked ops are arithmetic identities at m = 1 and the Identity/f32
@@ -531,8 +612,40 @@ def run_reference(
     to their historical trajectories (pinned by tests/test_spec.py).
     """
     part = participation if participation is not None else Participation()
+    depth = 0 if pipeline is None else pipeline.depth
     state0 = algo.init(x0, n)
     w0 = downlink.init(x0) if downlink is not None else None
+
+    if depth:
+        # pipelined schedule: the master applies the aggregate compressed
+        # `depth` (= 1) rounds ago; the in-flight buffer rides in the carry
+        # and starts at the zero aggregate (round 0 leaves x unchanged).
+        pending0 = jax.tree.map(jnp.zeros_like, x0)
+
+        def body(carry, k):
+            x, w, st, pending = carry
+            eval_at = w if downlink is not None else x
+            grads = grad_fn(jax.random.fold_in(k, RESAMPLE_FOLD), eval_at)
+            if part.is_full:
+                d_new, h_new = algo.compress_round(k, grads, st)
+            else:
+                mask = part.sample_mask(participation_key(k), n)
+                d_new, h_new = algo.compress_round(k, grads, st, mask)
+            g, h_avg_new = algo.master_update(st.h_avg, pending)
+            st = EFBVState(h=h_new, h_avg=h_avg_new, step=st.step + 1)
+            x = proximal_step(x, g, gamma, prox)
+            if downlink is not None:
+                w, _ = downlink.broadcast(downlink_key(k), x, w,
+                                          wire_dtype=wire_dtype)
+            m = record(x) if record is not None else jnp.zeros(())
+            return (x, w, st, d_new), m
+
+        keys = jax.random.split(key, steps)
+        (x, w, state, pending), metrics = jax.lax.scan(
+            body, (x0, w0, state0, pending0), keys)
+        return ReferenceRun(x=x, state=state, w=w,
+                            metrics=metrics if record is not None else None,
+                            pending=pending)
 
     def body(carry, k):
         x, w, st = carry

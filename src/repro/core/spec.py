@@ -86,6 +86,12 @@ class ExperimentSpec:
                    sampling.
     resample:      stochastic local gradients (per-round minibatch
                    resampling) instead of exact/streamed gradients.
+    pipeline:      'off' | 'depth:1' -- double-buffer the compressed
+                   payload so round t applies the message compressed at
+                   round t-1 (the exchange overlaps the next backward
+                   pass).  'depth:0' parses and means 'off'.  Trainer
+                   backends only; the auto-tuning folds the staleness in
+                   via theory.pipeline_eta/omega.
     backend:       'reference' (vmap-over-workers exact semantics) |
                    'shard_map' | 'fsdp' (the distributed trainers).
     problem:       'quadratic' | 'logreg' (built-in convex problems, the
@@ -123,12 +129,13 @@ class ExperimentSpec:
     steps: int = 100
     gamma: float = 0.0
     seed: int = 0
+    pipeline: str = "off"
 
     # ---- validation --------------------------------------------------------
 
     def __post_init__(self):
         from repro.core.compressors import make_compressor
-        from repro.core.efbv import Downlink, Participation
+        from repro.core.efbv import Downlink, Participation, Pipeline
 
         _choice("mode", self.mode, MODES)
         _choice("agg", self.agg, AGG_MODES)
@@ -166,8 +173,15 @@ class ExperimentSpec:
             raise SpecError(f"participation 'fixed:{part.s}' needs at least "
                             f"that many workers, spec.n = {self.n}")
         Downlink.parse(self.downlink)  # raises on a bad compressor spec
+        pipe = Pipeline.parse(self.pipeline)  # raises on a bad depth spec
 
         if self.backend == "reference":
+            if pipe.depth:
+                raise SpecError(
+                    "the pipelined schedule double-buffers the trainer's "
+                    "wire payload; the reference backend runs the exact "
+                    "sequential recursion (set pipeline='off', or "
+                    "backend='shard_map' / 'fsdp')")
             if self.problem not in REFERENCE_PROBLEMS:
                 raise SpecError(
                     f"the reference backend runs the built-in problems "
@@ -221,7 +235,14 @@ class ExperimentSpec:
     # ---- serialization -----------------------------------------------------
 
     def to_dict(self) -> dict:
-        return {"spec_version": SPEC_VERSION, **dataclasses.asdict(self)}
+        d = {"spec_version": SPEC_VERSION, **dataclasses.asdict(self)}
+        # Fields added after spec_version 1 shipped serialize only when
+        # non-default: 'off' IS the default, so dropping it keeps every
+        # pre-existing spec file and fingerprint byte-stable, and the
+        # "equal specs <-> equal fingerprints" property still holds.
+        if self.pipeline == "off":
+            del d["pipeline"]
+        return d
 
     def to_json(self, indent: Optional[int] = 1) -> str:
         """Lossless JSON form (``from_json(to_json(s)) == s``)."""
@@ -413,12 +434,13 @@ class Run:
 
     def __init__(self, spec: ExperimentSpec):
         from repro.core.compressors import Identity, make_compressor
-        from repro.core.efbv import EFBV, Downlink, Participation
+        from repro.core.efbv import EFBV, Downlink, Participation, Pipeline
 
         self.spec = spec
         self.participation: Participation = Participation.parse(
             spec.participation)
         self.downlink: Optional[Downlink] = Downlink.parse(spec.downlink)
+        self.pipeline: Pipeline = Pipeline.parse(spec.pipeline)
         members = tuple(make_compressor(s) for s in spec.fleet_specs())
         if spec.mode == "none":
             self.algo = EFBV(Identity(), lam=1.0, nu=1.0)
@@ -427,7 +449,8 @@ class Run:
             self.algo = EFBV.make(
                 comp, d=spec.d, n=spec.n, mode=spec.mode,
                 participation=(self.participation.fraction(spec.n)
-                               if self.federated else None))
+                               if self.federated else None),
+                pipeline=self.pipeline.depth or None)
         self.compressor = self.algo.compressor
 
     def __repr__(self):
@@ -461,7 +484,8 @@ class Run:
         return theory.tune_for(
             comp, spec.d, spec.n, mode=spec.mode,
             participation=(self.participation.fraction(spec.n)
-                           if self.federated else None))
+                           if self.federated else None),
+            pipeline=self.pipeline.depth or None)
 
     # ---- built-in problems -------------------------------------------------
 
@@ -585,14 +609,19 @@ class Run:
         return make(loss_fn, optimizer, self.algo, mesh,
                     agg_mode=self.spec.agg, wire_dtype=self.spec.wire_dtype,
                     downlink=self.downlink,
-                    participation=self.participation, **kw)
+                    participation=self.participation,
+                    pipeline=self.pipeline, **kw)
 
     def init_state(self, params: PyTree, optimizer, mesh):
-        """TrainState for this spec (bidirectional iff a downlink is set)."""
+        """TrainState for this spec (bidirectional iff a downlink is set;
+        a zero-decoding in-flight payload buffer iff pipelined)."""
         from repro.train import init_train_state
 
         return init_train_state(params, optimizer, mesh,
-                                bidirectional=self.downlink is not None)
+                                bidirectional=self.downlink is not None,
+                                algo=self.algo, agg_mode=self.spec.agg,
+                                wire_dtype=self.spec.wire_dtype,
+                                pipeline=self.pipeline)
 
     def state_shardings(self, mesh, param_specs: PyTree, state):
         """NamedShardings for the TrainState, FSDP-aware per the backend."""
@@ -639,11 +668,16 @@ class Run:
                 # each worker's own payload weighted by its inclusion
                 # probability E|S_t|/n (uniform across workers for both
                 # bernoulli and fixed-size sampling)
-                up = (32 * wire.bitmap_words(n)
-                      + participants / n
-                      * sum(f.bits_per_round() for f in fmts))
-                if float(up).is_integer():
-                    up = int(up)
+                bitmap = 32 * wire.bitmap_words(n)
+                per_fleet = sum(f.bits_per_round() for f in fmts)
+                if float(participants).is_integer():
+                    # exact participant count: stay in int arithmetic (a
+                    # float product silently rounds above 2**53)
+                    num = int(participants) * per_fleet
+                    up = (bitmap + num // n if num % n == 0
+                          else bitmap + num / n)
+                else:
+                    up = bitmap + participants / n * per_fleet
             dense = fmts[0].dense_bits()
             down = (dense if down_fmt is None
                     else down_fmt.downlink_bits_per_round())

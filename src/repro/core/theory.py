@@ -79,6 +79,108 @@ def participation_omega(p: float, eta: float, omega: float) -> float:
     return p * omega + p * (1.0 - p) * (1.0 + eta) ** 2
 
 
+# --- pipelined rounds: one-round staleness as a compressor perturbation ---------
+
+#: Default per-round drift of the compressed innovation, measured as a
+#: fraction of the compressor's contraction SLACK (1 - eta): the pipelined
+#: analysis assumes ||u_t - u_{t-1}|| <= drift * (1 - eta) * ||u_{t-1}||.
+#: EF-BV's control variates contract the innovation u_t = g_t - h_t at a
+#: per-round rate proportional to (1 - eta) (Thm 1's Lyapunov argument), so
+#: measuring the drift against the slack keeps the composition valid for
+#: EVERY compressor -- weak ones (eta near 1) move their innovations
+#: proportionally slower.  Any depth * drift < 1/2 composes to eta' < 1.
+DEFAULT_PIPELINE_DRIFT = 1.0 / 32.0
+
+
+def _check_depth(depth: int) -> int:
+    if not isinstance(depth, int) or depth < 0:
+        raise ValueError(f"pipeline depth must be an int >= 0, got {depth!r}")
+    return depth
+
+
+def _staleness_rho(depth: int, eta: float, drift: float) -> float:
+    """rho_d = depth * drift * (1 - eta), the certified relative movement of
+    the innovation across ``depth`` rounds of staleness."""
+    if drift < 0.0:
+        raise ValueError(f"pipeline drift must be >= 0, got {drift}")
+    if not 0.0 <= eta < 1.0:
+        raise ValueError(f"eta in [0,1) required, got {eta}")
+    rho = depth * drift * (1.0 - eta)
+    if rho >= 0.5 * (1.0 - eta):  # i.e. depth * drift >= 1/2
+        raise ValueError(
+            f"pipelined staleness rho = {depth}*{drift}*(1-{eta}) = {rho} "
+            f"leaves no contraction (needs depth * drift < 1/2): use a "
+            "shallower pipeline or a smaller certified drift")
+    return rho
+
+
+def pipeline_eta(depth: int, eta: float,
+                 drift: float = DEFAULT_PIPELINE_DRIFT) -> float:
+    """Relative bias of the effective operator C'(u_t) = C(u_{t-depth}): the
+    pipelined schedule applies the message compressed ``depth`` rounds ago.
+
+    Under the bounded relative drift ||u_t - u_{t-1}|| <= rho ||u_{t-1}||
+    with rho = drift * (1 - eta) (see DEFAULT_PIPELINE_DRIFT), chaining
+    depth rounds gives ||u_{t-depth}|| <= ||u_t|| / (1 - rho_d) and
+    ||u_t - u_{t-depth}|| <= rho_d ||u_t|| / (1 - rho_d), rho_d = depth*rho,
+    hence
+
+        ||E C(u_{t-depth}) - u_t||
+            <= eta ||u_{t-depth}|| + ||u_t - u_{t-depth}||
+            <= (eta + rho_d) / (1 - rho_d) * ||u_t||  =:  eta' ||u_t|| .
+
+    eta' < 1 automatically whenever depth * drift < 1/2 -- the staleness
+    composes for every compressor, exactly like :func:`participation_eta`'s
+    interpolation toward 1 ("EF21 with Bells & Whistles"-style composed
+    perturbation).  depth = 0 is an exact no-op."""
+    if _check_depth(depth) == 0:
+        return eta
+    rho = _staleness_rho(depth, eta, drift)
+    return (eta + rho) / (1.0 - rho)
+
+
+def pipeline_omega(depth: int, eta: float, omega: float,
+                   drift: float = DEFAULT_PIPELINE_DRIFT) -> float:
+    """Relative variance of C'(u_t) = C(u_{t-depth}):
+
+        E||C' - E C'||^2 <= omega ||u_{t-depth}||^2
+                         <= omega / (1 - rho_d)^2 * ||u_t||^2 ,
+
+    with rho_d = depth * drift * (1 - eta) as in :func:`pipeline_eta`
+    (signature mirrors :func:`participation_omega`: the variance inflation
+    depends on the bias constant through the slack).  Applies to omega_av
+    identically -- the delay is common to all workers, so the 1/n variance
+    reduction of independent compressors is untouched.  depth = 0 is an
+    exact no-op."""
+    if _check_depth(depth) == 0:
+        return omega
+    rho = _staleness_rho(depth, eta, drift)
+    return omega / (1.0 - rho) ** 2
+
+
+def tune_pipelined(
+    eta: float,
+    omega: float,
+    depth: int,
+    *,
+    omega_av: Optional[float] = None,
+    drift: float = DEFAULT_PIPELINE_DRIFT,
+    **kw,
+) -> Tuning:
+    """Auto-tuning under a ``depth``-round-stale pipelined schedule.
+
+    Composes the staleness into the compressor's certified constants
+    (:func:`pipeline_eta` / :func:`pipeline_omega`) and hands the effective
+    C(eta', omega') to :func:`tune` -- same machinery, delayed regime.
+    depth = 0 reduces to :func:`tune` exactly."""
+    eta_d = pipeline_eta(depth, eta, drift)
+    omega_d = pipeline_omega(depth, eta, omega, drift)
+    if omega_av is not None:
+        return tune(eta_d, omega_d,
+                    pipeline_omega(depth, eta, omega_av, drift), **kw)
+    return tune(eta_d, omega_d, **kw)
+
+
 # --- rate ingredients -----------------------------------------------------------
 
 def s_star(r: float) -> float:
@@ -241,30 +343,49 @@ def tune_partial(
 
 
 def tune_for(compressor, d: int, n: int, *, independent: bool = True,
-             participation: Optional[float] = None, **kw) -> Tuning:
+             participation: Optional[float] = None,
+             pipeline: Optional[int] = None,
+             pipeline_drift: float = DEFAULT_PIPELINE_DRIFT, **kw) -> Tuning:
     """Convenience: read (eta, omega) off a Compressor instance.
 
     ``participation`` (expected per-round participation fraction p) routes
-    through :func:`tune_partial` for the federated regime.  A *sequence* of
-    compressors is a heterogeneous fleet (worker i runs compressor i) and
-    routes through :func:`tune_fleet` with the certified worst-case
-    aggregation.
+    through :func:`tune_partial` for the federated regime.  ``pipeline``
+    (staleness depth of the pipelined schedule) composes
+    :func:`pipeline_eta` / :func:`pipeline_omega` AFTER participation --
+    the delay applies to whatever effective operator the round runs;
+    None / 0 is an exact no-op.  A *sequence* of compressors is a
+    heterogeneous fleet (worker i runs compressor i) and routes through
+    :func:`tune_fleet` with the certified worst-case aggregation.
     """
+    depth = _check_depth(0 if pipeline is None else pipeline)
     if isinstance(compressor, (list, tuple)):
         if not independent:
             raise ValueError("mixed-fleet tuning assumes independent "
                              "per-worker compressors")
         etas = [c.eta(d) for c in compressor]
         omegas = [c.omega(d) for c in compressor]
-        return tune_fleet(etas, omegas, n=n, participation=participation, **kw)
+        return tune_fleet(etas, omegas, n=n, participation=participation,
+                          pipeline=depth, pipeline_drift=pipeline_drift, **kw)
     eta = compressor.eta(d)
     omega = compressor.omega(d)
     if participation is not None and participation < 1.0:
         if not independent:
             raise ValueError("partial participation tuning assumes "
                              "independent per-worker compressors")
-        return tune_partial(eta, omega, participation, n=n, **kw)
+        if depth == 0:
+            return tune_partial(eta, omega, participation, n=n, **kw)
+        p = participation
+        eta_p = participation_eta(p, eta)
+        omega_p = participation_omega(p, eta, omega)
+        # participation masks are independent per worker, so omega_av' =
+        # omega'/n (tune_partial's convention); the common one-round delay
+        # then scales bias and both variances alike.
+        return tune_pipelined(eta_p, omega_p, depth, omega_av=omega_p / n,
+                              drift=pipeline_drift, **kw)
     omega_av = compressor.omega_av(d, n) if independent else omega
+    if depth:
+        return tune_pipelined(eta, omega, depth, omega_av=omega_av,
+                              drift=pipeline_drift, **kw)
     return tune(eta, omega, omega_av, **kw)
 
 
@@ -309,15 +430,20 @@ def fleet_constants(etas, omegas, *, n: Optional[int] = None,
 
 def tune_fleet(etas, omegas, *, n: int,
                aggregate: FleetAggregate = "worst",
-               participation: Optional[float] = None, **kw) -> Tuning:
+               participation: Optional[float] = None,
+               pipeline: Optional[int] = None,
+               pipeline_drift: float = DEFAULT_PIPELINE_DRIFT,
+               **kw) -> Tuning:
     """Auto-tuning for a heterogeneous worker fleet (worker i's compressor
     certified as C(eta_i, omega_i); all independent).
 
     Composes per-round Bernoulli(p) participation into EACH member first
     (participation_eta / participation_omega -- skipping a round is a
-    per-worker event), then aggregates (:func:`fleet_constants`) and hands
-    the result to :func:`tune`.  A homogeneous list reproduces
-    :func:`tune_for` / :func:`tune_partial` exactly.
+    per-worker event), then aggregates (:func:`fleet_constants`), composes
+    the pipelined staleness last (the delay is common to the whole fleet)
+    and hands the result to :func:`tune`.  A homogeneous list reproduces
+    :func:`tune_for` / :func:`tune_partial` exactly; pipeline=None/0 is an
+    exact no-op.
     """
     if participation is not None and participation < 1.0:
         p = participation
@@ -326,6 +452,10 @@ def tune_fleet(etas, omegas, *, n: int,
                              for e, o in zip(etas, omegas)])
     eta, omega, omega_av = fleet_constants(etas, omegas, n=n,
                                            aggregate=aggregate)
+    depth = _check_depth(0 if pipeline is None else pipeline)
+    if depth:
+        return tune_pipelined(eta, omega, depth, omega_av=omega_av,
+                              drift=pipeline_drift, **kw)
     return tune(eta, omega, omega_av, **kw)
 
 

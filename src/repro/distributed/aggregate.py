@@ -62,6 +62,7 @@ def compress_local(
     wire_dtype: str = "float32",
     mask: Optional[jax.Array] = None,
     worker: Optional[jax.Array] = None,
+    stream: bool = False,
 ) -> Tuple[PyTree, PyTree]:
     """d_i = C_i(grad_i - h_i); h_i <- h_i + lam d_i.
 
@@ -81,6 +82,10 @@ def compress_local(
     compressor with lax.switch.  Mixed fleets need a uniform message shape,
     so they run under dense_psum only; the homogeneous fast paths are
     untouched (EFBV.make collapses a uniform fleet to fleet=None).
+
+    ``stream=True`` (the pipelined trainer) asks codecs with an async-copy
+    fused kernel to start DMAing the payload toward HBM while the control
+    variate update still computes; payload bits are identical either way.
     """
     if mode not in AGG_MODES:
         raise ValueError(f"mode {mode!r} not in {AGG_MODES}")
@@ -107,7 +112,7 @@ def compress_local(
             # codecs with a Pallas kernel (block-top-k, rand-k, QSGD) never
             # materialize the dense d_i in HBM.
             payload, h_leaf_new = wire.encode_update(
-                fmt.leaves[j], kj, g_leaf, h_leaf, algo.lam)
+                fmt.leaves[j], kj, g_leaf, h_leaf, algo.lam, stream=stream)
             if mask is not None:
                 payload = fmt.leaves[j].mask_message(payload, mask)
             msgs.append(payload)
@@ -153,11 +158,19 @@ def combine_global(
     n_workers: int,
     mode: str = "dense_psum",
     wire_dtype: str = "float32",
+    chunks: int = 1,
 ) -> Tuple[PyTree, PyTree]:
     """d_bar = (1/n) sum_i d_i; g = h_avg + nu d_bar; h_avg <- h_avg + lam d_bar.
 
     ``message_stacked`` carries a leading worker axis of size n sharded over
     (pod, data); the reduction over it IS the wire collective.
+
+    ``chunks`` > 1 (the pipelined exchange) splits the worker axis of each
+    sparse payload into that many equal slices and decode-sums them in fixed
+    ascending order, so XLA can overlap the decode of early chunks with the
+    transfer of late ones.  ``chunks=1`` is byte-identical to the historical
+    single decode-sum; the dense path ignores chunking (one psum is one
+    transfer).
     """
     ref_leaves, treedef = jax.tree.flatten(h_avg)
     if mode == "dense_psum":
@@ -170,11 +183,39 @@ def combine_global(
             # payload components carry a leading worker axis; the gather of
             # the payload is the wire, the decode-sum is local (one codec,
             # one layout, one combine for every compressor).
-            dense = codec.decode_sum(payload)
+            dense = wire.chunked_decode_sum(codec, payload, chunks)
             d_bar_leaves.append((dense / n_workers).reshape(ref.shape))
         d_bar = jax.tree.unflatten(treedef, d_bar_leaves)
     g, h_avg_new = algo.master_update(h_avg, d_bar)
     return g, h_avg_new
+
+
+def ring_allgather(message: PyTree, axis_name, n: int) -> PyTree:
+    """All-gather every worker's ``message`` over ``axis_name`` as an n-hop
+    ppermute ring, reconstructing the CANONICAL source order.
+
+    Equivalent to ``jax.lax.all_gather(message, axis_name)`` bit-for-bit, but
+    exposed as n-1 point-to-point hops so the pipelined trainer's chunked
+    decode (:func:`combine_global` with ``chunks`` > 1) can start consuming
+    early arrivals while late hops are still in flight.  Each hop h delivers
+    the message of worker (i - h) mod n to worker i; writing it at index
+    (i - h) mod n restores src order, so every replica sees the SAME stacked
+    array and the fixed-order chunked sum stays replica-identical.
+    """
+    idx = jax.lax.axis_index(axis_name)
+    perm = [(j, (j + 1) % n) for j in range(n)]
+
+    def gather_leaf(leaf):
+        bufs = jnp.zeros((n,) + leaf.shape, leaf.dtype)
+        cur = leaf
+        bufs = bufs.at[idx].set(cur)
+        for hop in range(1, n):
+            cur = jax.lax.ppermute(cur, axis_name, perm)
+            src = (idx - hop) % n
+            bufs = bufs.at[src].set(cur)
+        return bufs
+
+    return jax.tree.map(gather_leaf, message)
 
 
 # --------------------------------------------------------------------------

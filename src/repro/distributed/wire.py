@@ -49,6 +49,7 @@ See docs/wire_format.md#the-downlink-payload.
 from __future__ import annotations
 
 import dataclasses
+import math
 import os
 from typing import Any, Optional, Sequence, Tuple
 
@@ -179,13 +180,17 @@ class LeafCodec:
 
     # -- fused worker update ------------------------------------------------
     def encode_update(self, key: Optional[Array], g: Array, h: Array,
-                      lam: float, *, kernel: Optional[str] = None
+                      lam: float, *, kernel: Optional[str] = None,
+                      stream: bool = False
                       ) -> Tuple[Tuple[Array, ...], Array]:
         """(payload, h') with d = C(g - h) packed and h' = h + lam d.
 
         The base implementation is the jnp oracle (encode, scatter back,
         update); codecs with a fused Pallas kernel override it and stay
-        bit-identical to this oracle.
+        bit-identical to this oracle.  ``stream`` asks codecs with an
+        async-copy kernel variant to DMA the payload out while the h
+        update computes; everyone else ignores it (results are
+        bit-identical either way).
         """
         mode = _kernel_mode(kernel)
         if mode in ("pallas", "interpret") and kernel in ("pallas", "interpret"):
@@ -247,7 +252,7 @@ class LeafWire(LeafCodec):
 
     decode_sum = decode  # scatter_add natively handles the stacked form
 
-    def encode_update(self, key, g, h, lam, *, kernel=None):
+    def encode_update(self, key, g, h, lam, *, kernel=None, stream=False):
         # the fused path emits payload values in g's dtype and updates h with
         # the f32 scatter; both equal the decoded payload only for f32 wires.
         # kernel= is forwarded so an explicit kernel request on a non-f32
@@ -255,7 +260,7 @@ class LeafWire(LeafCodec):
         if self.val_dtype != "float32" or g.dtype != jnp.float32:
             return LeafCodec.encode_update(self, key, g, h, lam,
                                            kernel=kernel)
-        return fused_pack(self, g, h, lam, kernel=kernel)
+        return fused_pack(self, g, h, lam, kernel=kernel, stream=stream)
 
 
 # ---------------------------------------------------------------------------
@@ -313,7 +318,8 @@ class RandKSparse(FlatSparse):
         # only for f32 wires)
         return self.size < 2 ** 24 and self.val_dtype == "float32"
 
-    def encode_update(self, key, g, h, lam, *, kernel=None):
+    def encode_update(self, key, g, h, lam, *, kernel=None, stream=False):
+        del stream  # the rand-k gather kernel has no streaming variant
         mode = _kernel_mode(kernel)
         if mode in ("pallas", "interpret") and not self.has_kernel:
             if kernel in ("pallas", "interpret"):
@@ -423,7 +429,8 @@ class QsgdQuant(LeafCodec):
                          * (jnp.abs(lf) * (1.0 / self.s)),
                          0.0)
 
-    def encode_update(self, key, g, h, lam, *, kernel=None):
+    def encode_update(self, key, g, h, lam, *, kernel=None, stream=False):
+        del stream  # the qsgd quantizer has no streaming variant
         mode = _kernel_mode(kernel)
         if mode == "oracle":
             return LeafCodec.encode_update(self, key, g, h, lam,
@@ -542,14 +549,21 @@ class WireFormat:
         ``participants`` switches to the variable-participant federated
         round: an n-worker participation bitmap (whole uint32 words, like
         every bitmap on this wire) plus only |S_t| payloads.  Pass the
-        concrete |S_t| for exact int bits of one round, or the expected
-        count p*n for the (possibly fractional) expected accounting.
+        concrete |S_t| for exact ``int`` bits of one round; a fractional
+        expected count p*n returns the expected accounting, explicitly a
+        ``float`` (the ONLY case this method returns one).
         """
         per_worker = sum(l.payload_bits for l in self.leaves)
         if participants is None:
             return n_workers * per_worker
-        bits = 32 * bitmap_words(n_workers) + participants * per_worker
-        return int(bits) if float(participants).is_integer() else bits
+        bitmap = 32 * bitmap_words(n_workers)
+        if float(participants).is_integer():
+            # exact participant count: stay in int arithmetic end to end (a
+            # float product silently rounds above 2**53, and the historical
+            # int(float) round-trip leaked floats into BENCH rows and
+            # `== bits/8` byte assertions)
+            return bitmap + int(participants) * per_worker
+        return bitmap + participants * per_worker
 
     def downlink_bits_per_round(self) -> int:
         """Exact bits of the ONE master -> worker broadcast message of a
@@ -652,11 +666,65 @@ def payload_bytes(payload: PyTree) -> int:
 
 
 def encode_update(codec: LeafCodec, key: Optional[Array], g: Array, h: Array,
-                  lam: float, *, kernel: Optional[str] = None
-                  ) -> Tuple[Tuple[Array, ...], Array]:
+                  lam: float, *, kernel: Optional[str] = None,
+                  stream: bool = False) -> Tuple[Tuple[Array, ...], Array]:
     """Fused compress-and-pack worker update through ``codec`` (module-level
-    convenience; dispatches to the codec's fused kernel when it has one)."""
-    return codec.encode_update(key, g, h, lam, kernel=kernel)
+    convenience; dispatches to the codec's fused kernel when it has one).
+
+    ``stream=True`` requests the async-copy variant of the fused kernel
+    (payload DMAs out while the control-variate update still computes --
+    the pipelined trainer's hot path); codecs without a streaming kernel
+    ignore it, and the streamed payload is bit-identical either way."""
+    return codec.encode_update(key, g, h, lam, kernel=kernel, stream=stream)
+
+
+def zero_message(codec: LeafCodec, key: Array) -> Tuple[Array, ...]:
+    """The decode-zero payload of ``codec``: a REAL wire message (encode of
+    the zero vector, then participation-masked to zero, so stochastic codecs
+    decode to exactly zero too).  Primes the pipelined schedule's round-0
+    in-flight buffer -- every execution path (trainer, harness) builds it
+    from the same fold_in(key(0), PIPELINE_FOLD) key, so they agree
+    bit-for-bit."""
+    payload = codec.encode(key, jnp.zeros((codec.size,), jnp.float32))
+    return codec.mask_message(payload, jnp.zeros((), jnp.float32))
+
+
+def pipeline_chunks(n_workers: int) -> int:
+    """Worker-axis chunk count of the pipelined (depth >= 1) exchange:
+    gcd(n, 4) splits the stacked payload into equal slices so the decode of
+    early chunks overlaps the transfer of late ones.  Below four workers a
+    chunk degenerates to a single worker's slice of the worker-sharded
+    payload -- the partitioner reshards every slice and the permutes cost
+    more than the overlap buys -- so the exchange stays whole.  ONE rule
+    shared by the trainer and the differential harness, so their depth-1
+    trajectories chunk -- and therefore sum -- identically."""
+    n = int(n_workers)
+    return math.gcd(n, 4) if n >= 4 else 1
+
+
+def chunked_decode_sum(codec: LeafCodec, payload, chunks: int) -> Array:
+    """decode_sum of a worker-stacked payload with the worker axis split
+    into ``chunks`` equal slices, partial sums accumulated in FIXED
+    ascending chunk order.
+
+    ``chunks=1`` is literally ``codec.decode_sum`` (the sequential path's
+    byte-identity is preserved).  The fixed order is load-bearing: the ring
+    exchange delivers chunks in a device-dependent order, and float sums
+    only stay replica-identical if every device accumulates them the same
+    way."""
+    if chunks <= 1:
+        return codec.decode_sum(payload)
+    n = jax.tree.leaves(payload)[0].shape[0]
+    if n % chunks:
+        raise ValueError(f"{n} stacked messages do not split into {chunks} "
+                         "equal chunks")
+    cs = n // chunks
+    total = None
+    for c in range(chunks):
+        part = jax.tree.map(lambda a: a[c * cs:(c + 1) * cs], tuple(payload))
+        dec = codec.decode_sum(part)
+        total = dec if total is None else total + dec
+    return total
 
 
 # ---------------------------------------------------------------------------
@@ -702,12 +770,15 @@ def unpack(lw: LeafWire, vals: Array, idx: Array) -> Array:
 # ---------------------------------------------------------------------------
 
 def fused_pack(lw: LeafWire, g: Array, h: Array, lam: float, *,
-               kernel: Optional[str] = None
+               kernel: Optional[str] = None, stream: bool = False
                ) -> Tuple[Tuple[Array, Array], Array]:
     """d = block_topk(g - h) packed as (values, indices); h' = h + lam d.
 
     Dispatches to the Pallas kernel (one HBM pass, dense d never leaves
     VMEM) or the jnp oracle; all backends produce bit-identical results.
+    ``stream=True`` selects the async-copy kernel variant -- the payload
+    slab DMAs toward HBM while the h update still computes (same bits, the
+    pipelined trainer just stops waiting for them).
     """
     mode = _kernel_mode(kernel)
     if mode in ("pallas", "interpret") and lw.block % 128 != 0:
@@ -720,7 +791,8 @@ def fused_pack(lw: LeafWire, g: Array, h: Array, lam: float, *,
     if mode in ("pallas", "interpret"):
         from repro.kernels import ops
         return ops.efbv_pack_update(g, h, float(lam), block=lw.block,
-                                    kb=lw.kb, interpret=(mode == "interpret"))
+                                    kb=lw.kb, interpret=(mode == "interpret"),
+                                    stream=stream)
     # jnp oracle: same arithmetic, same order of operations as the kernel
     delta = g.astype(jnp.float32) - h.astype(jnp.float32)
     vals, idx = pack_oracle(lw, delta)

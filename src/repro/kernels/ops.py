@@ -55,9 +55,11 @@ def efbv_update(g: Array, h: Array, lam: float, block: int = 1024, kb: int = 64,
     return unpad(d_out), unpad(h_out).astype(h.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "kb", "lam", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block", "kb", "lam", "interpret",
+                                             "stream"))
 def efbv_pack_update(g: Array, h: Array, lam: float, block: int = 1024,
-                     kb: int = 64, interpret: bool | None = None
+                     kb: int = 64, interpret: bool | None = None,
+                     stream: bool = False
                      ) -> Tuple[Tuple[Array, Array], Array]:
     """Fused compress-and-pack worker update (kernels/pack.py): one HBM pass
     computing d = block_topk(g - h), h' = h + lam d, and the wire payload.
@@ -65,6 +67,8 @@ def efbv_pack_update(g: Array, h: Array, lam: float, block: int = 1024,
     Returns ((values, indices), h') with values/indices of shape (nb, kb),
     nb = ceil(g.size / block) -- the same payload layout as
     ``BlockTopK.encode`` (rows added for TILE_NB alignment are sliced off).
+    ``stream=True`` selects the async-copy kernel variant (the payload slab
+    DMAs toward HBM while the h update computes); bit-identical payloads.
     """
     interpret = _interpret_default() if interpret is None else interpret
     gp, d_len, shape = _to_slabs(g, block)
@@ -72,7 +76,8 @@ def efbv_pack_update(g: Array, h: Array, lam: float, block: int = 1024,
     # to g.dtype would break bit-identity with the jnp oracle on mixed dtypes
     hp, _, _ = _to_slabs(h, block)
     vals, idx, h_out = KP.pack_update_pallas(gp, hp, lam, kb,
-                                             interpret=interpret)
+                                             interpret=interpret,
+                                             stream=stream)
     nb = -(-d_len // block)
     h_new = h_out.reshape(-1)[:d_len].reshape(shape)
     return (vals[:nb], idx[:nb]), h_new

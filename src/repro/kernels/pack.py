@@ -41,12 +41,11 @@ Array = jax.Array
 QS_TILE_NB = 32  # rows per grid step for int8 outputs (min int8 tile: 32x128)
 
 
-def _pack_update_kernel(g_ref, h_ref, vals_ref, idx_ref, h_out_ref, *,
-                        kb: int, lam: float):
-    g = g_ref[...]
-    h = h_ref[...]
-    # subtract in f32: bit-identical between interpret mode and TPU lowering
-    delta = g.astype(jnp.float32) - h.astype(jnp.float32)
+def _select_block_topk(delta, kb: int):
+    """The shared selection core of both pack kernels: returns (vals f32
+    (rows, kb), cols f32 (rows, kb), selected bool (rows, block)).  One body
+    keeps the streaming and non-streaming variants bit-identical by
+    construction."""
     mag = jnp.abs(delta)
     rows, block = mag.shape
     # column indices kept in f32: Mosaic (this jaxlib vintage) implements
@@ -72,18 +71,59 @@ def _pack_update_kernel(g_ref, h_ref, vals_ref, idx_ref, h_out_ref, *,
         v_cols.append(jnp.sum(jnp.where(first, delta, 0.0), axis=1)[:, None])
         c_cols.append(jnp.max(jnp.where(first, cols, 0.0), axis=1)[:, None])
         selected = selected | first
+    return (jnp.concatenate(v_cols, axis=1), jnp.concatenate(c_cols, axis=1),
+            selected)
 
-    vals_ref[...] = jnp.concatenate(v_cols, axis=1).astype(vals_ref.dtype)
-    idx_ref[...] = jnp.concatenate(c_cols, axis=1).astype(jnp.int32)
+
+def _pack_update_kernel(g_ref, h_ref, vals_ref, idx_ref, h_out_ref, *,
+                        kb: int, lam: float):
+    g = g_ref[...]
+    h = h_ref[...]
+    # subtract in f32: bit-identical between interpret mode and TPU lowering
+    delta = g.astype(jnp.float32) - h.astype(jnp.float32)
+    vals, cols, selected = _select_block_topk(delta, kb)
+    vals_ref[...] = vals.astype(vals_ref.dtype)
+    idx_ref[...] = cols.astype(jnp.int32)
     d = jnp.where(selected, delta, 0.0)
     h_out_ref[...] = (h.astype(jnp.float32) + lam * d).astype(h_out_ref.dtype)
 
 
+def _pack_update_stream_kernel(g_ref, h_ref, vals_ref, idx_ref, h_out_ref,
+                               v_scr, i_scr, sems, *, kb: int, lam: float):
+    """Async-copy variant: the payload slab is computed into VMEM scratch and
+    DMA'd toward its HBM output (vals_ref/idx_ref live in pltpu.ANY) while
+    the h update still computes -- the wire bytes of this grid step stream
+    out under the remaining compute instead of waiting for the step's
+    epilogue.  Arithmetic is the non-streaming kernel's, op for op."""
+    t = pl.program_id(0)
+    g = g_ref[...]
+    h = h_ref[...]
+    delta = g.astype(jnp.float32) - h.astype(jnp.float32)
+    vals, cols, selected = _select_block_topk(delta, kb)
+    v_scr[...] = vals.astype(v_scr.dtype)
+    i_scr[...] = cols.astype(jnp.int32)
+    rows = v_scr.shape[0]
+    v_dma = pltpu.make_async_copy(
+        v_scr, vals_ref.at[pl.ds(t * rows, rows), :], sems.at[0])
+    i_dma = pltpu.make_async_copy(
+        i_scr, idx_ref.at[pl.ds(t * rows, rows), :], sems.at[1])
+    v_dma.start()
+    i_dma.start()
+    d = jnp.where(selected, delta, 0.0)
+    h_out_ref[...] = (h.astype(jnp.float32) + lam * d).astype(h_out_ref.dtype)
+    # the wait doubles as the write-after-read guard: the next grid step may
+    # not overwrite the scratch slabs until this step's copies have landed
+    v_dma.wait()
+    i_dma.wait()
+
+
 def pack_update_pallas(g2d: Array, h2d: Array, lam: float, kb: int, *,
-                       interpret: bool = False):
+                       interpret: bool = False, stream: bool = False):
     """g2d/h2d: (nb, block) with nb % TILE_NB == 0, block % 128 == 0.
 
     Returns (values (nb, kb), indices (nb, kb) int32, h_new (nb, block)).
+    ``stream=True`` takes the async-copy kernel (payload DMA overlaps the h
+    update); results are bit-identical to the non-streaming kernel.
     """
     nb, block = g2d.shape
     assert nb % TILE_NB == 0 and block % 128 == 0, (nb, block)
@@ -91,14 +131,30 @@ def pack_update_pallas(g2d: Array, h2d: Array, lam: float, kb: int, *,
     grid = (nb // TILE_NB,)
     slab = pl.BlockSpec((TILE_NB, block), lambda i: (i, 0))
     payload = pl.BlockSpec((TILE_NB, kb), lambda i: (i, 0))
+    out_shape = (jax.ShapeDtypeStruct((nb, kb), g2d.dtype),
+                 jax.ShapeDtypeStruct((nb, kb), jnp.int32),
+                 jax.ShapeDtypeStruct((nb, block), h2d.dtype))
+    if stream:
+        return pl.pallas_call(
+            functools.partial(_pack_update_stream_kernel, kb=kb,
+                              lam=float(lam)),
+            grid=grid,
+            in_specs=[slab, slab],
+            out_specs=(pl.BlockSpec(memory_space=pltpu.ANY),
+                       pl.BlockSpec(memory_space=pltpu.ANY),
+                       slab),
+            out_shape=out_shape,
+            scratch_shapes=[pltpu.VMEM((TILE_NB, kb), g2d.dtype),
+                            pltpu.VMEM((TILE_NB, kb), jnp.int32),
+                            pltpu.SemaphoreType.DMA((2,))],
+            interpret=interpret,
+        )(g2d, h2d)
     return pl.pallas_call(
         functools.partial(_pack_update_kernel, kb=kb, lam=float(lam)),
         grid=grid,
         in_specs=[slab, slab],
         out_specs=(payload, payload, slab),
-        out_shape=(jax.ShapeDtypeStruct((nb, kb), g2d.dtype),
-                   jax.ShapeDtypeStruct((nb, kb), jnp.int32),
-                   jax.ShapeDtypeStruct((nb, block), h2d.dtype)),
+        out_shape=out_shape,
         interpret=interpret,
     )(g2d, h2d)
 

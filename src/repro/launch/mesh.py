@@ -30,11 +30,20 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_mesh(shape: Sequence[int], axes: Optional[Sequence[str]] = None):
     """Arbitrary mesh for tests/smoke runs; axes default to trailing names of
-    ('pod','data','model')."""
+    ('pod','data','model'), so shapes with more than 3 dims need explicit
+    axes."""
     from repro import compat
 
     if axes is None:
-        axes = ("pod", "data", "model")[-len(shape):]
+        defaults = ("pod", "data", "model")
+        if len(shape) > len(defaults):
+            # the trailing-names slice cannot grow past 3 axes; silently
+            # recycling it would hand jax a short/duplicate axis tuple
+            raise ValueError(
+                f"make_mesh has default axis names for up to {len(defaults)} "
+                f"mesh dims {defaults}, got shape {tuple(shape)} with "
+                f"{len(shape)} dims -- pass axes= explicitly")
+        axes = defaults[-len(shape):]
     return compat.make_mesh(tuple(shape), tuple(axes))
 
 

@@ -111,6 +111,12 @@ def parse_args(argv=None):
     ap.add_argument("--shard-size", type=int, default=64,
                     help="sequences per worker shard for "
                          "--local-batch-resample")
+    ap.add_argument("--pipeline", default="off",
+                    help="execution schedule: off | depth:1 (double-buffer "
+                         "the compressed payload; the master applies round "
+                         "t-1's message while round t's is on the wire).  "
+                         "With --spec, a non-default value overrides the "
+                         "spec's pipeline field")
     ap.add_argument("--trainer", default="shard_map",
                     choices=["shard_map", "fsdp"])
     ap.add_argument("--seed", type=int, default=0)
@@ -152,6 +158,7 @@ def spec_from_args(args, n: int) -> ExperimentSpec:
         d=tuning_dim(cfg),
         steps=args.steps,
         seed=args.seed,
+        pipeline=args.pipeline,
     )
 
 
@@ -172,6 +179,12 @@ def main(argv=None):
                     spec, smoke=True,
                     d=tuning_dim(get_smoke_config(spec.problem))
                     if spec.problem in ARCHS else spec.d)
+            if args.pipeline != "off" and spec.pipeline != args.pipeline:
+                # like --smoke, the schedule is part of the experiment
+                # identity: fold the override in before the fingerprint is
+                # derived or embedded anywhere
+                import dataclasses
+                spec = dataclasses.replace(spec, pipeline=args.pipeline)
             if spec.backend == "reference":
                 raise SpecError(
                     "the train driver runs the distributed trainers; a "
@@ -216,6 +229,7 @@ def main(argv=None):
     print(f"[train] arch={cfg.name} family={cfg.family} params~{cfg.param_count():,} "
           f"workers={n} algo={spec.mode} lam={algo.lam:.4g} nu={algo.nu:.4g} "
           f"agg={spec.agg}"
+          + (f" pipeline={spec.pipeline}" if not run.pipeline.is_off else "")
           + (f" participation={spec.participation}" if federated else "")
           + (f" downlink={spec.downlink}" if downlink else "")
           + (f" fleet={spec.compressor}" if algo.fleet is not None else ""))

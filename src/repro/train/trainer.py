@@ -45,8 +45,9 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.core.efbv import (EFBV, Downlink, Participation, downlink_key,
-                             participation_key)
+from repro.core.efbv import (EFBV, PIPELINE_FOLD, Downlink, Participation,
+                             Pipeline, downlink_key, participation_key)
+from repro.distributed import wire
 from repro.distributed.aggregate import (broadcast_global, combine_global,
                                          compress_local)
 from repro.distributed.spec import (
@@ -69,13 +70,47 @@ class TrainState(NamedTuple):
     # replicated copy -- every worker decodes the same broadcast).  None
     # when the broadcast is uncompressed.
     w: PyTree = None
+    # the IN-FLIGHT wire payload of the pipelined schedule (pipeline=depth:1,
+    # docs/algorithms.md#pipelined-rounds): the message compressed at round
+    # t-1, applied by the master at round t while round t's own payload is
+    # still on the wire.  Stacked on a leading worker axis like the phase-1
+    # message it double-buffers; None when the schedule is sequential.
+    inflight: PyTree = None
+
+
+def init_inflight(algo: EFBV, params: PyTree, n: int, *,
+                  agg_mode: str = "dense_psum",
+                  wire_dtype: str = "float32") -> PyTree:
+    """The round-0 priming payload of the pipelined schedule: every worker's
+    slot holds a REAL wire message that decodes to exactly zero, so the first
+    step's master update is g = h_avg0 + nu * 0 (Algorithm 1's x-update is a
+    no-op while the h recursion already advances).  Drawn from
+    fold_in(key(0), PIPELINE_FOLD) -- the one convention the trainers, the
+    reference driver and the differential harness all share."""
+    base = jax.random.fold_in(jax.random.key(0), PIPELINE_FOLD)
+    if agg_mode != "sparse_allgather":
+        return jax.tree.map(
+            lambda p: jnp.zeros((n,) + p.shape, jnp.float32), params)
+    fmt = wire.format_for(algo.compressor, params, wire_dtype=wire_dtype)
+    tile = lambda a: jnp.tile(a[None], (n,) + (1,) * a.ndim)
+    return [jax.tree.map(tile, wire.zero_message(
+                codec, jax.random.fold_in(base, j)))
+            for j, codec in enumerate(fmt.leaves)]
 
 
 def init_train_state(params: PyTree, optimizer: Optimizer, mesh, *,
-                     bidirectional: bool = False) -> TrainState:
+                     bidirectional: bool = False,
+                     algo: Optional[EFBV] = None,
+                     agg_mode: str = "dense_psum",
+                     wire_dtype: str = "float32",
+                     pipeline: Optional[Pipeline] = None) -> TrainState:
     n = num_workers(mesh)
     zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
     h = jax.tree.map(lambda p: jnp.zeros((n,) + p.shape, jnp.float32), params)
+    pipelined = pipeline is not None and pipeline.depth > 0
+    if pipelined and algo is None:
+        raise ValueError("a pipelined TrainState buffers a wire payload; "
+                         "init_train_state needs algo= to build it")
     return TrainState(
         params=params,
         opt_state=optimizer.init(params),
@@ -83,6 +118,8 @@ def init_train_state(params: PyTree, optimizer: Optimizer, mesh, *,
         h_avg=zeros,
         step=jnp.zeros((), jnp.int32),
         w=jax.tree.map(jnp.array, params) if bidirectional else None,
+        inflight=init_inflight(algo, params, n, agg_mode=agg_mode,
+                               wire_dtype=wire_dtype) if pipelined else None,
     )
 
 
@@ -107,8 +144,19 @@ def train_state_shardings(mesh, param_specs: PyTree, state: TrainState) -> Train
     rep = NamedSharding(mesh, P())
     w_sh = None if state.w is None \
         else jax.tree.map(lambda _, s: s, state.w, p_shard)
+    fl_sh = _inflight_shardings(mesh, state.inflight)
     return TrainState(params=p_shard, opt_state=opt_sh, h=h_sh, h_avg=havg_sh,
-                      step=rep, w=w_sh)
+                      step=rep, w=w_sh, inflight=fl_sh)
+
+
+def _inflight_shardings(mesh, inflight: PyTree):
+    """Every in-flight payload leaf carries a leading worker axis of size n:
+    shard it over the worker axes like the live phase-1 message it mirrors."""
+    if inflight is None:
+        return None
+    waxes = worker_axes(mesh)
+    return jax.tree.map(
+        lambda _: NamedSharding(mesh, P(tuple(waxes))), inflight)
 
 
 def make_train_step(
@@ -122,6 +170,7 @@ def make_train_step(
     remat: bool = False,
     downlink: Optional[Downlink] = None,
     participation: Optional[Participation] = None,
+    pipeline: Optional[Pipeline] = None,
 ) -> Callable[[TrainState, Any, jax.Array], Tuple[TrainState, dict]]:
     """Build the jitted multi-pod train step.
 
@@ -149,10 +198,24 @@ def make_train_step(
     subset) and threads it through the shard_map as a worker-sharded (n,)
     array; absent workers' messages are gated to decode-zero and their h_i
     stay stale.  None / 'full' keeps the original unmasked code path.
+
+    ``pipeline`` (depth 1) switches on the one-round-stale two-phase
+    schedule (docs/algorithms.md#pipelined-rounds): the master applies the
+    in-flight payload of round t-1 from ``state.inflight`` while round t's
+    freshly compressed message replaces it -- the wire exchange of round t
+    overlaps the backward pass of round t+1.  Workers' h_i advance on their
+    OWN round-t messages, the master's (h_avg, x) recursion lags one round;
+    depth 0 / None is the exact sequential step, bit for bit.  Requires a
+    TrainState built with ``init_train_state(..., pipeline=...)``.
     """
     waxes = worker_axes(mesh)
     n = num_workers(mesh)
     federated = participation is not None and not participation.is_full
+    pipelined = pipeline is not None and pipeline.depth > 0
+    # chunked decode (fixed ascending order, see wire.chunked_decode_sum)
+    # lets the decode of early chunks overlap the transfer of late ones
+    chunks = wire.pipeline_chunks(n) \
+        if (pipelined and agg_mode == "sparse_allgather") else 1
 
     if remat:
         loss_fn = jax.checkpoint(loss_fn)
@@ -160,13 +223,14 @@ def make_train_step(
     # ---- phase 1: worker-local grad + compress (manual over worker axes) ----
     # One body shared by both phase-1 formulations below, so the shard_map
     # and vmap paths cannot drift apart.
-    def worker_body(params_for_grad, h_i, batch_i, kw, m=None, widx=None):
+    def worker_body(params_for_grad, h_i, batch_i, kw, m=None, widx=None,
+                    stream=False):
         (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             params_for_grad, batch_i)
         grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
         message, h_i_new = compress_local(algo, kw, grads, h_i, mode=agg_mode,
                                           wire_dtype=wire_dtype, mask=m,
-                                          worker=widx)
+                                          worker=widx, stream=stream)
         local_metrics = {
             "loss": loss,
             "grad_norm": global_norm(grads),
@@ -187,8 +251,11 @@ def make_train_step(
         params_v = compat.pcast_varying(params, tuple(waxes))
         h_loc = jax.tree.map(lambda a: a[0], h)
         m = None if mask is None else mask[0]
+        # streaming (payload DMA under the h update) only on this un-vmapped
+        # path: pallas_call batching would re-purpose the grid dim the
+        # streaming kernel slices its HBM outputs by
         message, h_loc_new, local_metrics = worker_body(
-            params_v, h_loc, batch, kw, m, widx)
+            params_v, h_loc, batch, kw, m, widx, stream=pipelined)
         # stack everything on the worker axis
         stack = lambda t: jax.tree.map(lambda a: a[None], t)
         return stack(message), stack(h_loc_new), stack(local_metrics)
@@ -249,9 +316,14 @@ def make_train_step(
             message, h_new, local_metrics = local_sharded(
                 eval_params, state.h, batch, key)
 
+        # pipelined: the master consumes the IN-FLIGHT payload (round t-1)
+        # while `message` (round t) takes its slot in the double buffer --
+        # the data dependence between this round's wire exchange and the
+        # optimizer breaks, so XLA overlaps it with the next backward pass
+        apply_msg = state.inflight if pipelined else message
         g, h_avg_new = combine_global(
-            algo, message, state.h_avg, n_workers=n, mode=agg_mode,
-            wire_dtype=wire_dtype)
+            algo, apply_msg, state.h_avg, n_workers=n, mode=agg_mode,
+            wire_dtype=wire_dtype, chunks=chunks)
 
         updates, opt_state = optimizer.update(g, state.opt_state, state.params)
         params = apply_updates(state.params, updates)
@@ -280,6 +352,7 @@ def make_train_step(
             h_avg=h_avg_new,
             step=state.step + 1,
             w=w,
+            inflight=message if pipelined else state.inflight,
         )
         return new_state, metrics
 
@@ -337,8 +410,9 @@ def fsdp_state_shardings(mesh, param_specs: PyTree, state: TrainState
     # it is read back densely by every worker's grad anyway)
     w_sh = None if state.w is None \
         else jax.tree.map(lambda _, s: s, state.w, p_sh)
+    fl_sh = _inflight_shardings(mesh, state.inflight)
     return TrainState(params=p_sh, opt_state=opt_sh, h=h_sh, h_avg=havg_sh,
-                      step=rep, w=w_sh)
+                      step=rep, w=w_sh, inflight=fl_sh)
 
 
 def make_train_step_fsdp(
@@ -351,15 +425,22 @@ def make_train_step_fsdp(
     wire_dtype: str = "float32",
     downlink: Optional[Downlink] = None,
     participation: Optional[Participation] = None,
+    pipeline: Optional[Pipeline] = None,
 ) -> Callable[[TrainState, Any, jax.Array], Tuple[TrainState, dict]]:
     """Pure-GSPMD train step: vmap over the worker axis for per-worker grads,
     FSDP-sharded params/optimizer state, same EF-BV wire as the shard_map
     trainer (compress_local / combine_global / broadcast_global are shared,
-    incl. the federated participation masking and the compressed downlink
-    broadcast)."""
+    incl. the federated participation masking, the compressed downlink
+    broadcast and the pipelined one-round-stale schedule -- see
+    :func:`make_train_step` for the ``pipeline`` double-buffer semantics;
+    phase 1 runs under vmap here, so the streaming kernel variant stays
+    off)."""
     waxes = worker_axes(mesh)
     n = num_workers(mesh)
     federated = participation is not None and not participation.is_full
+    pipelined = pipeline is not None and pipeline.depth > 0
+    chunks = wire.pipeline_chunks(n) \
+        if (pipelined and agg_mode == "sparse_allgather") else 1
 
     def worker_grads(params, batch, key):
         # batch leaves: (B, ...) -> (n, B/n, ...) worker-major
@@ -397,9 +478,10 @@ def make_train_step_fsdp(
                     algo, k, g, h, mode=agg_mode, wire_dtype=wire_dtype,
                     worker=i)
             )(keys, grads, state.h, widx)
-        g, h_avg_new = combine_global(algo, message, state.h_avg,
+        apply_msg = state.inflight if pipelined else message
+        g, h_avg_new = combine_global(algo, apply_msg, state.h_avg,
                                       n_workers=n, mode=agg_mode,
-                                      wire_dtype=wire_dtype)
+                                      wire_dtype=wire_dtype, chunks=chunks)
         updates, opt_state = optimizer.update(g, state.opt_state, state.params)
         params = apply_updates(state.params, updates)
         metrics = {"loss": jnp.mean(loss), "g_norm": global_norm(g),
@@ -418,7 +500,9 @@ def make_train_step_fsdp(
             metrics["w_err"] = global_norm(
                 jax.tree.map(lambda a, b: a - b, params, w))
         new_state = TrainState(params=params, opt_state=opt_state, h=h_new,
-                               h_avg=h_avg_new, step=state.step + 1, w=w)
+                               h_avg=h_avg_new, step=state.step + 1, w=w,
+                               inflight=message if pipelined
+                               else state.inflight)
         return new_state, metrics
 
     return jax.jit(train_step, donate_argnums=(0,))

@@ -112,7 +112,8 @@ def run_wire_trajectory(kernel: str, *, steps: int, n: int, d: int,
 def _codec_trajectory(kernel: str, *, compressor, steps: int, n: int, d: int,
                       lam: float, nu: float, gamma: float,
                       participation=None, downlink=None, seed: int = 0,
-                      wire_dtype: str = "float32") -> Dict[str, Array]:
+                      wire_dtype: str = "float32",
+                      pipeline_depth: int = 0) -> Dict[str, Array]:
     """The shared recursion behind every harness leg.
 
     Per round: kt = fold_in(key, t); an optional participation mask drawn
@@ -125,8 +126,16 @@ def _codec_trajectory(kernel: str, *, compressor, steps: int, n: int, d: int,
     piece is absent from the computation entirely when not requested, so
     the specialized wrappers below reproduce their historical trajectories
     bit-for-bit.
+
+    ``pipeline_depth=1`` runs the one-round-stale double-buffer schedule of
+    the pipelined trainers (docs/algorithms.md#pipelined-rounds): the master
+    consumes the PREVIOUS round's stacked payload (primed with the shared
+    PIPELINE_FOLD zero-message) through the fixed-order chunked decode the
+    trainers use, workers encode with the streaming kernel variant, and h_i
+    advance on their own fresh messages.  Depth 0 leaves every historical
+    trajectory bit-identical.
     """
-    from repro.core.efbv import downlink_key, participation_key
+    from repro.core.efbv import PIPELINE_FOLD, downlink_key, participation_key
 
     codec = wire.codec_of(compressor, (d,), d, wire_dtype)
     grad_fn = quadratic_grads(n, d, seed)
@@ -136,6 +145,15 @@ def _codec_trajectory(kernel: str, *, compressor, steps: int, n: int, d: int,
     w = jnp.zeros((d,), jnp.float32)  # downlink.init(x0), x0 = 0
     h = jnp.zeros((n, d), jnp.float32)
     h_avg = jnp.zeros((d,), jnp.float32)
+    pending = None
+    if pipeline_depth:
+        # the round-0 priming payload: same key fold as trainer.init_inflight
+        # (leaf index 0 -- the harness drives one flat leaf)
+        base = jax.random.fold_in(jax.random.key(0), PIPELINE_FOLD)
+        zero = wire.zero_message(codec, jax.random.fold_in(base, 0))
+        pending = jax.tree.map(
+            lambda a: jnp.tile(a[None], (n,) + (1,) * a.ndim), zero)
+        chunks = wire.pipeline_chunks(n)
     xs, ws, hs, masks = [], [], [], []
     payload = down_payload = None
     for t in range(steps):
@@ -147,7 +165,8 @@ def _codec_trajectory(kernel: str, *, compressor, steps: int, n: int, d: int,
         for i in range(n):
             ki = jax.random.fold_in(kt, i)
             p, h_new = wire.encode_update(codec, ki, g[i], h[i], lam,
-                                          kernel=kernel)
+                                          kernel=kernel,
+                                          stream=bool(pipeline_depth))
             if participation is not None:
                 p = codec.mask_message(p, mask[i])
                 h_new = jnp.where(mask[i] > 0, h_new, h[i])
@@ -155,7 +174,13 @@ def _codec_trajectory(kernel: str, *, compressor, steps: int, n: int, d: int,
             h_i.append(h_new)
         h = jnp.stack(h_i)
         payload = jax.tree.map(lambda *xs_: jnp.stack(xs_), *payloads)
-        d_bar = codec.decode_sum(payload) / n
+        if pipeline_depth:
+            # master consumes the in-flight round-(t-1) payload through the
+            # trainers' fixed-order chunked decode; round t takes its slot
+            d_bar = wire.chunked_decode_sum(codec, pending, chunks) / n
+            pending = payload
+        else:
+            d_bar = codec.decode_sum(payload) / n
         x = x - gamma * (h_avg + nu * d_bar)
         h_avg = h_avg + lam * d_bar
         if downlink is not None:
@@ -175,6 +200,8 @@ def _codec_trajectory(kernel: str, *, compressor, steps: int, n: int, d: int,
     down_bits = 32 * d
     out = {"x": jnp.stack(xs), "h": jnp.stack(hs), "payload": payload,
            "masks": jnp.stack(masks), "codec": codec}
+    if pipeline_depth:
+        out["pending"] = pending
     if downlink is not None:
         dfmt = downlink.format_for(jnp.zeros((d,)), wire_dtype=wire_dtype)
         down_bits = dfmt.downlink_bits_per_round()
@@ -192,9 +219,9 @@ def run_trajectory(spec, kernel: str = "oracle", *,
     """Spec-driven differential trajectory: ONE driver for every harness leg.
 
     ``spec`` is a :class:`repro.core.ExperimentSpec`; its compressor /
-    participation / downlink / wire_dtype / steps / n / d / seed fields
-    select the execution mode (heterogeneous fleets are not a codec-level
-    trajectory and are rejected).  ``lam``/``nu`` default to the spec's
+    participation / downlink / wire_dtype / pipeline / steps / n / d / seed
+    fields select the execution mode (heterogeneous fleets are not a
+    codec-level trajectory and are rejected).  ``lam``/``nu`` default to the spec's
     auto-tuning (Remark 1); ``gamma`` to ``spec.gamma``.  The historical
     legs below are wrappers over the same loop and bit-identical to this
     driver for equivalent arguments (pinned by tests/test_spec.py).
@@ -219,7 +246,8 @@ def run_trajectory(spec, kernel: str = "oracle", *,
         kernel, compressor=run.compressor, steps=spec.steps, n=spec.n,
         d=spec.d, lam=lam, nu=nu, gamma=gamma,
         participation=run.participation if run.federated else None,
-        downlink=run.downlink, seed=spec.seed, wire_dtype=spec.wire_dtype)
+        downlink=run.downlink, seed=spec.seed, wire_dtype=spec.wire_dtype,
+        pipeline_depth=run.pipeline.depth)
 
 
 def run_codec_trajectory(kernel: str, *, compressor, steps: int, n: int,
