@@ -7,7 +7,8 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test-tier1 test-all test-slow bench bench-micro smoke smoke-federated \
-	smoke-bidirectional smoke-spec smoke-pipelined docs-test docs-check
+	smoke-bidirectional smoke-spec smoke-pipelined smoke-tree docs-test \
+	docs-check
 
 test-tier1:
 	JAX_PLATFORMS=cpu $(PY) -m pytest -x -q
@@ -61,4 +62,11 @@ smoke-spec:
 smoke-pipelined:
 	JAX_PLATFORMS=cpu $(PY) -m repro.launch.train \
 	    --spec examples/specs/pipelined_blocktopk.json --smoke \
+	    --global-batch 8 --seq 32
+
+# pytree-native wire: the committed mixed per-leaf codec spec
+# (docs/wire_format.md#per-leaf-codecs-the-pytree-native-wire)
+smoke-tree:
+	JAX_PLATFORMS=cpu $(PY) -m repro.launch.train \
+	    --spec examples/specs/tree_mixed_codecs.json --smoke \
 	    --global-batch 8 --seq 32

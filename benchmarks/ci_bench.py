@@ -117,12 +117,56 @@ def bits_payload():
     qs = next(r["vs_dense_both_ways"] for r in combo_rows.values()
               if r["name"] == "qsgd16_both_ways")
     assert qs <= 0.35, f"qsgd:16 both ways regressed past 0.35x dense: {qs}"
+
+    # the pytree-native wire row: the committed mixed per-leaf codec spec
+    # (examples/specs/tree_mixed_codecs.json) measured on the real qwen2
+    # smoke parameter tree, keyed -- like every other row -- by the spec's
+    # stable fingerprint.  Exact and machine-independent, and the composed
+    # == sum-of-per-leaf invariant the harness pins is asserted here too so
+    # the trajectory can never silently depend on it breaking.
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.core import ExperimentSpec
+    from repro.models import build_model
+
+    spec_path = os.path.join(os.path.dirname(__file__), os.pardir,
+                             "examples", "specs", "tree_mixed_codecs.json")
+    with open(spec_path) as f:
+        tree_spec = ExperimentSpec.from_dict(json.load(f))
+    params = build_model(get_smoke_config(tree_spec.problem)).init(
+        jax.random.key(0))
+    fmt = wire.tree_format_for(
+        make_compressor(tree_spec.compressor), params,
+        wire_dtype=tree_spec.wire_dtype,
+        rules=wire.parse_leaf_rules(tree_spec.leaf_codecs))
+    by_leaf = fmt.bits_by_leaf()
+    tree_bits = fmt.bits_per_round()
+    assert tree_bits == sum(by_leaf), (
+        f"TreeWire composed bits {tree_bits} != sum of per-leaf bits "
+        f"{sum(by_leaf)}")
+    dense_tree = 32 * sum(int(l.size) for l in jax.tree_util.tree_leaves(
+        params))
+    tree_rows = {tree_spec.fingerprint(): {
+        "name": "tree_mixed_codecs",
+        "uplink_spec": tree_spec.compressor,
+        "leaf_codecs": tree_spec.leaf_codecs,
+        "problem": tree_spec.problem,
+        "n_leaves": len(by_leaf),
+        "leaf_kinds": sorted({c.kind for c in fmt.leaves}),
+        "payload_bits": tree_bits,
+        "payload_bytes": tree_bits // 8,
+        "sum_of_leaf_bits": sum(by_leaf),
+        "vs_dense_fp32": round(tree_bits / dense_tree, 6),
+    }}
+
     return {
         "schema": 2,  # schema 2: rows keyed by ExperimentSpec fingerprint
         "d": D_BITS,
         "n_workers": N_WORKERS,
         "codec_bits_per_round": codec_rows,
         "bidirectional_rounds": combo_rows,
+        "tree_wire": tree_rows,
     }
 
 
@@ -142,14 +186,15 @@ def perf_payload(fast: bool = True):
 
     s = perf_iter.SMOKE
 
-    def smoke_fingerprint(pipeline: str = "off") -> str:
+    def smoke_fingerprint(pipeline: str = "off",
+                          leaf_codecs: str = "") -> str:
         return ExperimentSpec(
             compressor=s["compressor"], agg=s["agg"], downlink=s["downlink"],
             backend="shard_map", problem=s["arch"], smoke=True,
             mesh="x".join(str(x) for x in s["mesh"]),
             n=mesh_worker_count(s["mesh"]),
             d=tuning_dim(get_smoke_config(s["arch"])), steps=s["steps"],
-            seed=0, pipeline=pipeline).fingerprint()
+            seed=0, pipeline=pipeline, leaf_codecs=leaf_codecs).fingerprint()
 
     smoke = perf_iter.smoke_rows()
     # the pipelined smoke row + the perf gate: the depth-1 schedule only
@@ -169,6 +214,29 @@ def perf_payload(fast: bool = True):
         f"{smoke_pipe['steps_per_sec']} < {smoke['steps_per_sec']} steps/s")
     smoke["spec_fingerprint"] = smoke_fingerprint()
     smoke_pipe["spec_fingerprint"] = smoke_fingerprint("depth:1")
+
+    # the pytree-native wire smoke row + its perf gate: the per-leaf rules
+    # swap the big embedding leaf's block top-k for a flat quantizer and
+    # stop compressing the tiny norms, so the tree-wire step must never
+    # lose to the flat wire measured in the SAME run.  Same re-measure
+    # discipline as the pipeline gate above; the flat reference re-measured
+    # on a retry travels INSIDE the tree row, leaving the recorded
+    # sequential/pipelined pair exactly as gated.
+    tree_leaf_codecs = "*embed*=qsgd:16;*norm*=identity"
+    flat_ref = smoke
+    smoke_tree = perf_iter.smoke_rows(leaf_codecs=tree_leaf_codecs)
+    for _ in range(2):
+        if smoke_tree["steps_per_sec"] >= flat_ref["steps_per_sec"]:
+            break
+        flat_ref = perf_iter.smoke_rows()
+        smoke_tree = perf_iter.smoke_rows(leaf_codecs=tree_leaf_codecs)
+    assert smoke_tree["steps_per_sec"] >= flat_ref["steps_per_sec"], (
+        f"per-leaf tree wire regressed below the flat-wire baseline: "
+        f"{smoke_tree['steps_per_sec']} < {flat_ref['steps_per_sec']} "
+        f"steps/s")
+    smoke_tree["spec_fingerprint"] = smoke_fingerprint(
+        leaf_codecs=tree_leaf_codecs)
+    smoke_tree["flat_steps_per_sec_same_run"] = flat_ref["steps_per_sec"]
 
     pack_rows = {}
     for row in compressor_bench.packed_vs_dense(fast=fast):
@@ -215,6 +283,7 @@ def perf_payload(fast: bool = True):
                  "machine": platform.machine()},
         "smoke_train_step": smoke,
         "smoke_train_step_pipelined": smoke_pipe,
+        "smoke_train_step_tree": smoke_tree,
         "wire_pack_us": pack_rows,
         "kernel_hlo_bytes": kernel_hlo,
     }
@@ -247,7 +316,8 @@ def main(argv=None):
               f"(smoke {perf['smoke_train_step']['steps_per_sec']} steps/s, "
               f"pipelined "
               f"{perf['smoke_train_step_pipelined']['steps_per_sec']} "
-              f"steps/s)")
+              f"steps/s, tree "
+              f"{perf['smoke_train_step_tree']['steps_per_sec']} steps/s)")
 
 
 if __name__ == "__main__":

@@ -26,14 +26,17 @@ SMOKE = dict(arch="qwen2-0.5b", mesh=(2, 2), steps=4, global_batch=8, seq=32,
              downlink="qsgd:16")
 
 
-def smoke_rows(pipeline: str = "off"):
+def smoke_rows(pipeline: str = "off", leaf_codecs: str = ""):
     """Measure the pinned smoke train-step (see SMOKE): steps/sec excluding
     compile and warmup, compile seconds, and compiled-HLO bytes.  Needs >= 4
     XLA host devices (the caller sets XLA_FLAGS before jax initializes).
 
     ``pipeline`` ('off' | 'depth:1') selects the execution schedule; the
     depth:1 row lands in BENCH_perf.json next to the sequential baseline
-    under its own spec fingerprint."""
+    under its own spec fingerprint.  ``leaf_codecs`` (per-leaf codec rules,
+    docs/wire_format.md) switches the wire to the pytree-native TreeWire --
+    the smoke_train_step_tree row; '' keeps the flat wire and the existing
+    rows byte-compatible."""
     import jax
     import numpy as np
 
@@ -41,6 +44,7 @@ def smoke_rows(pipeline: str = "off"):
     from repro.core import Downlink, EFBV, make_compressor
     from repro.core.efbv import Pipeline
     from repro.data import SyntheticLM, make_batch_shardings
+    from repro.distributed import wire
     from repro.launch.mesh import make_mesh, num_workers
     from repro.models import build_model
     from repro.optim import adamw, cosine
@@ -53,8 +57,9 @@ def smoke_rows(pipeline: str = "off"):
     model = build_model(cfg)
     comp = make_compressor(SMOKE["compressor"])
     pipe = Pipeline.parse(pipeline)
+    rules = wire.parse_leaf_rules(leaf_codecs) if leaf_codecs else None
     algo = EFBV.make(comp, d=max(cfg.d_model * max(cfg.d_ff, 1), 1), n=n,
-                     pipeline=pipe.depth or None)
+                     pipeline=pipe.depth or None, leaf_rules=rules)
     downlink = Downlink.parse(SMOKE["downlink"])
     opt = adamw(cosine(3e-4, total_steps=SMOKE["steps"], warmup_steps=1))
 
@@ -104,7 +109,10 @@ def smoke_rows(pipeline: str = "off"):
     sec_per_step = float(np.median(times))
     return {
         "config": {**{k: (list(v) if isinstance(v, tuple) else v)
-                      for k, v in SMOKE.items()}, "pipeline": pipeline},
+                      for k, v in SMOKE.items()}, "pipeline": pipeline,
+                   # only a real rule set enters the row (the flat rows stay
+                   # byte-compatible with the pre-field trajectory)
+                   **({"leaf_codecs": leaf_codecs} if leaf_codecs else {})},
         "steps_per_sec": round(1.0 / sec_per_step, 4),
         "sec_per_step_median": round(sec_per_step, 4),
         "compile_s": round(compile_s, 2),

@@ -307,12 +307,21 @@ class EFBV:
     the representative; (lam, nu) are tuned for the aggregated mixed-fleet
     constants (theory.tune_fleet).  A homogeneous fleet collapses to
     ``fleet=None`` so the single-compressor fast paths stay untouched.
+
+    ``leaf_rules`` switches on the *pytree-native* wire (wire.TreeWire):
+    (fnmatch-pattern, Compressor) pairs resolved against each leaf's
+    '/'-joined path, first match wins, unmatched leaves keep ``compressor``.
+    Every consumer (compress_delta, the aggregation paths, init_inflight)
+    resolves leaves through the same wire.tree_format_for chokepoint, and
+    (lam, nu) are tuned for the worst-case leaf composition
+    (theory.tune_tree).  ``leaf_rules=None`` is the flat wire, bitwise.
     """
 
     compressor: Compressor
     lam: float
     nu: float
     fleet: Optional[Tuple[Compressor, ...]] = None
+    leaf_rules: Optional[Tuple[Tuple[str, Compressor], ...]] = None
 
     # ---- constructors -------------------------------------------------------
 
@@ -320,7 +329,9 @@ class EFBV:
     def make(compressor, d: int, n: int, mode: theory.Mode = "efbv",
              independent: bool = True,
              participation: Optional[float] = None,
-             pipeline: Optional[int] = None) -> "EFBV":
+             pipeline: Optional[int] = None,
+             leaf_rules: Optional[Tuple[Tuple[str, Compressor], ...]] = None
+             ) -> "EFBV":
         """Auto-tuned instance (Remark 1).  ``participation`` is the expected
         per-round participation fraction p; when given, (lam, nu) are tuned
         for the effective compressor b*C, b ~ Bernoulli(p) (theory.tune_partial
@@ -331,8 +342,17 @@ class EFBV:
 
         ``compressor`` may be a sequence of compressors -- a heterogeneous
         fleet, round-robin expanded to n members -- tuned via
-        theory.tune_fleet (worst-case aggregation; see docs/theory.md)."""
+        theory.tune_fleet (worst-case aggregation; see docs/theory.md).
+
+        ``leaf_rules`` (per-leaf codec rules, wire.parse_leaf_rules) tunes
+        (lam, nu) for the worst-case composition over the base compressor
+        and every rule member at dimension d (theory.tune_tree; leaf sizes
+        are tree-dependent, and the worst-case aggregate is size-free).
+        An empty/None rule set is an exact no-op."""
         if isinstance(compressor, (list, tuple)):
+            if leaf_rules:
+                raise ValueError("per-leaf codec rules cannot be combined "
+                                 "with a heterogeneous worker fleet")
             from repro.core.compressors import expand_fleet
             members = expand_fleet(tuple(compressor), n)
             t = theory.tune_for(members, d, n, independent=independent,
@@ -340,6 +360,26 @@ class EFBV:
                                 pipeline=pipeline)
             fleet = None if len(set(members)) == 1 else members
             return EFBV(members[0], lam=t.lam, nu=t.nu, fleet=fleet)
+        if leaf_rules:
+            if not independent:
+                raise ValueError("per-leaf codec tuning assumes independent "
+                                 "per-worker compressors")
+            comps = [compressor] + [c for _, c in leaf_rules]
+            for c in comps:
+                if getattr(c, "joint", False):
+                    # same rejection as wire.parse_leaf_rules: the string
+                    # grammar cannot name a joint compressor, this guards
+                    # the programmatic path
+                    raise ValueError(
+                        "jointly-defined compressors (m-nice) cannot be "
+                        "leaf-codec rules: their draws couple all workers")
+            t = theory.tune_tree([c.eta(d) for c in comps],
+                                 [c.omega(d) for c in comps],
+                                 n=n, aggregate="worst", mode=mode,
+                                 participation=participation,
+                                 pipeline=pipeline)
+            return EFBV(compressor, lam=t.lam, nu=t.nu,
+                        leaf_rules=tuple(leaf_rules))
         t = theory.tune_for(compressor, d, n, independent=independent, mode=mode,
                             participation=participation, pipeline=pipeline)
         return EFBV(compressor, lam=t.lam, nu=t.nu)
@@ -370,14 +410,24 @@ class EFBV:
         """d_i = C_i(grad_i - h_i), leaf-wise with decorrelated keys.
 
         ``compressor`` overrides ``self.compressor`` (the heterogeneous-fleet
-        path passes worker i's own member)."""
+        path passes worker i's own member).  With ``leaf_rules`` set (and no
+        override) each leaf runs the compressor its path resolves to, clamped
+        to the leaf's size -- the dense twin of the TreeWire codec path, so
+        reference and wire trajectories stay bit-identical leaf-wise."""
         comp = self.compressor if compressor is None else compressor
         leaves, treedef = jax.tree.flatten(grad)
         h_leaves = treedef.flatten_up_to(h)
+        if compressor is None and self.leaf_rules:
+            from repro.distributed import wire
+            comps = [wire.clamp_for_leaf(
+                wire.resolve_leaf(self.leaf_rules, p, comp), int(g.size))
+                for p, g in zip(wire.leaf_paths(grad), leaves)]
+        else:
+            comps = [comp] * len(leaves)
         outs = []
-        for j, (g, hj) in enumerate(zip(leaves, h_leaves)):
+        for j, (cj, g, hj) in enumerate(zip(comps, leaves, h_leaves)):
             kj = None if key is None else jax.random.fold_in(key, j)
-            outs.append(comp(kj, g - hj))
+            outs.append(cj(kj, g - hj))
         return jax.tree.unflatten(treedef, outs)
 
     def _compress_fleet(self, keys: Array, grads: PyTree, h: PyTree,

@@ -92,6 +92,13 @@ class ExperimentSpec:
                    pass).  'depth:0' parses and means 'off'.  Trainer
                    backends only; the auto-tuning folds the staleness in
                    via theory.pipeline_eta/omega.
+    leaf_codecs:   per-leaf codec rules for the pytree-native wire:
+                   ';'-separated 'pattern=compressor_spec' entries matched
+                   (fnmatch, first wins) against each leaf's '/'-joined
+                   path; a bare compressor spec is the default rule '*',
+                   and unmatched leaves keep ``compressor``.  '' = the flat
+                   single-codec wire.  (lam, nu) are tuned for the
+                   worst-case leaf composition (theory.tune_tree).
     backend:       'reference' (vmap-over-workers exact semantics) |
                    'shard_map' | 'fsdp' (the distributed trainers).
     problem:       'quadratic' | 'logreg' (built-in convex problems, the
@@ -130,6 +137,7 @@ class ExperimentSpec:
     gamma: float = 0.0
     seed: int = 0
     pipeline: str = "off"
+    leaf_codecs: str = ""
 
     # ---- validation --------------------------------------------------------
 
@@ -167,6 +175,20 @@ class ExperimentSpec:
             raise SpecError("spec.smoke selects a model arch's reduced "
                             "config; the built-in problems "
                             f"{REFERENCE_PROBLEMS} are sized by spec.d/n")
+
+        if self.leaf_codecs:
+            if len(set(members)) > 1:
+                raise SpecError(
+                    "spec.leaf_codecs assigns compressors per LEAF of one "
+                    "uplink compressor; a heterogeneous fleet assigns them "
+                    "per WORKER -- use one or the other (got compressor="
+                    f"{self.compressor!r})")
+            if self.mode == "none":
+                raise SpecError("spec.leaf_codecs configures the compression "
+                                "layer's wire; mode='none' has no "
+                                "compression layer")
+            from repro.distributed import wire
+            wire.parse_leaf_rules(self.leaf_codecs)  # raises on a bad rule
 
         part = Participation.parse(self.participation)
         if part.kind == "fixed" and part.s > self.n:
@@ -242,6 +264,8 @@ class ExperimentSpec:
         # "equal specs <-> equal fingerprints" property still holds.
         if self.pipeline == "off":
             del d["pipeline"]
+        if self.leaf_codecs == "":
+            del d["leaf_codecs"]
         return d
 
     def to_json(self, indent: Optional[int] = 1) -> str:
@@ -442,6 +466,10 @@ class Run:
         self.downlink: Optional[Downlink] = Downlink.parse(spec.downlink)
         self.pipeline: Pipeline = Pipeline.parse(spec.pipeline)
         members = tuple(make_compressor(s) for s in spec.fleet_specs())
+        self.leaf_rules = None
+        if spec.leaf_codecs:
+            from repro.distributed import wire
+            self.leaf_rules = wire.parse_leaf_rules(spec.leaf_codecs)
         if spec.mode == "none":
             self.algo = EFBV(Identity(), lam=1.0, nu=1.0)
         else:
@@ -450,7 +478,8 @@ class Run:
                 comp, d=spec.d, n=spec.n, mode=spec.mode,
                 participation=(self.participation.fraction(spec.n)
                                if self.federated else None),
-                pipeline=self.pipeline.depth or None)
+                pipeline=self.pipeline.depth or None,
+                leaf_rules=self.leaf_rules)
         self.compressor = self.algo.compressor
 
     def __repr__(self):
@@ -468,24 +497,40 @@ class Run:
     def n(self) -> int:
         return self.spec.n
 
-    @property
-    def tuned(self):
-        """The paper's auto-tuning for this spec (delegates to
-        :func:`repro.core.theory.tune_for`: fleet / participation
-        composition included, on the SAME compressor objects ``algo``
-        was tuned with).  None for mode='none'."""
+    def _tune(self, **kw):
+        """The spec's auto-tuning call, shared by :attr:`tuned` and the
+        auto-stepsize path: fleet / per-leaf / participation / pipeline
+        composition on the SAME compressor objects ``algo`` was tuned
+        with."""
         from repro.core import theory
 
         spec = self.spec
-        if spec.mode == "none":
-            return None
-        comp = (self.algo.fleet if self.algo.fleet is not None
-                else self.compressor)
+        part = (self.participation.fraction(spec.n) if self.federated
+                else None)
+        if self.algo.leaf_rules:
+            comps = [self.compressor] + [c for _, c in self.algo.leaf_rules]
+            return theory.tune_tree(
+                [c.eta(spec.d) for c in comps],
+                [c.omega(spec.d) for c in comps],
+                n=spec.n, aggregate="worst", mode=spec.mode,
+                participation=part, pipeline=self.pipeline.depth or None,
+                **kw)
         return theory.tune_for(
-            comp, spec.d, spec.n, mode=spec.mode,
-            participation=(self.participation.fraction(spec.n)
-                           if self.federated else None),
-            pipeline=self.pipeline.depth or None)
+            self.algo.fleet if self.algo.fleet is not None
+            else self.compressor,
+            spec.d, spec.n, mode=spec.mode, participation=part,
+            pipeline=self.pipeline.depth or None, **kw)
+
+    @property
+    def tuned(self):
+        """The paper's auto-tuning for this spec (delegates to
+        :func:`repro.core.theory.tune_for` -- or ``tune_tree`` under
+        per-leaf codec rules: fleet / participation composition included,
+        on the SAME compressor objects ``algo`` was tuned with).  None for
+        mode='none'."""
+        if self.spec.mode == "none":
+            return None
+        return self._tune()
 
     # ---- built-in problems -------------------------------------------------
 
@@ -528,7 +573,7 @@ class Run:
         import jax
         import jax.numpy as jnp
 
-        from repro.core import efbv, theory
+        from repro.core import efbv
 
         spec = self.spec
         if grad_fn is not None and gamma is None and spec.gamma == 0.0:
@@ -562,13 +607,7 @@ class Run:
             if spec.mode == "none":
                 gamma = 1.0 / prob.L()
             else:
-                t = theory.tune_for(
-                    self.algo.fleet or self.compressor, spec.d, spec.n,
-                    mode=spec.mode,
-                    participation=(self.participation.fraction(spec.n)
-                                   if self.federated else None),
-                    L=prob.L(), Ltilde=prob.L_tilde())
-                gamma = t.gamma
+                gamma = self._tune(L=prob.L(), Ltilde=prob.L_tilde()).gamma
         if key is None:
             # decorrelated from the problem-data key (jax.random.key(seed))
             key = jax.random.fold_in(jax.random.key(spec.seed), 0x5EED)
@@ -683,8 +722,9 @@ class Run:
                     else down_fmt.downlink_bits_per_round())
             total = up + down
         else:
-            up_fmt = wire.format_for(self.compressor, tree,
-                                     wire_dtype=spec.wire_dtype)
+            up_fmt = wire.tree_format_for(self.compressor, tree,
+                                          wire_dtype=spec.wire_dtype,
+                                          rules=self.algo.leaf_rules)
             up = up_fmt.bits_per_round(n_workers=n, participants=participants)
             total = wire.total_round_bits(up_fmt, down_fmt, n_workers=n,
                                           participants=participants)

@@ -459,6 +459,86 @@ def tune_fleet(etas, omegas, *, n: int,
     return tune(eta, omega, omega_av, **kw)
 
 
+# --- pytree leaves: per-leaf (eta_j, omega_j) composition ----------------------
+
+def tree_constants(etas, omegas, sizes=None, *, n: Optional[int] = None,
+                   aggregate: FleetAggregate = "worst"):
+    """Aggregate per-LEAF certified constants (eta_j, omega_j) of a
+    pytree-native wire (leaf j compressed by its own independent C_j) into
+    one (eta, omega[, omega_av]) triple the homogeneous theory can consume.
+
+    The leaf-wise operator C(x) = (C_1(x_1), ..., C_J(x_J)) acts on DISJOINT
+    coordinate blocks of ONE worker's innovation, so the error and variance
+    split exactly over leaves:  ||C(x) - x||^2 = sum_j ||C_j(x_j) - x_j||^2
+    and Var[C(x)] = sum_j Var[C_j(x_j)].
+
+    * ``worst`` (certified): eta = max_j eta_j, omega = max_j omega_j bound
+      the sums above for EVERY split of ||x||^2 over leaves, so Thms. 1-3
+      hold verbatim with the aggregated constants.
+    * ``mean`` (averaged): exact under the isotropy heuristic ||x_j||^2 =
+      w_j ||x||^2 with size weights w_j = size_j / sum(sizes):
+      eta = sqrt(sum_j w_j eta_j^2), omega = sum_j w_j omega_j -- tighter
+      but uncertified in general (``sizes=None`` weighs leaves equally).
+
+    Unlike a fleet, leaf composition adds NO worker-averaging of its own:
+    the 1/n reduction still comes from averaging across the n independent
+    workers, omega_av = omega / max(n, 1).  A single leaf is an exact no-op
+    under either aggregate.  n = None returns (eta, omega) only.
+    """
+    etas, omegas = list(etas), list(omegas)
+    if not etas or len(etas) != len(omegas):
+        raise ValueError(f"need matching non-empty eta/omega lists, got "
+                         f"{len(etas)}/{len(omegas)}")
+    if sizes is None:
+        w = [1.0 / len(etas)] * len(etas)
+    else:
+        sizes = [float(s) for s in sizes]
+        if len(sizes) != len(etas):
+            raise ValueError(f"{len(sizes)} leaf sizes for {len(etas)} "
+                             "eta/omega pairs")
+        total = sum(sizes)
+        if total <= 0:
+            raise ValueError("leaf sizes must have a positive sum")
+        w = [s / total for s in sizes]
+    if aggregate == "worst":
+        eta, omega = max(etas), max(omegas)
+    elif aggregate == "mean":
+        eta = math.sqrt(sum(wj * e * e for wj, e in zip(w, etas)))
+        omega = sum(wj * o for wj, o in zip(w, omegas))
+    else:
+        raise ValueError(f"tree aggregate {aggregate!r} (want worst | mean)")
+    if n is None:
+        return eta, omega
+    return eta, omega, omega / max(n, 1)
+
+
+def tune_tree(etas, omegas, sizes=None, *, n: int,
+              aggregate: FleetAggregate = "worst",
+              participation: Optional[float] = None,
+              pipeline: Optional[int] = None,
+              pipeline_drift: float = DEFAULT_PIPELINE_DRIFT,
+              **kw) -> Tuning:
+    """Auto-tuning for a pytree-native wire with per-leaf compressors.
+
+    Composition order: leaves FIRST (:func:`tree_constants` -- the leaf
+    operators compose within one worker's single round message), then
+    per-round Bernoulli(p) participation (a per-WORKER event: the whole
+    leaf-composed message is present or absent at once), then the pipelined
+    staleness, then :func:`tune`.  A single leaf with full participation and
+    no pipeline reproduces :func:`tune` on that leaf's constants exactly.
+    """
+    eta, omega = tree_constants(etas, omegas, sizes, aggregate=aggregate)
+    if participation is not None and participation < 1.0:
+        eta, omega = (participation_eta(participation, eta),
+                      participation_omega(participation, eta, omega))
+    omega_av = omega / max(n, 1)
+    depth = _check_depth(0 if pipeline is None else pipeline)
+    if depth:
+        return tune_pipelined(eta, omega, depth, omega_av=omega_av,
+                              drift=pipeline_drift, **kw)
+    return tune(eta, omega, omega_av, **kw)
+
+
 def iteration_complexity(L: float, Ltilde: float, mu: float, t: Tuning) -> float:
     """Asymptotic O(.) iteration count to eps-accuracy, eq. (12) (without log)."""
     return L / mu + (Ltilde / mu * math.sqrt(t.r_av / t.r) + 1.0) / (1.0 - t.r)

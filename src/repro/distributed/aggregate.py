@@ -101,8 +101,17 @@ def compress_local(
 
     leaves, treedef = jax.tree.flatten(grads)
     h_leaves = treedef.flatten_up_to(h_local)
-    fmt = wire.format_for(algo.compressor, grads, wire_dtype=wire_dtype) \
+    fmt = wire.tree_format_for(algo.compressor, grads, wire_dtype=wire_dtype,
+                               rules=algo.leaf_rules) \
         if mode == "sparse_allgather" else None
+    if algo.leaf_rules and algo.fleet is None:
+        # dense path under per-leaf rules: each leaf runs its own resolved
+        # (clamped) compressor -- the dense twin of the TreeWire codecs
+        dense_comps = [wire.clamp_for_leaf(
+            wire.resolve_leaf(algo.leaf_rules, p, algo.compressor),
+            int(g.size)) for p, g in zip(wire.leaf_paths(grads), leaves)]
+    else:
+        dense_comps = [algo.compressor] * len(leaves)
     msgs, h_new_leaves = [], []
     for j, (g_leaf, h_leaf) in enumerate(zip(leaves, h_leaves)):
         kj = None if key is None else jax.random.fold_in(key, j)
@@ -131,7 +140,7 @@ def compress_local(
                                      for c in algo.fleet)
                     d_leaf = jax.lax.switch(worker, branches, kj, delta)
             else:
-                d_leaf = algo.compressor(kj, delta)
+                d_leaf = dense_comps[j](kj, delta)
             if mask is not None:
                 d_leaf_wire = d_leaf * jnp.asarray(mask, d_leaf.dtype)
             else:
@@ -176,7 +185,9 @@ def combine_global(
     if mode == "dense_psum":
         d_bar = jax.tree.map(lambda d: jnp.mean(d, axis=0), message_stacked)
     else:
-        fmt = wire.format_for(algo.compressor, h_avg, wire_dtype=wire_dtype)
+        fmt = wire.tree_format_for(algo.compressor, h_avg,
+                                   wire_dtype=wire_dtype,
+                                   rules=algo.leaf_rules)
         d_bar_leaves = []
         for payload, codec, ref in zip(message_stacked, fmt.leaves,
                                        ref_leaves):

@@ -49,6 +49,7 @@ See docs/wire_format.md#the-downlink-payload.
 from __future__ import annotations
 
 import dataclasses
+import fnmatch
 import math
 import os
 from typing import Any, Optional, Sequence, Tuple
@@ -634,10 +635,47 @@ def fleet_bits_per_round(fmts: Sequence["WireFormat"],
         f.bits_per_round() for f, mi in zip(fmts, m) if mi > 0)
 
 
+def clamp_for_leaf(compressor, size: int):
+    """Clamp a compressor's selection counts to one leaf's size.
+
+    Fixed-k sparsifiers (top-k, rand-k, comp-(k,k'), mix-(k,k'), block-top-k)
+    assume d >= k; on a pytree with size-1 or 0-d edge leaves that assumption
+    breaks -- ``jax.lax.top_k(x, k)`` and ``jax.random.choice(..., (k,),
+    replace=False)`` both reject k > d, so encode (and transitively
+    :func:`zero_message`, the pipelined priming payload) crashes.  Clamping
+    is per-leaf and returns the SAME object whenever no count changes, so
+    every existing single-leaf/flat call site is bitwise (and hash-)
+    untouched.  Quantizers, sign, natural, dense and the fraction-style
+    compressors are size-adaptive already and pass through."""
+    from repro.core import compressors as cz  # lazy: cz constructs codecs
+    d = int(size)
+    if isinstance(cmp := compressor, cz.MixKK):
+        k = min(cmp.k, d)
+        kp = min(cmp.kp, d - k)
+        if (k, kp) != (cmp.k, cmp.kp):
+            return dataclasses.replace(cmp, k=k, kp=kp)
+    elif isinstance(cmp, cz.CompKK):
+        kp = min(cmp.kp, d)
+        k = min(cmp.k, kp)
+        if (k, kp) != (cmp.k, cmp.kp):
+            return dataclasses.replace(cmp, k=k, kp=kp)
+    elif isinstance(cmp, (cz.TopK, cz.RandK, cz.ScaledRandK)):
+        if cmp.k > d:
+            return dataclasses.replace(cmp, k=d)
+    elif isinstance(cmp, cz.BlockTopK):
+        kb = min(cmp.kb, cmp.block, d)
+        if kb != cmp.kb:
+            return dataclasses.replace(cmp, kb=kb)
+    return compressor
+
+
 def codec_of(compressor, shape: Tuple[int, ...], size: int,
              wire_dtype: str = "float32") -> LeafCodec:
     """The codec ``compressor`` declares for one leaf (DensePack fallback
-    for compressors that declare nothing)."""
+    for compressors that declare nothing).  Fixed-k sparsifiers are clamped
+    to the leaf's size first (:func:`clamp_for_leaf`), so degenerate leaves
+    get a well-formed -- if trivially dense -- payload instead of a crash."""
+    compressor = clamp_for_leaf(compressor, size)
     fn = getattr(compressor, "codec", None)
     if fn is None:
         return DensePack(shape=tuple(shape), size=int(size),
@@ -658,6 +696,194 @@ def format_for(compressor, tree: PyTree, *,
     return WireFormat(tuple(
         codec_of(compressor, tuple(l.shape), int(l.size), wire_dtype)
         for l in jax.tree.leaves(tree)))
+
+
+# ---------------------------------------------------------------------------
+# pytree-native wire: per-leaf codec rules composed into ONE accounting
+# ---------------------------------------------------------------------------
+
+def _key_str(entry) -> str:
+    """One pytree path entry -> its path-string segment."""
+    tu = jax.tree_util
+    if isinstance(entry, tu.DictKey):
+        return str(entry.key)
+    if isinstance(entry, tu.SequenceKey):
+        return str(entry.idx)
+    if isinstance(entry, tu.GetAttrKey):
+        return str(entry.name)
+    if isinstance(entry, tu.FlattenedIndexKey):
+        return str(entry.key)
+    return str(entry)
+
+
+def leaf_paths(tree: PyTree) -> Tuple[str, ...]:
+    """'/'-joined path string of every leaf, in flatten order (dict keys,
+    sequence indices and attribute names as segments; a bare array tree has
+    the single path '')."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return tuple("/".join(_key_str(e) for e in kp) for kp, _ in flat)
+
+
+def parse_leaf_rules(spec: str) -> Tuple[Tuple[str, Any], ...]:
+    """Parse the ';'-separated per-leaf codec grammar into (pattern,
+    Compressor) rules, first match wins.
+
+    Each entry is ``pattern=compressor_spec`` -- the pattern is an fnmatch
+    glob over the leaf's '/'-joined path -- and a bare ``compressor_spec``
+    (no '=') is the default rule, pattern '*'.  Example::
+
+        'embed*=qsgd:16;*norm*=identity;block_topk:256,16'
+
+    Leaves matching no rule keep the experiment's base compressor, so the
+    default entry is optional.  Jointly-defined compressors (m-nice) are
+    rejected: their draws couple all workers, not leaves."""
+    from repro.core.compressors import make_compressor
+    rules = []
+    for entry in spec.split(";"):
+        entry = entry.strip()
+        if not entry:
+            continue
+        if "=" in entry:
+            pat, _, comp_spec = entry.partition("=")
+            pat, comp_spec = pat.strip(), comp_spec.strip()
+            if not pat or not comp_spec:
+                raise ValueError(
+                    f"leaf-codec rule {entry!r} needs both a leaf-path "
+                    "pattern and a compressor spec around the '='")
+        else:
+            pat, comp_spec = "*", entry
+        comp = make_compressor(comp_spec)
+        if getattr(comp, "joint", False):
+            raise ValueError(
+                "jointly-defined compressors (m-nice) cannot be leaf-codec "
+                "rules: their draws couple all workers")
+        rules.append((pat, comp))
+    return tuple(rules)
+
+
+def resolve_leaf(rules, path: str, default):
+    """The compressor the rule list assigns to one leaf path (first matching
+    fnmatch pattern wins; no match keeps the default compressor)."""
+    for pat, comp in rules or ():
+        if fnmatch.fnmatchcase(path, pat):
+            return comp
+    return default
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeWire(WireFormat):
+    """Pytree-native wire format: leaf-path -> codec, with the SAME composed
+    accounting as every flat format (``bits_per_round`` et al. are inherited
+    sums over leaves, so composed bits == sum of per-leaf bits exactly --
+    the harness pins the equality).
+
+    Mixed leaves reuse the fleet mixed-codec machinery leaf-wise: each leaf
+    carries the (clamped) compressor a rule resolved for it plus that
+    compressor's own codec, and encode/decode/zero/mask walk the leaves with
+    the per-leaf ``fold_in(key, j)`` convention the aggregation paths and
+    ``init_inflight`` already use.  With no rules and one leaf this is the
+    flat-vector wire, payload-bitwise."""
+
+    paths: Tuple[str, ...]
+    compressors: Tuple[Any, ...]
+    treedef: Any
+
+    @staticmethod
+    def for_tree(compressor, tree: PyTree, *, wire_dtype: str = "float32",
+                 rules: Tuple[Tuple[str, Any], ...] = ()) -> "TreeWire":
+        """TreeWire for ``tree``: every leaf's compressor is resolved through
+        ``rules`` (falling back to ``compressor``), clamped to the leaf's
+        size, and asked for its codec."""
+        flat, treedef = jax.tree_util.tree_flatten(tree)
+        paths = leaf_paths(tree)
+        comps = tuple(
+            clamp_for_leaf(resolve_leaf(rules, p, compressor), int(l.size))
+            for p, l in zip(paths, flat))
+        codecs = tuple(
+            codec_of(c, tuple(l.shape), int(l.size), wire_dtype)
+            for c, l in zip(comps, flat))
+        return TreeWire(leaves=codecs, paths=paths, compressors=comps,
+                        treedef=treedef)
+
+    # -- keys ---------------------------------------------------------------
+    def leaf_keys(self, keys) -> Tuple[Optional[Array], ...]:
+        """Normalize the key argument: an explicit per-leaf sequence is used
+        as-is (the harness's single-leaf flat-parity leg), one base key is
+        folded per leaf index -- fold_in(key, j) -- the convention every
+        aggregation path already uses."""
+        if keys is None or not isinstance(keys, (tuple, list)):
+            return tuple(jax.random.fold_in(keys, j) if keys is not None
+                         else None for j in range(len(self.leaves)))
+        if len(keys) != len(self.leaves):
+            raise ValueError(f"{len(keys)} leaf keys for a tree of "
+                             f"{len(self.leaves)} leaves")
+        return tuple(keys)
+
+    # -- pack / unpack, leaf-wise -------------------------------------------
+    def encode_update(self, keys, grads: PyTree, h: PyTree, lam: float, *,
+                      kernel: Optional[str] = None, stream: bool = False):
+        """Per-leaf fused worker update: (payload list, h' pytree) with
+        d_j = C_j(g_j - h_j) packed and h'_j = h_j + lam d_j -- no flat
+        vector is ever materialized."""
+        gl = self.treedef.flatten_up_to(grads)
+        hl = self.treedef.flatten_up_to(h)
+        ks = self.leaf_keys(keys)
+        payloads, h_new = [], []
+        for codec, kj, gj, hj in zip(self.leaves, ks, gl, hl):
+            # an explicit kernel request applies leaf-wise where a fused
+            # kernel exists; kernel-less leaves (dense, sign, ...) run their
+            # jnp oracle -- which IS their only backend, so the mixed-tree
+            # differential legs stay bit-identical across backends
+            kj_kernel = kernel
+            if (kernel in ("pallas", "interpret")
+                    and not getattr(codec, "has_kernel", False)):
+                kj_kernel = "oracle"
+            p, hn = codec.encode_update(kj, gj, hj, lam, kernel=kj_kernel,
+                                        stream=stream)
+            payloads.append(p)
+            h_new.append(hn)
+        return payloads, jax.tree_util.tree_unflatten(self.treedef, h_new)
+
+    def decode(self, payloads) -> PyTree:
+        """One worker's payload list -> dense f32 pytree (leaf shapes)."""
+        dense = [c.decode(p).reshape(c.shape)
+                 for c, p in zip(self.leaves, payloads)]
+        return jax.tree_util.tree_unflatten(self.treedef, dense)
+
+    def decode_sum(self, payloads, *, chunks: int = 1) -> PyTree:
+        """Worker-stacked payload list -> dense f32 pytree of scatter-SUMS
+        (divide by n for the master mean); ``chunks`` splits the worker axis
+        exactly like the flat path's :func:`chunked_decode_sum`."""
+        dense = [chunked_decode_sum(c, p, chunks).reshape(c.shape)
+                 for c, p in zip(self.leaves, payloads)]
+        return jax.tree_util.tree_unflatten(self.treedef, dense)
+
+    def mask_messages(self, payloads, m):
+        """Participation-gate every leaf's message (list in, list out)."""
+        return [c.mask_message(p, m) for c, p in zip(self.leaves, payloads)]
+
+    def zero_messages(self, base_key: Array):
+        """The pipelined schedule's priming payloads, one per leaf, keyed
+        fold_in(base_key, j) -- exactly the init_inflight convention."""
+        return [zero_message(c, jax.random.fold_in(base_key, j))
+                for j, c in enumerate(self.leaves)]
+
+    # -- accounting ---------------------------------------------------------
+    def bits_by_leaf(self) -> Tuple[int, ...]:
+        """Exact per-leaf payload bits, in flatten order (their sum IS
+        ``bits_per_round()``; the harness asserts the equality)."""
+        return tuple(c.payload_bits for c in self.leaves)
+
+
+def tree_format_for(compressor, tree: PyTree, *, wire_dtype: str = "float32",
+                    rules=None):
+    """The wire format of ``tree``: a plain :class:`WireFormat` when no
+    per-leaf rules are given (bit-compatible with every existing call site)
+    and a :class:`TreeWire` otherwise."""
+    if not rules:
+        return format_for(compressor, tree, wire_dtype=wire_dtype)
+    return TreeWire.for_tree(compressor, tree, wire_dtype=wire_dtype,
+                             rules=tuple(rules))
 
 
 def payload_bytes(payload: PyTree) -> int:

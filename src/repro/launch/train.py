@@ -111,6 +111,14 @@ def parse_args(argv=None):
     ap.add_argument("--shard-size", type=int, default=64,
                     help="sequences per worker shard for "
                          "--local-batch-resample")
+    ap.add_argument("--leaf-codecs", default="",
+                    help="per-leaf wire codecs: ';'-separated "
+                         "'pattern=comp_spec' rules matched against "
+                         "'/'-joined parameter paths (fnmatch; first match "
+                         "wins; unmatched leaves use --compressor), e.g. "
+                         "'*embed*=qsgd:16;*norm*=identity'.  With --spec, "
+                         "a non-default value overrides the spec's "
+                         "leaf_codecs field")
     ap.add_argument("--pipeline", default="off",
                     help="execution schedule: off | depth:1 (double-buffer "
                          "the compressed payload; the master applies round "
@@ -159,6 +167,7 @@ def spec_from_args(args, n: int) -> ExperimentSpec:
         steps=args.steps,
         seed=args.seed,
         pipeline=args.pipeline,
+        leaf_codecs=args.leaf_codecs,
     )
 
 
@@ -185,6 +194,11 @@ def main(argv=None):
                 # derived or embedded anywhere
                 import dataclasses
                 spec = dataclasses.replace(spec, pipeline=args.pipeline)
+            if args.leaf_codecs and spec.leaf_codecs != args.leaf_codecs:
+                # the per-leaf wire is part of the experiment identity too:
+                # fold the override in before the fingerprint is derived
+                import dataclasses
+                spec = dataclasses.replace(spec, leaf_codecs=args.leaf_codecs)
             if spec.backend == "reference":
                 raise SpecError(
                     "the train driver runs the distributed trainers; a "
@@ -232,7 +246,8 @@ def main(argv=None):
           + (f" pipeline={spec.pipeline}" if not run.pipeline.is_off else "")
           + (f" participation={spec.participation}" if federated else "")
           + (f" downlink={spec.downlink}" if downlink else "")
-          + (f" fleet={spec.compressor}" if algo.fleet is not None else ""))
+          + (f" fleet={spec.compressor}" if algo.fleet is not None else "")
+          + (f" leaf_codecs={spec.leaf_codecs}" if spec.leaf_codecs else ""))
     print(f"[train] spec fingerprint={spec.fingerprint()}"
           + (f" (from {args.spec})" if args.spec else ""))
 
@@ -243,8 +258,9 @@ def main(argv=None):
     # exact wire accounting for the codec payload (docs/wire_format.md);
     # every compressor declares a codec, so this always prints
     from repro.distributed import wire
-    up_fmt = wire.format_for(algo.compressor, params,
-                             wire_dtype=spec.wire_dtype) \
+    up_fmt = wire.tree_format_for(algo.compressor, params,
+                                  wire_dtype=spec.wire_dtype,
+                                  rules=algo.leaf_rules) \
         if spec.agg == "sparse_allgather" else None
     if up_fmt is not None:
         up = up_fmt.bits_per_round()

@@ -91,7 +91,8 @@ def init_inflight(algo: EFBV, params: PyTree, n: int, *,
     if agg_mode != "sparse_allgather":
         return jax.tree.map(
             lambda p: jnp.zeros((n,) + p.shape, jnp.float32), params)
-    fmt = wire.format_for(algo.compressor, params, wire_dtype=wire_dtype)
+    fmt = wire.tree_format_for(algo.compressor, params, wire_dtype=wire_dtype,
+                               rules=algo.leaf_rules)
     tile = lambda a: jnp.tile(a[None], (n,) + (1,) * a.ndim)
     return [jax.tree.map(tile, wire.zero_message(
                 codec, jax.random.fold_in(base, j)))

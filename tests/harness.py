@@ -25,6 +25,15 @@ internal loop, kept so every existing pin still executes, and pinned
 bit-identical to the spec-driven driver by tests/test_spec.py.
 ``run_wire_trajectory`` drives the raw block-sparse pack path;
 test_distributed.py reuses run_with_devices for the 1-vs-8-fake-device leg.
+
+:func:`run_tree_trajectory` is the pytree-native leg of the same
+differential contract: the identical EF-BV recursion through a
+:class:`repro.distributed.wire.TreeWire`, per-leaf, with no flat vector
+ever materialized.  Driving it with the default single-leaf tree and the
+same spec as :func:`run_trajectory` is pinned BIT-identical to the flat
+path for every codec in the zoo; driving it with a genuinely nested tree
+(mixed per-leaf codecs via ``spec.leaf_codecs``) pins
+oracle == interpret == compiled and composed bits == sum of per-leaf bits.
 """
 
 from __future__ import annotations
@@ -248,6 +257,179 @@ def run_trajectory(spec, kernel: str = "oracle", *,
         participation=run.participation if run.federated else None,
         downlink=run.downlink, seed=spec.seed, wire_dtype=spec.wire_dtype,
         pipeline_depth=run.pipeline.depth)
+
+
+def tree_quadratic_grads(n: int, tree, seed: int = 0):
+    """Per-worker, per-leaf DIAGONAL quadratic gradient oracle for pytree
+    trajectories: grad_i(x)_j = q_ij * x_j - b_ij with q_ij in [0.5, 1.5)
+    and b_ij standard normal, drawn once from fold_in chains keyed by
+    (leaf index j, worker i).  Strongly convex and deterministic like
+    :func:`quadratic_grads`, but O(size) per leaf so it scales to real
+    model trees (the dense (n, d, d) Quadratic cannot).  Returns
+    ``grads(x) -> [pytree] * n``."""
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    base = jax.random.key(seed + 0x7E3E)
+    q, b = [], []
+    for j, leaf in enumerate(flat):
+        kj = jax.random.fold_in(base, j)
+        shape = jnp.shape(leaf)
+        qi, bi = [], []
+        for i in range(n):
+            ki = jax.random.fold_in(kj, i)
+            qi.append(0.5 + jax.random.uniform(jax.random.fold_in(ki, 0),
+                                               shape, jnp.float32))
+            bi.append(jax.random.normal(jax.random.fold_in(ki, 1),
+                                        shape, jnp.float32))
+        q.append(qi)
+        b.append(bi)
+
+    def grads(x):
+        xl = treedef.flatten_up_to(x)
+        return [jax.tree_util.tree_unflatten(
+                    treedef,
+                    [q[j][i] * xl[j] - b[j][i] for j in range(len(flat))])
+                for i in range(n)]
+
+    return grads
+
+
+def run_tree_trajectory(spec, kernel: str = "oracle", *, tree=None,
+                        lam: Optional[float] = None,
+                        nu: Optional[float] = None,
+                        gamma: Optional[float] = None) -> Dict[str, Array]:
+    """Spec-driven differential trajectory over the PYTREE wire.
+
+    The same EF-BV recursion as :func:`run_trajectory`, but every state
+    (x, w, h_i, h_avg) is a pytree and every message crosses a
+    :class:`repro.distributed.wire.TreeWire` -- per-leaf encode / decode-sum
+    with the spec's ``leaf_codecs`` rules resolved (and clamped) per leaf,
+    no flat vector ever materialized.
+
+    ``tree=None`` (the default) drives the spec's flat (d,) problem as a
+    SINGLE-LEAF pytree drawing the identical :func:`quadratic_grads`
+    gradients with the identical per-worker keys, so the trajectory is
+    BIT-identical to :func:`run_trajectory`'s for every codec in the zoo
+    (tests/test_tree_wire.py pins it).  A nested ``tree`` (shapes/dtypes
+    only; values are ignored) switches to the per-leaf
+    :func:`tree_quadratic_grads` oracle and the trainers' per-leaf
+    ``fold_in(key, j)`` key convention.
+
+    Returns the stacked (x, h) trajectories (pytree leaves gain a leading
+    ``steps`` axis; h also a worker axis), the last round's per-leaf
+    payload list, the per-leaf bit accounting (``bits_by_leaf``; its sum
+    is asserted equal to the composed ``round_bits['up']`` per worker by
+    the tests), and the same ``round_bits`` dict as the flat driver.
+    """
+    from repro.core import build
+    from repro.core.efbv import PIPELINE_FOLD, downlink_key, participation_key
+
+    if len(spec.fleet_specs()) > 1:
+        raise ValueError("run_tree_trajectory drives ONE codec tree; "
+                         "heterogeneous fleets aggregate dense (see "
+                         "tests/test_bidirectional.py)")
+    run = build(spec)
+    if lam is None or nu is None:
+        t = run.tuned
+        if t is None:
+            raise ValueError("mode='none' has no tuning; pass lam/nu")
+        lam = t.lam if lam is None else lam
+        nu = t.nu if nu is None else nu
+    if gamma is None:
+        if spec.gamma <= 0.0:
+            raise ValueError("pass gamma= or set spec.gamma > 0")
+        gamma = spec.gamma
+    n = spec.n
+    flat_parity = tree is None
+    if flat_parity:
+        tree = jnp.zeros((spec.d,), jnp.float32)
+        gf = quadratic_grads(n, spec.d, spec.seed)
+        grad_fn = lambda xt: list(gf(xt))  # noqa: E731  (rows of the stack)
+    else:
+        grad_fn = tree_quadratic_grads(n, tree, spec.seed)
+    fmt = wire.TreeWire.for_tree(run.compressor, tree,
+                                 wire_dtype=spec.wire_dtype,
+                                 rules=run.leaf_rules or ())
+    participation = run.participation if run.federated else None
+    downlink = run.downlink
+    pipeline_depth = run.pipeline.depth
+    size = sum(int(np.prod(jnp.shape(l)) or 1)
+               for l in jax.tree_util.tree_leaves(tree))
+
+    key = jax.random.key(spec.seed + 0xC0DEC)
+    zero = jax.tree.map(lambda a: jnp.zeros(jnp.shape(a), jnp.float32), tree)
+    x, w, h_avg = zero, zero, zero
+    h = [zero for _ in range(n)]
+    pending = None
+    if pipeline_depth:
+        # round-0 priming payloads: the same fold_in(key(0), PIPELINE_FOLD)
+        # base as trainer.init_inflight, leaf j primed with fold_in(base, j)
+        base = jax.random.fold_in(jax.random.key(0), PIPELINE_FOLD)
+        pending = [jax.tree.map(
+                       lambda a: jnp.tile(a[None], (n,) + (1,) * a.ndim), zm)
+                   for zm in fmt.zero_messages(base)]
+        chunks = wire.pipeline_chunks(n)
+    xs, ws, hs, masks = [], [], [], []
+    payload = down_payload = None
+    for t_ in range(spec.steps):
+        kt = jax.random.fold_in(key, t_)
+        mask = (jnp.ones((n,), jnp.float32) if participation is None
+                else participation.sample_mask(participation_key(kt), n))
+        g = grad_fn(w if downlink is not None else x)
+        payloads_i, h_i = [], []
+        for i in range(n):
+            ki = jax.random.fold_in(kt, i)
+            # single-leaf flat parity: the leaf key IS the worker key (no
+            # leaf fold), exactly the flat harness convention; nested trees
+            # use the trainers' fold_in(ki, j) per leaf via TreeWire
+            keys = (ki,) * len(fmt.leaves) if flat_parity else ki
+            p, h_new = fmt.encode_update(keys, g[i], h[i], lam,
+                                         kernel=kernel,
+                                         stream=bool(pipeline_depth))
+            if participation is not None:
+                p = fmt.mask_messages(p, mask[i])
+                h_new = jax.tree.map(
+                    lambda a, b_: jnp.where(mask[i] > 0, a, b_), h_new, h[i])
+            payloads_i.append(p)
+            h_i.append(h_new)
+        h = h_i
+        payload = [jax.tree.map(lambda *a: jnp.stack(a),
+                                *[pi[j] for pi in payloads_i])
+                   for j in range(len(fmt.leaves))]
+        if pipeline_depth:
+            d_bar = jax.tree.map(lambda a: a / n,
+                                 fmt.decode_sum(pending, chunks=chunks))
+            pending = payload
+        else:
+            d_bar = jax.tree.map(lambda a: a / n, fmt.decode_sum(payload))
+        x = jax.tree.map(lambda xj, hj, dj: xj - gamma * (hj + nu * dj),
+                         x, h_avg, d_bar)
+        h_avg = jax.tree.map(lambda hj, dj: hj + lam * dj, h_avg, d_bar)
+        if downlink is not None:
+            w, down_payload = downlink.broadcast(downlink_key(kt), x, w,
+                                                 wire_dtype=spec.wire_dtype)
+            ws.append(w)
+        xs.append(x)
+        hs.append(jax.tree.map(lambda *a: jnp.stack(a), *h))
+        masks.append(mask)
+
+    up_bits = (fmt.bits_per_round(n_workers=n) if participation is None
+               else wire.federated_round_bits(fmt, masks[-1]))
+    down_bits = 32 * size
+    out = {"x": jax.tree.map(lambda *a: jnp.stack(a), *xs),
+           "h": jax.tree.map(lambda *a: jnp.stack(a), *hs),
+           "payload": payload, "masks": jnp.stack(masks), "fmt": fmt,
+           "bits_by_leaf": fmt.bits_by_leaf()}
+    if pipeline_depth:
+        out["pending"] = pending
+    if downlink is not None:
+        dfmt = downlink.format_for(zero, wire_dtype=spec.wire_dtype)
+        down_bits = dfmt.downlink_bits_per_round()
+        out.update({"w": jax.tree.map(lambda *a: jnp.stack(a), *ws),
+                    "down_payload": down_payload})
+    out["round_bits"] = {"up": up_bits, "down": down_bits,
+                         "total": up_bits + down_bits,
+                         "dense_both_ways": 32 * size * n + 32 * size}
+    return out
 
 
 def run_codec_trajectory(kernel: str, *, compressor, steps: int, n: int,
