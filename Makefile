@@ -7,8 +7,8 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test-tier1 test-all test-slow bench bench-micro smoke smoke-federated \
-	smoke-bidirectional smoke-spec smoke-pipelined smoke-tree docs-test \
-	docs-check
+	smoke-bidirectional smoke-spec smoke-pipelined smoke-tree smoke-serve \
+	docs-test docs-check
 
 test-tier1:
 	JAX_PLATFORMS=cpu $(PY) -m pytest -x -q
@@ -70,3 +70,10 @@ smoke-tree:
 	JAX_PLATFORMS=cpu $(PY) -m repro.launch.train \
 	    --spec examples/specs/tree_mixed_codecs.json --smoke \
 	    --global-batch 8 --seq 32
+
+# compressed-delta serving: the committed serve spec drives a simulated
+# replica fleet reconstructing w from versioned downlink pushes, bitwise
+# (docs/serving.md)
+smoke-serve:
+	JAX_PLATFORMS=cpu $(PY) -m repro.launch.serve \
+	    --spec examples/specs/serve_delta.json

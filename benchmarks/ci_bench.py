@@ -17,7 +17,11 @@ Two files, two kinds of signal:
   up+down accounting (uplink x n + ONE broadcast) for pinned combos,
   including the acceptance row named `qsgd16_both_ways` whose ratio vs
   dense fp32 both ways must stay <= 0.35 (also pinned by
-  tests/test_bidirectional.py).
+  tests/test_bidirectional.py).  The `serve_delta` table accounts the
+  compressed model-push envelope of the serving protocol, gated at
+  <= 0.35x a full checkpoint for the committed qsgd:16 downlink; the
+  BENCH_perf.json `serve_fleet` row carries the measured fleet tok/s and
+  hot-swap latency for the same spec.
 
 Since schema 2, every row is KEYED by the stable fingerprint of the
 canonical repro.core.ExperimentSpec it measures (the human-readable
@@ -160,6 +164,40 @@ def bits_payload():
         "vs_dense_fp32": round(tree_bits / dense_tree, 6),
     }}
 
+    # the serve-delta table: exact envelope accounting of the compressed
+    # model-push protocol (launch/serve.py) on the committed serve spec's
+    # real smoke parameter tree.  One delta push ships push_bits(fmt) --
+    # the versioned envelope header + the downlink payload -- vs
+    # checkpoint_push_bits(fmt) for shipping the model densely; the
+    # acceptance gate pins the committed qsgd:16 downlink at <= 0.35x the
+    # full-checkpoint baseline (also pinned by tests/test_serve_delta.py).
+    from repro.core import Downlink
+
+    serve_path = os.path.join(os.path.dirname(__file__), os.pardir,
+                              "examples", "specs", "serve_delta.json")
+    with open(serve_path) as f:
+        serve_spec = ExperimentSpec.from_dict(json.load(f))
+    serve_params = build_model(get_smoke_config(serve_spec.problem)).init(
+        jax.random.key(0))
+    serve_dl = Downlink.parse(serve_spec.downlink)
+    serve_fmt = serve_dl.serve_format(serve_params,
+                                      wire_dtype=serve_spec.wire_dtype)
+    delta_bits = wire.push_bits(serve_fmt)
+    ckpt_bits = wire.checkpoint_push_bits(serve_fmt)
+    ratio = delta_bits / ckpt_bits
+    serve_rows = {serve_spec.fingerprint(): {
+        "name": "serve_delta_push",
+        "downlink_spec": serve_spec.downlink,
+        "problem": serve_spec.problem,
+        "push_kind": serve_dl.push_kind(serve_spec.wire_dtype),
+        "delta_bits_per_push": delta_bits,
+        "checkpoint_bits_per_push": ckpt_bits,
+        "vs_full_checkpoint": round(ratio, 6),
+    }}
+    assert serve_spec.downlink == "qsgd:16" and ratio <= 0.35, (
+        f"serve delta push regressed past 0.35x a full checkpoint: "
+        f"{ratio} ({serve_spec.downlink})")
+
     return {
         "schema": 2,  # schema 2: rows keyed by ExperimentSpec fingerprint
         "d": D_BITS,
@@ -167,6 +205,7 @@ def bits_payload():
         "codec_bits_per_round": codec_rows,
         "bidirectional_rounds": combo_rows,
         "tree_wire": tree_rows,
+        "serve_delta": serve_rows,
     }
 
 
@@ -238,6 +277,25 @@ def perf_payload(fast: bool = True):
         leaf_codecs=tree_leaf_codecs)
     smoke_tree["flat_steps_per_sec_same_run"] = flat_ref["steps_per_sec"]
 
+    # the replica-fleet serving row: tok/s + hot-swap latency of the
+    # committed serve spec (benchmarks/serve_fleet.py), keyed by its
+    # fingerprint like every other row.  The bitwise fleet invariant is
+    # asserted inside run_fleet, so this row only exists if every replica
+    # reconstructed the trainer's w exactly.
+    from benchmarks import serve_fleet
+
+    _, sm = serve_fleet.fleet_metrics()
+    serve_row = {
+        "spec_fingerprint": sm["fingerprint"],
+        "replicas": sm["replicas"],
+        "pushes": sm["pushes"],
+        "requests": sm["requests"],
+        "tokens": sm["tokens"],
+        "tok_per_s": round(sm["tok_per_s"], 3),
+        "swap_ms_max": round(sm["swap_ms_max"], 4),
+        "stage_ms_max": round(sm["stage_ms_max"], 4),
+    }
+
     pack_rows = {}
     for row in compressor_bench.packed_vs_dense(fast=fast):
         key = row["name"].split("/", 1)[1]
@@ -284,6 +342,7 @@ def perf_payload(fast: bool = True):
         "smoke_train_step": smoke,
         "smoke_train_step_pipelined": smoke_pipe,
         "smoke_train_step_tree": smoke_tree,
+        "serve_fleet": serve_row,
         "wire_pack_us": pack_rows,
         "kernel_hlo_bytes": kernel_hlo,
     }

@@ -1,0 +1,78 @@
+"""Replica-fleet serving benchmark: compressed delta pushes vs shipping
+full checkpoints.
+
+    PYTHONPATH=src:. python -m benchmarks.serve_fleet \
+        [--spec examples/specs/serve_delta.json] [--json]
+
+Drives :func:`repro.launch.serve.run_fleet` for a committed spec with a
+``serve`` leg: a trainer pushes versioned compressed deltas
+(``Downlink.encode_push``) while N simulated replicas decode continuously
+and hot-swap between steps.  The fleet invariant -- every replica's w
+bit-identical to the trainer's after every push -- is asserted inside the
+driver, so a wire/codec regression fails the bench rather than skewing it.
+
+Reported metrics split into the exact and the measured:
+
+* delta_bits_per_push / checkpoint_bits_per_push / push_ratio -- exact
+  envelope accounting (``wire.push_bits`` vs ``wire.checkpoint_push_bits``
+  on the model's real parameter tree), machine-independent; the
+  BENCH_bits.json `serve_delta` table records these.
+* tok_per_s, swap_ms_max, stage_ms_max -- measured on this host (a
+  trajectory within one runner class); the BENCH_perf.json `serve_fleet`
+  row records these, keyed by the spec fingerprint.
+"""
+
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import tempfile     # noqa: E402
+
+DEFAULT_SPEC = os.path.join(os.path.dirname(__file__), os.pardir,
+                            "examples", "specs", "serve_delta.json")
+
+
+def fleet_metrics(spec_path: str = DEFAULT_SPEC, *, ckpt_dir=None,
+                  quiet: bool = True):
+    """Run the fleet for a spec file; returns ``(spec, metrics)``.  A
+    temporary checkpoint directory (the replicas' resync source) is used
+    unless ``ckpt_dir`` is given."""
+    from repro.core import ExperimentSpec
+    from repro.launch.serve import run_fleet
+
+    with open(spec_path) as f:
+        spec = ExperimentSpec.from_json(f.read())
+    if ckpt_dir is not None:
+        return spec, run_fleet(spec, ckpt_dir=ckpt_dir, quiet=quiet)
+    with tempfile.TemporaryDirectory() as tmp:
+        return spec, run_fleet(spec, ckpt_dir=tmp, quiet=quiet)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--spec", default=DEFAULT_SPEC)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--json", action="store_true",
+                    help="print the metrics dict as JSON")
+    args = ap.parse_args(argv)
+
+    spec, m = fleet_metrics(args.spec, ckpt_dir=args.ckpt_dir, quiet=False)
+    if args.json:
+        print(json.dumps(m, indent=1, sort_keys=True))
+    else:
+        print(f"[serve-fleet] spec {m['fingerprint']}: "
+              f"{m['replicas']} replicas x {m['pushes']} pushes, "
+              f"{m['requests']} requests ({m['tokens']} tokens) at "
+              f"{m['tok_per_s']:.1f} tok/s")
+        print(f"[serve-fleet] delta push {m['delta_bits_per_push']} bits vs "
+              f"checkpoint {m['checkpoint_bits_per_push']} bits "
+              f"({m['push_ratio']:.3f}x); hot-swap "
+              f"{m['swap_ms_max']:.3f} ms max "
+              f"(stage {m['stage_ms_max']:.3f} ms off the serving path)")
+    return m
+
+
+if __name__ == "__main__":
+    main()

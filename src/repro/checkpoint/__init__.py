@@ -1,3 +1,4 @@
 from repro.checkpoint.npz import (  # noqa: F401
-    latest_step, restore_checkpoint, save_checkpoint, saved_spec,
+    latest_step, restore_checkpoint, restore_latest, save_checkpoint,
+    saved_spec,
 )

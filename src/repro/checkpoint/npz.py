@@ -75,6 +75,17 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def restore_latest(ckpt_dir: str, template: PyTree, *, spec=None):
+    """Restore the newest checkpoint in ``ckpt_dir`` (the serve replicas'
+    resync source): returns ``(step, tree)``, or ``None`` when the directory
+    holds no checkpoints.  ``spec`` gates identity exactly as
+    :func:`restore_checkpoint`."""
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return None
+    return step, restore_checkpoint(ckpt_dir, step, template, spec=spec)
+
+
 def saved_spec(ckpt_dir: str, step: int):
     """The ExperimentSpec embedded in a checkpoint, or None for a spec-less
     (pre-spec-era) file."""

@@ -18,5 +18,5 @@ from repro.core.theory import (  # noqa: F401
     Tuning, tune, tune_for, tune_partial,
 )
 from repro.core.spec import (  # noqa: F401
-    ExperimentSpec, Quadratic, Run, SpecError, build,
+    ExperimentSpec, Quadratic, Run, ServeSpec, SpecError, build,
 )

@@ -277,6 +277,91 @@ class Downlink:
                                    + self.lam * q).astype(wj.dtype))
         return jax.tree.unflatten(treedef, new_leaves), payloads
 
+    # ---- the serving push protocol (compressed-delta model distribution) ----
+
+    def serve_format(self, tree: PyTree, *, wire_dtype: str = "float32",
+                     rules=None):
+        """The downlink wire format of one serving push for ``tree``:
+        the flat per-leaf format of :attr:`compressor`, or -- with per-leaf
+        codec ``rules`` (wire.parse_leaf_rules) -- the pytree-native
+        :class:`repro.distributed.wire.TreeWire`.  ``push_bits(fmt)`` is
+        the exact envelope size of one delta push."""
+        from repro.distributed import wire
+        return wire.tree_format_for(self.compressor, tree,
+                                    wire_dtype=wire_dtype,
+                                    rules=tuple(rules) if rules else None)
+
+    def push_kind(self, wire_dtype: str = "float32", rules=None) -> str:
+        """'snapshot' for a lossless wire (the payload decodes to the model
+        itself and the replica ASSIGNS it -- an identity-downlink push is a
+        full checkpoint, bit-for-bit), 'delta' otherwise (the payload
+        decodes to the innovation and the replica accumulates it).
+        Per-leaf ``rules`` can re-map any leaf to a lossy codec, so a ruled
+        push is always a delta."""
+        if rules:
+            return "delta"
+        return "snapshot" if self._is_lossless(wire_dtype) else "delta"
+
+    def encode_push(self, key: Optional[Array], x: PyTree, w: PyTree, *,
+                    wire_dtype: str = "float32", rules=None
+                    ) -> Tuple[PyTree, list]:
+        """Trainer-side half of one serving push: returns ``(w_new,
+        payloads)`` -- the replicas' next shared reconstruction and the one
+        broadcast message that produces it.
+
+        The payloads are the SAME bits the in-training broadcast puts on
+        the wire (same codecs, same ``fold_in(key, j)`` leaf keys as
+        :meth:`broadcast`), and ``w_new`` is computed by APPLYING them
+        through :meth:`apply_push` -- the replica-side arithmetic -- so the
+        pusher's w and every replica's w agree bit-for-bit by construction.
+        A lossless wire ships a 'snapshot' (the model encoded absolutely,
+        decode-assigns to exactly ``x``) instead of a delta: same exact bit
+        count, and it preserves the :meth:`broadcast` invariant that a
+        lossless downlink pins ``w = x`` verbatim, which ``w + (x - w)``
+        float arithmetic would not."""
+        from repro.distributed import wire
+        fmt = self.serve_format(x, wire_dtype=wire_dtype, rules=rules)
+        leaves, treedef = jax.tree.flatten(x)
+        w_leaves = treedef.flatten_up_to(w)
+        snapshot = self.push_kind(wire_dtype, rules) == "snapshot"
+        payloads = []
+        for j, (codec, xj, wj) in enumerate(zip(fmt.leaves, leaves,
+                                                w_leaves)):
+            kj = None if key is None else jax.random.fold_in(key, j)
+            if snapshot:
+                flat = xj.astype(jnp.float32).reshape(-1)
+            else:
+                flat = (xj.astype(jnp.float32)
+                        - wj.astype(jnp.float32)).reshape(-1)
+            payloads.append(codec.encode(kj, flat))
+        w_new = self.apply_push(payloads, w, wire_dtype=wire_dtype,
+                                rules=rules)
+        return w_new, payloads
+
+    def apply_push(self, payloads, w: PyTree, *,
+                   wire_dtype: str = "float32", rules=None) -> PyTree:
+        """Replica-side half of one serving push: decode the broadcast
+        payloads and advance the local reconstruction, ``w_new = w + lam *
+        decode(payload)`` per leaf ('delta' pushes) or ``w_new =
+        decode(payload)`` verbatim ('snapshot' pushes from a lossless
+        wire).  Same arithmetic, same op order as the trainer side
+        (:meth:`broadcast` / :meth:`encode_push`), so a replica that
+        applies every push in version order reconstructs the trainer's w
+        bit-for-bit -- the property tests/test_serve_delta.py pins for
+        every zoo codec."""
+        fmt = self.serve_format(w, wire_dtype=wire_dtype, rules=rules)
+        w_leaves, treedef = jax.tree.flatten(w)
+        snapshot = self.push_kind(wire_dtype, rules) == "snapshot"
+        new_leaves = []
+        for codec, wj, p in zip(fmt.leaves, w_leaves, payloads):
+            q = codec.decode(p).reshape(wj.shape)
+            if snapshot:
+                new_leaves.append(q.astype(wj.dtype))
+            else:
+                new_leaves.append((wj.astype(jnp.float32)
+                                   + self.lam * q).astype(wj.dtype))
+        return jax.tree.unflatten(treedef, new_leaves)
+
 
 class EFBVState(NamedTuple):
     """State of Algorithm 1.

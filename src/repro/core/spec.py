@@ -62,6 +62,75 @@ def _choice(field: str, value: str, allowed: Sequence[str]) -> None:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """Parsed form of ``ExperimentSpec.serve``: the replica-fleet serving
+    leg.  The trainer's compressed downlink doubles as a model-delta
+    streaming protocol (launch/serve.py); this object sizes the simulated
+    fleet and its decode workload.
+
+    Fields (','-separated 'key:value' entries in the spec string; any
+    subset, missing keys keep the defaults below):
+
+    replicas:  serving replicas reconstructing w from delta pushes.
+    slots:     continuous-batching slots per replica (concurrent requests).
+    prompt:    prompt length per request (0 = BOS-only generation).
+    gen:       tokens generated per request.
+    max_len:   decode-cache capacity; prompt + gen must fit.
+    pushes:    delta pushes the fleet driver replays per run.
+    """
+
+    replicas: int = 2
+    slots: int = 2
+    prompt: int = 4
+    gen: int = 8
+    max_len: int = 32
+    pushes: int = 3
+
+    def __post_init__(self):
+        for f in ("replicas", "slots", "gen", "max_len", "pushes"):
+            v = getattr(self, f)
+            if not isinstance(v, int) or v <= 0:
+                raise SpecError(f"serve.{f} must be a positive int, got "
+                                f"{v!r}")
+        if not isinstance(self.prompt, int) or self.prompt < 0:
+            raise SpecError(f"serve.prompt must be an int >= 0, got "
+                            f"{self.prompt!r}")
+        if self.prompt + self.gen > self.max_len:
+            raise SpecError(
+                f"serve.prompt + serve.gen = {self.prompt + self.gen} "
+                f"overruns the decode cache (serve.max_len = {self.max_len});"
+                " shorten the request or raise max_len")
+
+    @classmethod
+    def parse(cls, s: str) -> Optional["ServeSpec"]:
+        """'' -> None; 'replicas:4,gen:16' -> ServeSpec(replicas=4, gen=16).
+        Unknown keys raise with the known field list."""
+        if not s:
+            return None
+        known = {f.name: f.default for f in dataclasses.fields(cls)}
+        kw: dict = {}
+        for entry in s.split(","):
+            entry = entry.strip()
+            if not entry:
+                continue
+            if ":" not in entry:
+                raise SpecError(f"serve entry {entry!r} is not 'key:value'")
+            key, val = entry.split(":", 1)
+            key = key.strip().replace("-", "_")
+            if key not in known:
+                raise SpecError(f"unknown serve field {key!r}; known: "
+                                f"{sorted(known)}")
+            if key in kw:
+                raise SpecError(f"serve field {key!r} given twice")
+            try:
+                kw[key] = int(val)
+            except ValueError:
+                raise SpecError(f"serve.{key} wants an int, got "
+                                f"{val!r}") from None
+        return cls(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
     """The full experiment, as data.  Frozen + hashable (jit-static safe);
     every field is a JSON scalar so ``to_json`` / ``from_json`` round-trip
@@ -114,6 +183,14 @@ class ExperimentSpec:
                    product for trainer backends).
     d:             problem dimension; also the dimension the compression
                    constants (eta, omega) are certified at for auto-tuning.
+    serve:         replica-fleet serving leg: ','-separated 'key:value'
+                   sizing of the simulated fleet fed by the compressed
+                   downlink (see :class:`ServeSpec`), e.g.
+                   'replicas:4,slots:2,prompt:4,gen:8'.  '' = no serving
+                   leg (and the field serializes only when set, so every
+                   pre-existing fingerprint is unchanged).  Model-arch
+                   problems only -- the built-in convex problems have no
+                   decode loop.
     steps:         rounds to run.
     gamma:         stepsize; 0.0 = auto-tune from the theory (Remark 1,
                    built-in problems only).
@@ -138,6 +215,7 @@ class ExperimentSpec:
     seed: int = 0
     pipeline: str = "off"
     leaf_codecs: str = ""
+    serve: str = ""
 
     # ---- validation --------------------------------------------------------
 
@@ -190,6 +268,14 @@ class ExperimentSpec:
             from repro.distributed import wire
             wire.parse_leaf_rules(self.leaf_codecs)  # raises on a bad rule
 
+        if self.serve:
+            ServeSpec.parse(self.serve)  # raises on a bad serve string
+            if self.problem in REFERENCE_PROBLEMS:
+                raise SpecError(
+                    "spec.serve sizes the model-serving fleet; the built-in "
+                    f"problems {REFERENCE_PROBLEMS} have no decode loop -- "
+                    "set problem to a model arch")
+
         part = Participation.parse(self.participation)
         if part.kind == "fixed" and part.s > self.n:
             raise SpecError(f"participation 'fixed:{part.s}' needs at least "
@@ -241,6 +327,10 @@ class ExperimentSpec:
         return tuple(s.strip() for s in self.compressor.split(";")
                      if s.strip())
 
+    def serve_spec(self) -> Optional["ServeSpec"]:
+        """The parsed serving leg (None when ``serve`` is unset)."""
+        return ServeSpec.parse(self.serve)
+
     def mesh_dims(self) -> Tuple[int, ...]:
         try:
             return tuple(int(x) for x in self.mesh.split("x"))
@@ -266,6 +356,8 @@ class ExperimentSpec:
             del d["pipeline"]
         if self.leaf_codecs == "":
             del d["leaf_codecs"]
+        if self.serve == "":
+            del d["serve"]
         return d
 
     def to_json(self, indent: Optional[int] = 1) -> str:

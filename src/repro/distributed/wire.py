@@ -635,6 +635,66 @@ def fleet_bits_per_round(fmts: Sequence["WireFormat"],
         f.bits_per_round() for f, mi in zip(fmts, m) if mi > 0)
 
 
+# ---------------------------------------------------------------------------
+# the serving downlink: versioned compressed-delta push envelopes
+# ---------------------------------------------------------------------------
+
+#: exact header bits of one versioned push envelope: two unsigned 64-bit
+#: version fields (``version`` of the w this push produces, ``base_version``
+#: of the w it must be applied to) -- the only metadata the replica protocol
+#: needs beyond the payload itself.
+PUSH_HEADER_BITS = 2 * 64
+
+#: envelope kinds: a ``delta`` decodes to the model INNOVATION (the replica
+#: applies w + lam * decode, the trainer-side Downlink arithmetic verbatim);
+#: a ``snapshot`` decodes to the model itself (the replica assigns it --
+#: lossless downlinks ship snapshots, which is what makes an identity-
+#: downlink push bit-equal to a full checkpoint load).
+PUSH_KINDS = ("delta", "snapshot")
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaEnvelope:
+    """One versioned model push on the serving downlink.
+
+    ``payloads`` is the per-leaf wire payload list of ONE broadcast message
+    (exactly what :meth:`repro.core.efbv.Downlink.encode_push` emits and
+    :meth:`~repro.core.efbv.Downlink.apply_push` consumes);
+    :func:`payload_bytes` of it equals ``push_bits(fmt) / 8`` minus the
+    header, exactly.  ``version`` is the model version the push produces,
+    ``base_version`` the replica-side w it must be applied to -- a replica
+    at any other version MUST refuse the push (stale or gapped) and resync
+    from a checkpoint instead of silently drifting.
+    """
+
+    version: int
+    base_version: int
+    payloads: Any
+    kind: str = "delta"
+
+    def __post_init__(self):
+        if self.kind not in PUSH_KINDS:
+            raise ValueError(f"push kind {self.kind!r} not in {PUSH_KINDS}")
+        if self.version <= self.base_version:
+            raise ValueError(
+                f"push version {self.version} must advance past its base "
+                f"{self.base_version} (versions are strictly monotonic)")
+
+
+def push_bits(fmt: "WireFormat") -> int:
+    """Exact bits of one versioned delta push: the envelope header plus the
+    ONE broadcast message of the downlink wire format (no n or |S_t|
+    factor -- every replica decodes the same push)."""
+    return PUSH_HEADER_BITS + fmt.downlink_bits_per_round()
+
+
+def checkpoint_push_bits(fmt: "WireFormat") -> int:
+    """Exact bits of shipping a FULL fp32 checkpoint of the same tree under
+    the same envelope header -- the baseline a delta push is measured
+    against (BENCH_bits ``serve_delta`` rows)."""
+    return PUSH_HEADER_BITS + fmt.dense_bits()
+
+
 def clamp_for_leaf(compressor, size: int):
     """Clamp a compressor's selection counts to one leaf's size.
 

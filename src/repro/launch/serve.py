@@ -1,23 +1,490 @@
-"""Batched serving driver: greedy decode with a KV (or SSM-state) cache.
+"""Compressed-delta serving: replicas fed by the EF-BV downlink.
 
-Example (CPU, reduced config):
+The trainer's downlink control variate ``w`` (core.efbv.Downlink) is the
+workers' shared reconstruction of the model -- which is exactly what a
+serving replica needs.  This module turns that observation into a
+production-shaped subsystem:
+
+:class:`DeltaPusher`    trainer side: monotonically versioned compressed
+                        pushes (``Downlink.encode_push``) + a checkpoint
+                        per version as the replicas' resync source.
+:class:`ServeReplica`   replica side: local ``w`` advanced by
+                        ``Downlink.apply_push`` (same codecs, same fold
+                        keys as the in-training broadcast, so replica w ==
+                        trainer w bit-for-bit), versioned hot-swap (stage
+                        the next model into a shadow while the current one
+                        serves; atomic swap between decode steps), stale /
+                        out-of-order rejection with checkpoint resync.
+:class:`DecodeEngine`   continuous batching: requests admitted / retired
+                        per decode step from a queue over a fixed set of
+                        cache slots (vmapped per-slot decode), instead of
+                        the fixed ``(B, prompt)`` block.
+:func:`run_fleet`       simulated many-replica fleet driver for an
+                        ExperimentSpec with a ``serve`` leg (the
+                        benchmarks/serve_fleet.py entry point).
+
+CLI (the original single-model greedy-decode contract, now running on the
+continuous-batching engine):
 
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --smoke \
         --batch 4 --prompt-len 16 --gen 32
+
+or a replica-fleet run from a spec file with a ``serve`` field:
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --spec examples/specs/serve_delta.json
 """
 
 from __future__ import annotations
 
 import argparse
+import collections
+import dataclasses
 import time
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.core.efbv import Downlink, downlink_key
+from repro.distributed.wire import DeltaEnvelope, checkpoint_push_bits, push_bits
 from repro.models import build_model
 
+PyTree = Any
+
+
+# -----------------------------------------------------------------------------
+# continuous batching
+# -----------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    """One decode request: ``prompt`` then ``gen`` greedy tokens.
+
+    ``out`` collects the generated ids; ``versions[i]`` is the model
+    version (the tag passed to :meth:`DecodeEngine.step`) that produced
+    ``out[i]`` -- the hot-swap atomicity evidence."""
+
+    rid: int
+    prompt: np.ndarray
+    gen: int
+    frames: Optional[np.ndarray] = None
+    out: List[int] = dataclasses.field(default_factory=list)
+    versions: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    @property
+    def total_steps(self) -> int:
+        return len(self.prompt) + self.gen
+
+
+class DecodeEngine:
+    """Greedy decode over ``slots`` independent cache lanes with per-step
+    admission/retirement.
+
+    The cache batch axis (axis 1 in every cache leaf, all model families)
+    is the slot axis; the decode step is ``jax.vmap`` of the model's
+    single-sequence step over it, so each lane advances with its own
+    position and its own token stream.  Per-lane independence is what makes
+    continuous batching equal fixed batching token-for-token (pinned by
+    tests/test_serve_delta.py): a request decodes the same ids whether its
+    neighbours are mid-prompt, retired, or empty.
+
+    Token semantics (identical to the original fixed-block driver): the
+    input at position p is ``prompt[p]`` while p < len(prompt), else the
+    previous output (a BOS-style 0 for an empty prompt at p=0); the ids
+    collected as output are the outputs of positions [len(prompt),
+    len(prompt) + gen).
+    """
+
+    def __init__(self, model, *, slots: int, max_len: int):
+        if slots <= 0:
+            raise ValueError(f"need at least one slot, got {slots}")
+        self.model = model
+        self.cfg = model.cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.cache = model.init_cache(slots, max_len)
+        self.pos = np.zeros(slots, np.int64)
+        self.last_tok = np.zeros(slots, np.int64)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.queue: collections.deque = collections.deque()
+        self.finished: List[Request] = []
+        self.tokens_decoded = 0
+        self._next_rid = 0
+
+        def slot_step(params, cache_slot, token, pos):
+            # one lane: re-add the size-1 batch axis the vmap stripped
+            cache1 = jax.tree.map(lambda a: a[:, None], cache_slot)
+            logits, cache1 = model.decode_step(
+                params, cache1, token[None, None].astype(jnp.int32),
+                pos.astype(jnp.int32))
+            nxt = jnp.argmax(logits[0, -1], axis=-1).astype(jnp.int32)
+            return nxt, jax.tree.map(lambda a: a[:, 0], cache1)
+
+        self._step = jax.jit(jax.vmap(slot_step, in_axes=(None, 1, 0, 0),
+                                      out_axes=(0, 1)))
+
+    # ---- request lifecycle -------------------------------------------------
+
+    def submit(self, prompt, gen: int, *, frames=None) -> Request:
+        prompt = np.asarray(prompt, np.int64).reshape(-1)
+        if len(prompt) + gen > self.max_len:
+            raise ValueError(
+                f"request needs {len(prompt)} prompt + {gen} generated = "
+                f"{len(prompt) + gen} positions but the decode cache holds "
+                f"{self.max_len}; shorten the request or build the engine "
+                "with a larger max_len")
+        req = Request(rid=self._next_rid, prompt=prompt, gen=int(gen),
+                      frames=None if frames is None else np.asarray(frames))
+        self._next_rid += 1
+        self.queue.append(req)
+        return req
+
+    def _admit(self, params) -> None:
+        for s in range(self.slots):
+            if self.active[s] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            self.active[s] = req
+            self.pos[s] = 0
+            self.last_tok[s] = 0
+            # a fresh lane: SSM state is cumulative, so the slot's cache
+            # column must be zeroed, not just overwritten lazily
+            self.cache = jax.tree.map(lambda a: a.at[:, s].set(0), self.cache)
+            if req.frames is not None:
+                c1 = self.model.init_cache(1, self.max_len)
+                c1 = self.model.encode_cross_cache(params, req.frames[None],
+                                                   c1)
+                for k in ("cross_k", "cross_v"):
+                    self.cache[k] = self.cache[k].at[:, s].set(c1[k][:, 0])
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(r is None for r in self.active)
+
+    # ---- one decode step ---------------------------------------------------
+
+    def step(self, params, *, version: int = -1) -> int:
+        """Admit what fits, advance every lane one token, retire finished
+        requests.  ``version`` tags the tokens this step emits (the model
+        version serving them).  Returns the number of request tokens
+        decoded (prompt and generated; idle lanes don't count)."""
+        self._admit(params)
+        toks = np.zeros(self.slots, np.int32)
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            p = self.pos[s]
+            toks[s] = req.prompt[p] if p < len(req.prompt) else \
+                self.last_tok[s]
+        out, self.cache = self._step(params, self.cache, jnp.asarray(toks),
+                                     jnp.asarray(self.pos, jnp.int32))
+        out = np.asarray(out)
+        decoded = 0
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            decoded += 1
+            p = int(self.pos[s])
+            if p >= len(req.prompt):
+                req.out.append(int(out[s]))
+                req.versions.append(version)
+            self.last_tok[s] = int(out[s])
+            self.pos[s] = p + 1
+            if p + 1 == req.total_steps:
+                req.done = True
+                self.finished.append(req)
+                self.active[s] = None
+        self.tokens_decoded += decoded
+        return decoded
+
+    def run(self, params, *, version: int = -1) -> int:
+        """Drain queue + lanes to completion; returns tokens decoded."""
+        n = 0
+        while not self.idle:
+            n += self.step(params, version=version)
+        return n
+
+
+# -----------------------------------------------------------------------------
+# the versioned push protocol
+# -----------------------------------------------------------------------------
+
+def push_key(key, version: int):
+    """The per-push broadcast key: the SAME derivation as training round
+    ``version`` (fold the round index, then the downlink domain), so a
+    serving push and the in-training broadcast of that round put identical
+    payload bits on the wire."""
+    return downlink_key(jax.random.fold_in(key, version))
+
+
+class DeltaPusher:
+    """Trainer-side push source: holds the fleet's shared reconstruction
+    ``w``, emits strictly versioned :class:`DeltaEnvelope`s, and saves one
+    checkpoint of ``w`` per version as the replicas' resync source."""
+
+    def __init__(self, downlink: Downlink, params0: PyTree, *, key,
+                 wire_dtype: str = "float32", rules=None,
+                 ckpt_dir: Optional[str] = None, spec=None):
+        self.downlink = downlink
+        self.wire_dtype = wire_dtype
+        self.rules = rules
+        self.key = key
+        self.ckpt_dir = ckpt_dir
+        self.spec = spec
+        self.version = 0
+        self.w = downlink.init(params0)
+        if ckpt_dir is not None:
+            from repro.checkpoint import save_checkpoint
+            save_checkpoint(ckpt_dir, 0, self.w, spec=spec)
+
+    def push(self, x: PyTree) -> DeltaEnvelope:
+        """Compress ``x - w`` (or a lossless snapshot of ``x``) into the
+        next versioned envelope and advance ``w`` exactly as every replica
+        will."""
+        v = self.version + 1
+        self.w, payloads = self.downlink.encode_push(
+            push_key(self.key, v), x, self.w, wire_dtype=self.wire_dtype,
+            rules=self.rules)
+        env = DeltaEnvelope(
+            version=v, base_version=self.version, payloads=payloads,
+            kind=self.downlink.push_kind(self.wire_dtype, self.rules))
+        self.version = v
+        if self.ckpt_dir is not None:
+            from repro.checkpoint import save_checkpoint
+            save_checkpoint(self.ckpt_dir, v, self.w, spec=self.spec)
+        return env
+
+
+class ServeReplica:
+    """One serving replica: local reconstruction ``w`` + versioned
+    hot-swap.
+
+    A push is first *staged* -- decoded into a shadow copy while the
+    current model keeps serving -- then *committed*: an atomic rebind of
+    ``(version, params)`` between decode steps, so every token is produced
+    by exactly one version.  Version checks are strict: a push at or below
+    the replica's version is rejected as stale (re-delivery is idempotent),
+    and a delta whose ``base_version`` is not the replica's version is a
+    gap -- the replica resyncs from the newest checkpoint (the pusher
+    writes one per version, so resync re-pins ``w`` bit-for-bit) and then
+    re-chains the push if it still applies.  Snapshot pushes (lossless
+    wire) assign absolutely, so they repair any gap by themselves.
+    """
+
+    def __init__(self, downlink: Downlink, params0: PyTree, *,
+                 wire_dtype: str = "float32", rules=None,
+                 ckpt_dir: Optional[str] = None, spec=None,
+                 version: int = 0):
+        self.downlink = downlink
+        self.wire_dtype = wire_dtype
+        self.rules = rules
+        self.ckpt_dir = ckpt_dir
+        self.spec = spec
+        self.version = version
+        self.params = jax.tree.map(jnp.asarray, params0)
+        self._shadow: Optional[tuple] = None
+        self.stage_s: List[float] = []
+        self.swap_s: List[float] = []
+        self.resyncs = 0
+
+    # ---- two-phase hot-swap ------------------------------------------------
+
+    def stage(self, env: DeltaEnvelope) -> str:
+        """Decode a push into the shadow (the current model keeps serving).
+        Returns 'staged' | 'stale' | 'gap'."""
+        if env.version <= self.version:
+            return "stale"
+        if env.kind == "delta" and env.base_version != self.version:
+            return "gap"
+        t0 = time.perf_counter()
+        w_new = self.downlink.apply_push(env.payloads, self.params,
+                                         wire_dtype=self.wire_dtype,
+                                         rules=self.rules)
+        w_new = jax.block_until_ready(w_new)
+        self.stage_s.append(time.perf_counter() - t0)
+        self._shadow = (env.version, w_new)
+        return "staged"
+
+    def commit(self) -> bool:
+        """Swap the staged model in (between decode steps): one atomic
+        rebind, nothing to decode on the serving path."""
+        if self._shadow is None:
+            return False
+        t0 = time.perf_counter()
+        self.version, self.params = self._shadow
+        self._shadow = None
+        self.swap_s.append(time.perf_counter() - t0)
+        return True
+
+    # ---- resync ------------------------------------------------------------
+
+    def resync(self) -> int:
+        """Re-pin from the newest checkpoint (bit-for-bit: the pusher
+        checkpoints its ``w`` per version).  Stages the restored model;
+        commit applies it."""
+        if self.ckpt_dir is None:
+            raise RuntimeError(
+                "replica hit a version gap but has no ckpt_dir to resync "
+                "from; construct ServeReplica(..., ckpt_dir=...) or ship "
+                "snapshot pushes")
+        from repro.checkpoint import restore_latest
+        got = restore_latest(self.ckpt_dir, self.params, spec=self.spec)
+        if got is None:
+            raise RuntimeError(f"no checkpoint to resync from in "
+                               f"{self.ckpt_dir!r}")
+        step, params = got
+        self.resyncs += 1
+        self._shadow = (step, jax.tree.map(jnp.asarray, params))
+        return step
+
+    def push(self, env: DeltaEnvelope) -> str:
+        """Stage + commit in one call (the fleet driver's path when no
+        decode is in flight).  Returns 'applied' | 'stale' | 'resync'."""
+        st = self.stage(env)
+        if st == "staged":
+            self.commit()
+            return "applied"
+        if st == "gap":
+            self.resync()
+            self.commit()
+            if self.stage(env) == "staged":  # push chains onto the restore
+                self.commit()
+            return "resync"
+        return st
+
+
+# -----------------------------------------------------------------------------
+# the simulated replica fleet
+# -----------------------------------------------------------------------------
+
+def _train_move(x: PyTree, key) -> PyTree:
+    """One simulated training update (deterministic in ``key``): a small
+    per-leaf perturbation standing in for an optimizer step, so the fleet
+    driver exercises real non-zero deltas without a training loop."""
+    leaves, treedef = jax.tree.flatten(x)
+    new = []
+    for j, leaf in enumerate(leaves):
+        kj = jax.random.fold_in(key, j)
+        step = 0.01 * jax.random.normal(kj, leaf.shape, jnp.float32)
+        new.append((leaf.astype(jnp.float32) + step).astype(leaf.dtype))
+    return jax.tree.unflatten(treedef, new)
+
+
+def run_fleet(spec, *, ckpt_dir: Optional[str] = None,
+              quiet: bool = False) -> dict:
+    """Drive a simulated replica fleet for ``spec`` (an ExperimentSpec with
+    a ``serve`` leg): trainer pushes ``serve.pushes`` compressed deltas
+    while every replica continuously decodes, hot-swapping between decode
+    steps.  Asserts the fleet invariant -- every replica's w bit-identical
+    to the trainer's w after every push -- and returns the bits / tok/s /
+    swap-latency metrics the CI bench records."""
+    from repro.core.spec import SpecError
+
+    sv = spec.serve_spec()
+    if sv is None:
+        raise SpecError("run_fleet needs a spec with a serve leg (e.g. "
+                        "serve='replicas:2,slots:2,prompt:4,gen:8')")
+    cfg = (get_smoke_config(spec.problem) if spec.smoke
+           else get_config(spec.problem))
+    model = build_model(cfg)
+
+    root = jax.random.key(spec.seed)
+    k_params, k_prompt, k_train = jax.random.split(root, 3)
+    params = model.init(k_params)
+
+    downlink = Downlink.parse(spec.downlink) or Downlink.parse("identity")
+    rules = None
+    if spec.leaf_codecs:
+        from repro.distributed import wire
+        rules = wire.parse_leaf_rules(spec.leaf_codecs)
+
+    pusher = DeltaPusher(downlink, params, key=root,
+                         wire_dtype=spec.wire_dtype, rules=rules,
+                         ckpt_dir=ckpt_dir, spec=spec)
+    replicas = [ServeReplica(downlink, pusher.w, wire_dtype=spec.wire_dtype,
+                             rules=rules, ckpt_dir=ckpt_dir, spec=spec)
+                for _ in range(sv.replicas)]
+    engines = [DecodeEngine(model, slots=sv.slots, max_len=sv.max_len)
+               for _ in range(sv.replicas)]
+    for r, eng in enumerate(engines):
+        for q in range(2 * sv.slots):  # 2 waves: admission mid-flight
+            kq = jax.random.fold_in(k_prompt, r * 1000 + q)
+            prompt = np.asarray(
+                jax.random.randint(kq, (sv.prompt,), 0, cfg.vocab))
+            eng.submit(prompt, sv.gen)
+
+    # exact per-push wire accounting (the envelope, header included)
+    fmt = downlink.serve_format(params, wire_dtype=spec.wire_dtype,
+                                rules=rules)
+    delta_bits = push_bits(fmt)
+    ckpt_bits = checkpoint_push_bits(fmt)
+
+    x = pusher.w
+    steps_per_phase = max(1, (2 * sv.slots * (sv.prompt + sv.gen))
+                          // (sv.pushes * max(1, sv.slots)))
+    t0 = time.perf_counter()
+    for v in range(1, sv.pushes + 1):
+        x = _train_move(x, jax.random.fold_in(k_train, v))
+        env = pusher.push(x)
+        for rep, eng in zip(replicas, engines):
+            st = rep.stage(env)
+            assert st == "staged", st
+            for _ in range(steps_per_phase):  # old version keeps serving
+                if eng.idle:
+                    break
+                eng.step(rep.params, version=rep.version)
+            rep.commit()
+        _assert_fleet_pinned(pusher, replicas)
+    for rep, eng in zip(replicas, engines):
+        eng.run(rep.params, version=rep.version)
+    wall_s = time.perf_counter() - t0
+
+    tokens = sum(eng.tokens_decoded for eng in engines)
+    swaps = [s for rep in replicas for s in rep.swap_s]
+    stages = [s for rep in replicas for s in rep.stage_s]
+    metrics = {
+        "fingerprint": spec.fingerprint(),
+        "replicas": sv.replicas,
+        "pushes": sv.pushes,
+        "requests": sum(len(eng.finished) for eng in engines),
+        "tokens": tokens,
+        "tok_per_s": tokens / max(wall_s, 1e-9),
+        "delta_bits_per_push": delta_bits,
+        "checkpoint_bits_per_push": ckpt_bits,
+        "push_ratio": delta_bits / ckpt_bits,
+        "swap_ms_max": 1e3 * max(swaps, default=0.0),
+        "stage_ms_max": 1e3 * max(stages, default=0.0),
+    }
+    if not quiet:
+        print(f"[serve-fleet] arch={cfg.name} replicas={sv.replicas} "
+              f"pushes={sv.pushes}: {metrics['tok_per_s']:.1f} tok/s, "
+              f"delta {delta_bits} vs checkpoint {ckpt_bits} bits/push "
+              f"({metrics['push_ratio']:.3f}x), swap "
+              f"{metrics['swap_ms_max']:.3f} ms max")
+    return metrics
+
+
+def _assert_fleet_pinned(pusher: DeltaPusher, replicas) -> None:
+    """The whole point: every replica's w bit-identical to the trainer's."""
+    want = jax.tree.leaves(pusher.w)
+    for r, rep in enumerate(replicas):
+        if rep.version != pusher.version:
+            raise AssertionError(f"replica {r} at version {rep.version}, "
+                                 f"trainer at {pusher.version}")
+        for j, (a, b) in enumerate(zip(jax.tree.leaves(rep.params), want)):
+            if not np.array_equal(np.asarray(a), np.asarray(b)):
+                raise AssertionError(
+                    f"replica {r} leaf {j} diverged from the trainer's w "
+                    f"at version {pusher.version}")
+
+
+# -----------------------------------------------------------------------------
+# CLI
+# -----------------------------------------------------------------------------
 
 def parse_args(argv=None):
     ap = argparse.ArgumentParser()
@@ -28,43 +495,55 @@ def parse_args(argv=None):
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
-    return ap.parse_args(argv)
+    ap.add_argument("--spec", default=None, metavar="SPEC_JSON",
+                    help="run the replica-fleet driver for this spec file "
+                         "(needs a 'serve' field) instead of the "
+                         "single-model decode")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="fleet mode: checkpoint directory for the "
+                         "per-version resync source")
+    args = ap.parse_args(argv)
+    if args.prompt_len + args.gen > args.max_len:
+        ap.error(
+            f"--prompt-len {args.prompt_len} + --gen {args.gen} = "
+            f"{args.prompt_len + args.gen} tokens would overrun the decode "
+            f"cache (--max-len {args.max_len}); shorten the request or "
+            "raise --max-len")
+    return args
 
 
 def main(argv=None):
     args = parse_args(argv)
+
+    if args.spec is not None:
+        from repro.core.spec import ExperimentSpec
+        with open(args.spec) as f:
+            spec = ExperimentSpec.from_json(f.read())
+        return run_fleet(spec, ckpt_dir=args.ckpt_dir)
+
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
-    key = jax.random.key(args.seed)
-    params = model.init(key)
+    # independent streams for params vs data (one shared key would correlate
+    # the random prompts with the random init)
+    k_params, k_prompt, k_frames = jax.random.split(
+        jax.random.key(args.seed), 3)
+    params = model.init(k_params)
     B = args.batch
 
-    prompts = jax.random.randint(key, (B, args.prompt_len), 0, cfg.vocab)
-    cache = model.init_cache(B, args.max_len)
+    prompts = jax.random.randint(k_prompt, (B, args.prompt_len), 0, cfg.vocab)
+    frames = None
     if cfg.family == "encdec":
-        frames = jax.random.normal(key, (B, cfg.encoder_frames, cfg.d_model)) * 0.1
-        cache = model.encode_cross_cache(params, frames, cache)
+        frames = jax.random.normal(
+            k_frames, (B, cfg.encoder_frames, cfg.d_model)) * 0.1
 
-    @jax.jit
-    def step(params, cache, token, pos):
-        logits, cache = model.decode_step(params, cache, token, pos)
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        return nxt, cache
-
-    # prefill via teacher-forced decode (exercises the same serve_step the
-    # dry-run lowers; a production deployment would use model.prefill + cache).
-    # An empty prompt (--prompt-len 0) skips prefill and generates from a
-    # BOS-style zero token.
-    tok = jnp.zeros((B, 1), jnp.int32)
+    engine = DecodeEngine(model, slots=B, max_len=args.max_len)
+    reqs = [engine.submit(np.asarray(prompts[i]), args.gen,
+                          frames=None if frames is None else frames[i])
+            for i in range(B)]
     t0 = time.time()
-    for t in range(args.prompt_len):
-        tok, cache = step(params, cache, prompts[:, t:t + 1], jnp.int32(t))
-    generated = []
-    for t in range(args.prompt_len, args.prompt_len + args.gen):
-        tok, cache = step(params, cache, tok, jnp.int32(t))
-        generated.append(np.asarray(tok[:, 0]))
+    engine.run(params)
     dt = time.time() - t0
-    gen = np.stack(generated, 1)
+    gen = np.stack([np.asarray(r.out, np.int64) for r in reqs], 0)
     total_tokens = B * (args.prompt_len + args.gen)
     print(f"[serve] arch={cfg.name} batch={B} prompt={args.prompt_len} "
           f"gen={args.gen}: {total_tokens / dt:.1f} tok/s (CPU)")

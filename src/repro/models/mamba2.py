@@ -181,7 +181,12 @@ def mamba2_decode(p, x: Array, cache: Dict[str, Array], *, d_inner: int,
     xin = xt @ p["wx"].astype(x.dtype)
     Bm = xt @ p["wB"].astype(x.dtype)
     Cm = xt @ p["wC"].astype(x.dtype)
-    dt = jax.nn.softplus((xt @ p["wdt"].astype(x.dtype)).astype(jnp.float32)
+    # the dt projection runs in f32 end-to-end: the narrow (d, H) bf16
+    # matmul is the one op whose accumulation order varies with the lowered
+    # batch size, and dt feeds the state recurrence, so a bf16 dot here
+    # would break the serve engine's vmapped-per-slot == batched bitwise
+    # decode invariant (dt is consumed in f32 anyway)
+    dt = jax.nn.softplus(xt.astype(jnp.float32) @ p["wdt"]
                          + p["dt_bias"])  # (B,H)
 
     conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)  # (B, C)
@@ -197,7 +202,12 @@ def mamba2_decode(p, x: Array, cache: Dict[str, Array], *, d_inner: int,
     A = -jnp.exp(p["A_log"])  # (H,)
     decay = jnp.exp(dt * A)  # (B,H)
     xh = xin.reshape(B, n_heads, hp).astype(jnp.float32)
-    upd = jnp.einsum("bs,bhp,bh->bhsp", Bm.astype(jnp.float32), xh, dt)
+    # explicit broadcast product, NOT a 3-operand einsum: einsum's pairwise
+    # association order varies with the lowered batch size, which would make
+    # the state drift in the last ulp between a vmapped per-slot decode and
+    # the plain batched one (the serve engine needs them bit-identical)
+    upd = (Bm.astype(jnp.float32)[:, None, :, None]
+           * xh[:, :, None, :] * dt[:, :, None, None])
     state = decay[:, :, None, None] * cache["state"] + upd
     y = jnp.einsum("bs,bhsp->bhp", Cm.astype(jnp.float32), state)
     y = y + p["D"][None, :, None] * xh

@@ -1,0 +1,408 @@
+"""The replica-fleet differential suite for compressed-delta serving.
+
+The claim under test (launch/serve.py + Downlink.encode_push/apply_push):
+N serving replicas that apply the trainer's versioned compressed pushes
+reconstruct the trainer's downlink control variate w BIT-FOR-BIT -- for
+every zoo codec, every wire dtype, the per-leaf TreeWire path, across
+multi-push trajectories, through dropped pushes (version gap -> checkpoint
+resync), and without ever serving a token from a half-applied model
+(hot-swap atomicity).  Plus: continuous-batching decode == fixed-batch
+decode token-for-token, and the exact envelope bits accounting.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ExperimentSpec, make_compressor
+from repro.core.efbv import Downlink
+from repro.distributed import wire
+from repro.distributed.wire import (DeltaEnvelope, PUSH_HEADER_BITS,
+                                    checkpoint_push_bits, push_bits)
+from repro.launch.serve import (DecodeEngine, DeltaPusher, ServeReplica,
+                                push_key, run_fleet)
+
+from test_wire_codecs import ZOO
+
+D = 96
+N_REPLICAS = 3
+N_PUSHES = 5
+
+
+def _trajectory(key, t):
+    """The trainer's model at push t: deterministic, non-trivial deltas."""
+    return jax.random.normal(jax.random.fold_in(key, t), (D,))
+
+
+def _tree_trajectory(key, t):
+    k = jax.random.fold_in(key, t)
+    return {
+        "embed": jax.random.normal(jax.random.fold_in(k, 0), (8, 16)),
+        "layers": {"w": jax.random.normal(jax.random.fold_in(k, 1), (4, 4)),
+                   "norm": jax.random.normal(jax.random.fold_in(k, 2), (4,))},
+    }
+
+
+def _push_trajectory(downlink, make_x, *, wire_dtype="float32", rules=None,
+                     pushes=N_PUSHES, replicas=N_REPLICAS, seed=0):
+    """Run a multi-push trajectory; assert every replica bit-identical to
+    the trainer after every push.  Returns the final (pusher, replicas)."""
+    key = jax.random.key(seed)
+    x0 = make_x(key, 0)
+    pusher = DeltaPusher(downlink, x0, key=key, wire_dtype=wire_dtype,
+                         rules=rules)
+    reps = [ServeReplica(downlink, pusher.w, wire_dtype=wire_dtype,
+                         rules=rules) for _ in range(replicas)]
+    for t in range(1, pushes + 1):
+        env = pusher.push(make_x(key, t))
+        for rep in reps:
+            assert rep.push(env) == "applied"
+        want = jax.tree.leaves(pusher.w)
+        for r, rep in enumerate(reps):
+            assert rep.version == pusher.version == t
+            for a, b in zip(jax.tree.leaves(rep.params), want):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"replica {r} diverged at push {t}")
+    return pusher, reps
+
+
+# -----------------------------------------------------------------------------
+# bit-identity across the whole zoo
+# -----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,comp", ZOO, ids=[n for n, _ in ZOO])
+def test_replicas_bit_identical_every_zoo_codec(name, comp):
+    """N replicas == trainer w bitwise over a multi-push trajectory, for
+    every registered downlink codec."""
+    _push_trajectory(Downlink(compressor=comp, lam=1.0), _trajectory,
+                     seed=hash(name) % (2 ** 31))
+
+
+_SCALED = [z for z in ZOO if z[0] in ("topk", "qsgd", "sign")]
+
+
+@pytest.mark.parametrize("name,comp", _SCALED, ids=[n for n, _ in _SCALED])
+def test_replicas_bit_identical_scaled_downlink(name, comp):
+    """The downlink scaling lam != 1 goes through the same replica
+    arithmetic (w + lam * q on both sides)."""
+    _push_trajectory(Downlink(compressor=comp, lam=0.5), _trajectory)
+
+
+@pytest.mark.parametrize("spec", ["topk:7", "qsgd:16", "block_topk:16,4",
+                                  "natural"])
+def test_replicas_bit_identical_bf16_wire(spec):
+    """bf16 wire values: encode/decode is still deterministic, so replicas
+    still pin bitwise (the reconstruction just quantizes differently)."""
+    _push_trajectory(Downlink(compressor=make_compressor(spec)),
+                     _trajectory, wire_dtype="bfloat16")
+
+
+@pytest.mark.parametrize("wire_dtype", ["float32", "bfloat16"])
+def test_replicas_bit_identical_tree_rules(wire_dtype):
+    """The pytree/TreeWire per-leaf path: per-leaf codec rules route each
+    leaf through its own codec; replicas apply the same rules and pin."""
+    rules = wire.parse_leaf_rules("*embed*=qsgd:16;*norm*=identity")
+    _push_trajectory(Downlink(compressor=make_compressor("block_topk:16,4")),
+                     _tree_trajectory, rules=rules, wire_dtype=wire_dtype)
+
+
+def test_push_payloads_equal_training_broadcast():
+    """A serving push puts the SAME bits on the wire as the in-training
+    broadcast of that round (same codecs, same fold keys): the protocol
+    reuses the downlink, it does not reimplement it."""
+    dl = Downlink(compressor=make_compressor("qsgd:16"))
+    key = jax.random.key(3)
+    x, w = _trajectory(key, 1), _trajectory(key, 0)
+    k1 = push_key(key, 1)
+    w_push, payloads = dl.encode_push(k1, x, w)
+    w_bcast, bcast_payloads = dl.broadcast(k1, x, w)
+    for a, b in zip(jax.tree.leaves(payloads),
+                    jax.tree.leaves(bcast_payloads)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(w_push), jax.tree.leaves(w_bcast)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -----------------------------------------------------------------------------
+# versioning: stale, gap, resync
+# -----------------------------------------------------------------------------
+
+def test_stale_and_out_of_order_pushes_rejected():
+    dl = Downlink(compressor=make_compressor("topk:7"))
+    key = jax.random.key(0)
+    pusher = DeltaPusher(dl, _trajectory(key, 0), key=key)
+    rep = ServeReplica(dl, pusher.w)
+    env1 = pusher.push(_trajectory(key, 1))
+    env2 = pusher.push(_trajectory(key, 2))
+    assert rep.push(env1) == "applied"
+    assert rep.push(env2) == "applied"
+    before = [np.asarray(l).copy() for l in jax.tree.leaves(rep.params)]
+    # re-delivery of the current version and an older version: both stale,
+    # both leave the replica byte-identical (idempotent delivery)
+    assert rep.push(env2) == "stale"
+    assert rep.push(env1) == "stale"
+    assert rep.version == 2
+    for a, b in zip(jax.tree.leaves(rep.params), before):
+        np.testing.assert_array_equal(np.asarray(a), b)
+
+
+def test_dropped_push_gap_resyncs_bitwise_from_checkpoint(tmp_path):
+    """Drop push v2: v3's base_version no longer chains -> the replica
+    detects the gap, restores the newest checkpoint (the pusher saves its w
+    per version), and is bit-identical to the trainer again."""
+    dl = Downlink(compressor=make_compressor("qsgd:16"))
+    key = jax.random.key(1)
+    spec = ExperimentSpec(downlink="qsgd:16", d=D, n=2)
+    pusher = DeltaPusher(dl, _trajectory(key, 0), key=key,
+                         ckpt_dir=str(tmp_path), spec=spec)
+    rep = ServeReplica(dl, pusher.w, ckpt_dir=str(tmp_path), spec=spec)
+    env1 = pusher.push(_trajectory(key, 1))
+    assert rep.push(env1) == "applied"
+    pusher.push(_trajectory(key, 2))           # dropped on the floor
+    env3 = pusher.push(_trajectory(key, 3))
+    assert env3.base_version == 2 and rep.version == 1
+    assert rep.push(env3) == "resync"
+    assert rep.resyncs == 1
+    assert rep.version == pusher.version == 3
+    for a, b in zip(jax.tree.leaves(rep.params), jax.tree.leaves(pusher.w)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_gap_without_checkpoint_dir_is_loud():
+    dl = Downlink(compressor=make_compressor("topk:7"))
+    key = jax.random.key(2)
+    pusher = DeltaPusher(dl, _trajectory(key, 0), key=key)
+    rep = ServeReplica(dl, pusher.w)
+    pusher.push(_trajectory(key, 1))           # dropped
+    env2 = pusher.push(_trajectory(key, 2))
+    with pytest.raises(RuntimeError, match="resync"):
+        rep.push(env2)
+
+
+def test_snapshot_pushes_repair_gaps_without_resync():
+    """A lossless (identity/f32) push is a snapshot: it assigns absolutely,
+    so a replica that missed pushes re-pins from the envelope alone."""
+    dl = Downlink(compressor=make_compressor("identity"))
+    key = jax.random.key(3)
+    pusher = DeltaPusher(dl, _trajectory(key, 0), key=key)
+    rep = ServeReplica(dl, pusher.w)
+    pusher.push(_trajectory(key, 1))           # dropped
+    env2 = pusher.push(_trajectory(key, 2))
+    assert env2.kind == "snapshot"
+    assert rep.push(env2) == "applied"
+    for a, b in zip(jax.tree.leaves(rep.params), jax.tree.leaves(pusher.w)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_envelope_versions_strictly_monotonic():
+    with pytest.raises(ValueError, match="monotonic"):
+        DeltaEnvelope(version=1, base_version=1, payloads=[])
+    with pytest.raises(ValueError, match="kind"):
+        DeltaEnvelope(version=2, base_version=1, payloads=[], kind="patch")
+
+
+# -----------------------------------------------------------------------------
+# lossless push == checkpoint load; exact bits accounting
+# -----------------------------------------------------------------------------
+
+def test_lossless_identity_push_equals_checkpoint_load(tmp_path):
+    """An identity-downlink push ships the model itself: the replica ends
+    bit-identical both to the trainer's x and to a save/restore round-trip
+    of it -- a delta push IS a checkpoint when the wire is lossless."""
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+
+    dl = Downlink(compressor=make_compressor("identity"))
+    key = jax.random.key(4)
+    x1 = _tree_trajectory(key, 1)
+    pusher = DeltaPusher(dl, _tree_trajectory(key, 0), key=key)
+    rep = ServeReplica(dl, pusher.w)
+    assert rep.push(pusher.push(x1)) == "applied"
+
+    save_checkpoint(str(tmp_path), 1, x1)
+    loaded = restore_checkpoint(str(tmp_path), 1, x1)
+    for a, b, c in zip(jax.tree.leaves(rep.params), jax.tree.leaves(loaded),
+                       jax.tree.leaves(x1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+@pytest.mark.parametrize("name,comp", ZOO, ids=[n for n, _ in ZOO])
+def test_push_bits_accounting_exact(name, comp):
+    """Measured envelope payload bytes == push_bits minus the version
+    header, for every codec -- the BENCH_bits serve_delta numbers are
+    measurements, not estimates."""
+    dl = Downlink(compressor=comp)
+    key = jax.random.key(5)
+    pusher = DeltaPusher(dl, _trajectory(key, 0), key=key)
+    env = pusher.push(_trajectory(key, 1))
+    fmt = dl.serve_format(pusher.w)
+    measured = 8 * sum(wire.payload_bytes(p)
+                       for p in jax.tree.leaves(env.payloads))
+    assert measured == push_bits(fmt) - PUSH_HEADER_BITS, name
+    assert checkpoint_push_bits(fmt) == PUSH_HEADER_BITS + fmt.dense_bits()
+
+
+def test_qsgd16_delta_push_beats_checkpoint_shipping():
+    """The acceptance ratio the BENCH gate pins: a qsgd:16 delta push costs
+    <= 0.35x shipping the full model."""
+    dl = Downlink(compressor=make_compressor("qsgd:16"))
+    fmt = dl.serve_format(jnp.zeros((1 << 12,)))
+    assert push_bits(fmt) <= 0.35 * checkpoint_push_bits(fmt)
+
+
+# -----------------------------------------------------------------------------
+# the decode engine: continuous batching + hot-swap atomicity
+# -----------------------------------------------------------------------------
+
+def _smoke_model():
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+
+    cfg = get_smoke_config("mamba2-130m")
+    return cfg, build_model(cfg)
+
+
+def test_continuous_batching_equals_fixed_batch_token_for_token():
+    """3 requests through 2 slots (staggered admission/retirement) decode
+    exactly the ids the plain fixed-batch lockstep loop decodes."""
+    cfg, model = _smoke_model()
+    kp, kd = jax.random.split(jax.random.key(0))
+    params = model.init(kp)
+    B, P, G, ML = 3, 4, 6, 16
+    prompts = np.asarray(jax.random.randint(kd, (B, P), 0, cfg.vocab))
+
+    cache = model.init_cache(B, ML)
+
+    @jax.jit
+    def step(params, cache, token, pos):
+        logits, cache = model.decode_step(params, cache, token, pos)
+        return (jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None],
+                cache)
+
+    tok = jnp.zeros((B, 1), jnp.int32)
+    outs = []
+    for t in range(P):
+        tok, cache = step(params, cache, jnp.asarray(prompts[:, t:t + 1]),
+                          jnp.int32(t))
+    for t in range(P, P + G):
+        tok, cache = step(params, cache, tok, jnp.int32(t))
+        outs.append(np.asarray(tok[:, 0]))
+    fixed = np.stack(outs, 1)
+
+    eng = DecodeEngine(model, slots=2, max_len=ML)
+    reqs = [eng.submit(prompts[i], G) for i in range(B)]
+    eng.run(params)
+    assert all(r.done for r in reqs)
+    cont = np.stack([r.out for r in sorted(reqs, key=lambda r: r.rid)], 0)
+    np.testing.assert_array_equal(fixed, cont)
+
+
+def test_hot_swap_atomicity_mid_decode():
+    """A push staged mid-decode: tokens before the commit come from the old
+    version, tokens after from the new -- each from exactly one model, with
+    the exact two-phase reference trajectory reproduced token-for-token."""
+    cfg, model = _smoke_model()
+    kp, kd = jax.random.split(jax.random.key(7))
+    params0 = model.init(kp)
+    P, G, ML, SWAP = 2, 6, 16, 5  # commit before engine step index 5
+    prompt = np.asarray(jax.random.randint(kd, (P,), 0, cfg.vocab))
+
+    dl = Downlink(compressor=make_compressor("qsgd:16"))
+    pusher = DeltaPusher(dl, params0, key=jax.random.key(8))
+    rep = ServeReplica(dl, pusher.w)
+    params1 = jax.tree.map(
+        lambda a: a + 0.01 * jnp.ones_like(a), params0)
+    env = pusher.push(params1)
+
+    eng = DecodeEngine(model, slots=1, max_len=ML)
+    req = eng.submit(prompt, G)
+    for i in range(P + G):
+        if i == 2:  # arrives mid-decode: staged, old version keeps serving
+            assert rep.stage(env) == "staged"
+        if i == SWAP:
+            assert rep.commit()
+        eng.step(rep.params, version=rep.version)
+    assert req.done
+
+    # two-phase reference: the same cache continues across the swap
+    ref_old = dl.init(params0)                       # the replica's w at v0
+    ref_new = dl.apply_push(env.payloads, ref_old)   # and at v1
+    cache = model.init_cache(1, ML)
+
+    @jax.jit
+    def step(params, cache, token, pos):
+        logits, cache = model.decode_step(params, cache, token, pos)
+        return (jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None],
+                cache)
+
+    tok = jnp.zeros((1, 1), jnp.int32)
+    want, want_versions = [], []
+    for i in range(P + G):
+        p = ref_old if i < SWAP else ref_new
+        inp = (jnp.asarray(prompt[i:i + 1])[None] if i < P else tok)
+        tok, cache = step(p, cache, inp, jnp.int32(i))
+        if i >= P:
+            want.append(int(tok[0, 0]))
+            want_versions.append(0 if i < SWAP else 1)
+    assert req.out == want
+    assert req.versions == want_versions
+    # every token came from exactly one committed version, and the version
+    # stream is monotone: no token was produced by a half-applied model
+    assert set(req.versions) == {0, 1}
+    assert req.versions == sorted(req.versions)
+
+
+def test_engine_rejects_overlong_requests():
+    _, model = _smoke_model()
+    eng = DecodeEngine(model, slots=1, max_len=8)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(np.zeros(5, np.int64), 4)
+
+
+def test_serve_cli_validates_prompt_plus_gen(capsys):
+    from repro.launch import serve
+
+    with pytest.raises(SystemExit):
+        serve.parse_args(["--prompt-len", "20", "--gen", "20",
+                          "--max-len", "32"])
+    assert "--max-len" in capsys.readouterr().err
+
+
+# -----------------------------------------------------------------------------
+# the fleet driver end to end
+# -----------------------------------------------------------------------------
+
+def test_run_fleet_pins_and_measures(tmp_path):
+    """A tiny end-to-end fleet: the bitwise invariant is asserted inside
+    run_fleet for every push; here we also pin the exact bits accounting
+    and the serve-spec identity of the returned metrics."""
+    spec = ExperimentSpec(
+        problem="mamba2-130m", smoke=True, backend="shard_map", mesh="1x1",
+        n=1, d=D, downlink="qsgd:16",
+        serve="replicas:2,slots:1,prompt:1,gen:2,max_len:4,pushes:2")
+    m = run_fleet(spec, ckpt_dir=str(tmp_path), quiet=True)
+    assert m["fingerprint"] == spec.fingerprint()
+    assert m["pushes"] == 2 and m["replicas"] == 2
+    assert m["requests"] == 4  # 2 replicas x 2 waves x 1 slot
+    assert m["delta_bits_per_push"] <= 0.35 * m["checkpoint_bits_per_push"]
+
+
+def test_serve_spec_field_fingerprint_stable_when_unset():
+    """Adding the serve field must not move any pre-existing fingerprint:
+    unset, it serializes to nothing."""
+    d = ExperimentSpec().to_dict()
+    assert "serve" not in d
+    spec = ExperimentSpec(problem="mamba2-130m", smoke=True,
+                          backend="shard_map", mesh="1x1", n=1,
+                          serve="gen:4,max_len:8")
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    assert spec.serve_spec().gen == 4
+    with pytest.raises(Exception, match="decode loop"):
+        ExperimentSpec(serve="gen:4")  # built-in problem has no decoding
+    with pytest.raises(Exception, match="overruns"):
+        ExperimentSpec(problem="mamba2-130m", smoke=True,
+                       backend="shard_map", mesh="1x1", n=1,
+                       serve="prompt:30,gen:30,max_len:32")
