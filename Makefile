@@ -8,7 +8,7 @@ export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test-tier1 test-all test-slow bench bench-micro smoke smoke-federated \
 	smoke-bidirectional smoke-spec smoke-pipelined smoke-tree smoke-serve \
-	docs-test docs-check
+	smoke-finetune docs-test docs-check
 
 test-tier1:
 	JAX_PLATFORMS=cpu $(PY) -m pytest -x -q
@@ -70,6 +70,14 @@ smoke-tree:
 	JAX_PLATFORMS=cpu $(PY) -m repro.launch.train \
 	    --spec examples/specs/tree_mixed_codecs.json --smoke \
 	    --global-batch 8 --seq 32
+
+# staged fine-tuning harness: the committed MoE spec (smallest MoE config,
+# expert-sparse per-leaf wire, fsdp backend) through all four stages, with
+# the multi-host-shaped mesh simulated at 2 processes (docs/finetuning.md)
+smoke-finetune:
+	JAX_PLATFORMS=cpu $(PY) -m repro.launch.finetune \
+	    --spec examples/specs/finetune_moe.json --steps 2 \
+	    --global-batch 8 --seq 32 --processes 2 --eval-every 2
 
 # compressed-delta serving: the committed serve spec drives a simulated
 # replica fleet reconstructing w from versioned downlink pushes, bitwise

@@ -21,7 +21,14 @@ Two files, two kinds of signal:
   compressed model-push envelope of the serving protocol, gated at
   <= 0.35x a full checkpoint for the committed qsgd:16 downlink; the
   BENCH_perf.json `serve_fleet` row carries the measured fleet tok/s and
-  hot-swap latency for the same spec.
+  hot-swap latency for the same spec.  The `zoo_scaling` table (both files;
+  benchmarks/zoo_scaling.py) carries the model-scale rows: every committed
+  fine-tune spec (examples/specs/finetune_moe.json + zoo_*_fsdp.json, >=3
+  model families incl. MoE and mamba2) measured under its compressed FSDP
+  wire -- exact up+down bits per round in BENCH_bits.json (with the MoE
+  expert-sparsity gate: expert-leaf uplink <= 0.5x the dense block-top-k
+  budget) and steps/sec through the staged fine-tune harness in
+  BENCH_perf.json.
 
 Since schema 2, every row is KEYED by the stable fingerprint of the
 canonical repro.core.ExperimentSpec it measures (the human-readable
@@ -198,6 +205,28 @@ def bits_payload():
         f"serve delta push regressed past 0.35x a full checkpoint: "
         f"{ratio} ({serve_spec.downlink})")
 
+    # the model-zoo scaling table (benchmarks/zoo_scaling.py): exact
+    # up+down bits of every committed fine-tune spec's round on its real
+    # smoke parameter tree, keyed by the committed fingerprints.  The MoE
+    # gate pins the expert-sparsity contract: with inactive-expert grads
+    # zeroed worker-side and the expert leaves on rescaled topk rules, the
+    # expert-leaf uplink must cost <= 0.5x the dense block-top-k budget on
+    # those same leaves (exactly a/E = 2/4 for the committed granite spec).
+    from benchmarks import zoo_scaling
+
+    zoo_bits = zoo_scaling.zoo_bits_rows()
+    for row in zoo_bits.values():
+        if row["family"] == "moe":
+            assert row["expert_leaf_bits"] <= \
+                0.5 * row["dense_expert_leaf_bits"], (
+                    f"expert-sparse MoE uplink regressed past 0.5x the "
+                    f"dense block-top-k budget: {row['expert_leaf_bits']} "
+                    f"vs {row['dense_expert_leaf_bits']} bits "
+                    f"({row['spec_file']})")
+    assert any(r["family"] == "moe" for r in zoo_bits.values()) and \
+        any(r["family"] == "ssm" for r in zoo_bits.values()) and \
+        len(zoo_bits) >= 3, "the zoo table needs >=3 families incl. moe+ssm"
+
     return {
         "schema": 2,  # schema 2: rows keyed by ExperimentSpec fingerprint
         "d": D_BITS,
@@ -206,6 +235,7 @@ def bits_payload():
         "bidirectional_rounds": combo_rows,
         "tree_wire": tree_rows,
         "serve_delta": serve_rows,
+        "zoo_scaling": zoo_bits,
     }
 
 
@@ -296,6 +326,14 @@ def perf_payload(fast: bool = True):
         "stage_ms_max": round(sm["stage_ms_max"], 4),
     }
 
+    # the model-zoo scaling rows: steps/sec of every committed fine-tune
+    # spec through the staged harness under its compressed FSDP wire
+    # (benchmarks/zoo_scaling.py), keyed by the committed fingerprints --
+    # the model-scale leg of the bench trajectory
+    from benchmarks import zoo_scaling
+
+    zoo_rows = zoo_scaling.zoo_perf_rows()
+
     pack_rows = {}
     for row in compressor_bench.packed_vs_dense(fast=fast):
         key = row["name"].split("/", 1)[1]
@@ -343,6 +381,7 @@ def perf_payload(fast: bool = True):
         "smoke_train_step_pipelined": smoke_pipe,
         "smoke_train_step_tree": smoke_tree,
         "serve_fleet": serve_row,
+        "zoo_scaling": zoo_rows,
         "wire_pack_us": pack_rows,
         "kernel_hlo_bytes": kernel_hlo,
     }

@@ -9,7 +9,7 @@ from typing import Callable, Dict, List
 import jax
 import jax.numpy as jnp
 
-from repro.core import CompKK, EFBV, run, tune_for
+from repro.core import CompKK, EFBV, run_reference, tune_for
 from repro.problems import LogReg, make_synthetic
 
 KEY = jax.random.key(0)
@@ -42,10 +42,10 @@ def run_algorithm(prob: LogReg, mode: str, k: int, steps: int,
     comp = CompKK(k, d // 2)
     t = tune_for(comp, d, prob.n, mode=mode, L=prob.L(), Ltilde=prob.L_tilde())
     algo = EFBV(comp, lam=t.lam, nu=t.nu)
-    _, _, m = run(algo=algo, grad_fn=prob.grads, x0=jnp.zeros(d),
-                  gamma=t.gamma, steps=steps, key=KEY, n=prob.n,
-                  record=lambda x: prob.f(x) - fstar)
-    return m
+    res = run_reference(algo=algo, grad_fn=lambda _k, x: prob.grads(x),
+                        x0=jnp.zeros(d), gamma=t.gamma, steps=steps, key=KEY,
+                        n=prob.n, record=lambda x: prob.f(x) - fstar)
+    return res.metrics
 
 
 def timeit(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import KEY, make_problem
-from repro.core import CompKK, EFBV, run, tune_for
+from repro.core import CompKK, EFBV, run_reference, tune_for
 
 
 def run_bench(fast: bool = True, n: int = 200):
@@ -23,9 +23,11 @@ def run_bench(fast: bool = True, n: int = 200):
             t = tune_for(comp, d, prob.n, mode=mode, regime="nonconvex",
                          L=prob.L(), Ltilde=prob.L_tilde())
             algo = EFBV(comp, lam=t.lam, nu=t.nu)
-            _, _, m = run(algo=algo, grad_fn=prob.grads, x0=jnp.zeros(d),
-                          gamma=t.gamma, steps=steps, key=KEY, n=prob.n,
-                          record=lambda x: jnp.sum(prob.grad(x) ** 2))
+            m = run_reference(algo=algo, grad_fn=lambda _k, x: prob.grads(x),
+                              x0=jnp.zeros(d), gamma=t.gamma, steps=steps,
+                              key=KEY, n=prob.n,
+                              record=lambda x: jnp.sum(prob.grad(x) ** 2)
+                              ).metrics
             res[mode] = float(np.min(np.asarray(m)))
         rows.append({
             "name": f"fig3/{name}/min_grad_norm2",

@@ -8,6 +8,8 @@ One section per paper table/figure:
   fig2      -- Figure 2 convex experiments: EF-BV vs EF21 bits-to-accuracy
   fig3      -- Figure/Appx C.3 nonconvex experiments
   n_scaling -- Table 1 row 5: rate improves with n (EF-BV), flat (EF21)
+               (benchmarks/zoo_scaling.py; the zoo model-scale rows run in
+               benchmarks/ci_bench.py)
   compressor-- compression micro-benchmarks incl. the Pallas kernel
   roofline  -- per-(arch x shape) roofline terms from the dry-run artifacts
 """
@@ -30,8 +32,8 @@ def main() -> None:
     fast = not args.full
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (compressor_bench, n_scaling, paper_fig2,
-                            paper_fig3, paper_tab3, roofline)
+    from benchmarks import (compressor_bench, paper_fig2, paper_fig3,
+                            paper_tab3, roofline, zoo_scaling)
     from benchmarks.common import emit
 
     sections = [
@@ -39,7 +41,7 @@ def main() -> None:
         ("compressor", lambda: compressor_bench.run(fast)),
         ("fig2", lambda: paper_fig2.run(fast)[0]),
         ("fig3", lambda: paper_fig3.run_bench(fast)),
-        ("n_scaling", lambda: n_scaling.run_bench(fast)),
+        ("n_scaling", lambda: zoo_scaling.run_bench(fast)),
         ("roofline", lambda: roofline.run(fast)),
     ]
     print("name,us_per_call,derived")

@@ -1,5 +1,6 @@
-"""End-to-end driver: train a ~100M-parameter LM with EF-BV compressed
-gradient aggregation on a data x model mesh.
+"""End-to-end example: fine-tune a ~100M-parameter LM with EF-BV compressed
+gradient aggregation on a data x model mesh, driven by ONE declarative
+:class:`repro.core.ExperimentSpec`.
 
     # few-hundred-step run (~100M params; several hours of CPU -- this is the
     # deployment-shaped entry point; on TPU the same command runs per pod):
@@ -8,9 +9,13 @@ gradient aggregation on a data x model mesh.
     # quick demo (~8M params, minutes on CPU):
     PYTHONPATH=src python examples/train_lm.py --tiny
 
-Everything routes through repro.launch.train: the EF-BV layer (block-top-k
-compressor, sparse all-gather wire), the WSD/cosine schedules, synthetic
-heterogeneous LM data, and npz checkpointing.
+Everything routes through the staged fine-tune harness
+(repro/train/loop.py::FinetuneLoop, docs/finetuning.md): the spec declares
+the EF-BV layer (block-top-k compressor, sparse all-gather wire) and the
+harness supplies the four stages -- setup, heterogeneous synthetic LM data,
+the compressed train loop, and held-out eval -- plus npz checkpointing.
+The custom (non-zoo) model config rides in via ``FinetuneLoop(config=...)``;
+the committed zoo specs in examples/specs/ need no config at all.
 """
 
 import argparse
@@ -29,7 +34,6 @@ if "XLA_FLAGS" not in os.environ:
     _n = math.prod(int(x) for x in _mesh.split("x"))
     os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_n}"
 
-from repro.configs import get_smoke_config  # noqa: E402
 from repro.models.config import ModelConfig  # noqa: E402
 
 
@@ -50,26 +54,37 @@ def main():
     ap.add_argument("--mesh", default="4x1")
     args = ap.parse_args()
 
-    # register the 100M config under a patched smoke lookup, then delegate to
-    # the production driver
-    import repro.launch.train as T
+    from repro.core import ExperimentSpec
+    from repro.core.spec import mesh_worker_count
+    from repro.train.loop import FinetuneLoop, FinetuneSettings
+
     cfg = lm100m()
     steps = args.steps or (300 if not args.tiny else 60)
     if args.tiny:
         cfg = dataclasses.replace(cfg, n_layers=4, d_model=256, d_ff=1024,
                                   vocab=4096, name="lm8m")
 
-    orig = T.get_smoke_config
-    T.get_smoke_config = lambda name: cfg  # the driver sees our config
-    try:
-        T.main(["--arch", "qwen2-0.5b", "--smoke", "--mesh", args.mesh,
-                "--steps", str(steps), "--global-batch", "16", "--seq", "256",
-                "--lr", "1e-3", "--algo", "efbv",
-                "--compressor", "block_topk:1024,64",
-                "--agg", "sparse_allgather", "--log-every", "10",
-                "--ckpt-dir", "/tmp/lm100m_ckpt", "--ckpt-every", "100"])
-    finally:
-        T.get_smoke_config = orig
+    dims = [int(x) for x in args.mesh.split("x")]
+    spec = ExperimentSpec(
+        compressor="block_topk:1024,64", mode="efbv",
+        agg="sparse_allgather", backend="shard_map",
+        problem="qwen2-0.5b",   # nearest zoo family; the real config rides
+        smoke=True,             # in via FinetuneLoop(config=...) below
+        mesh=args.mesh, n=mesh_worker_count(dims),
+        d=cfg.d_model * cfg.d_ff, steps=steps, seed=0)
+    print(f"[train_lm] spec fingerprint={spec.fingerprint()} "
+          f"arch={cfg.name} mesh={args.mesh}")
+
+    loop = FinetuneLoop(
+        spec,
+        FinetuneSettings(global_batch=16, seq_len=256, lr=1e-3,
+                         log_every=10, ckpt_dir="/tmp/lm100m_ckpt",
+                         ckpt_every=100),
+        config=cfg)
+    summary = loop.run()
+    print(f"[train_lm] final loss {summary['final_loss']:.4f} "
+          f"eval loss {summary['eval_loss']:.4f} "
+          f"({summary['steps_per_sec']:.3f} steps/s)")
 
 
 if __name__ == "__main__":

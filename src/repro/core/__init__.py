@@ -10,9 +10,9 @@ from repro.core.compressors import (  # noqa: F401
 from repro.core.efbv import (  # noqa: F401
     Downlink, EFBV, EFBVState, Participation, ReferenceRun, downlink_key,
     participation_key, proximal_step,
-    prox_zero, prox_l1, prox_l2, run, run_bidirectional, run_federated,
-    run_reference,
+    prox_zero, prox_l1, prox_l2, run_reference,
 )
+from repro.core import specgrammar  # noqa: F401
 from repro.core import theory  # noqa: F401
 from repro.core.theory import (  # noqa: F401
     Tuning, tune, tune_for, tune_partial,

@@ -624,7 +624,10 @@ def expand_fleet(members: Tuple[Compressor, ...], n: int
 def make_fleet(spec: str, n: int) -> Tuple[Compressor, ...]:
     """Parse a heterogeneous-fleet spec -- ';'-separated compressor specs,
     e.g. 'topk:64;randk:64;qsgd:16' -- and assign it to n workers
-    (round-robin when shorter than n, explicit when exactly n)."""
-    members = tuple(make_compressor(s.strip())
-                    for s in spec.split(";") if s.strip())
-    return expand_fleet(members, n)
+    (round-robin when shorter than n, explicit when exactly n).
+
+    Thin delegate into the unified spec grammar (repro.core.specgrammar),
+    which also provides the lossless ``format_fleet`` inverse; imported
+    lazily because specgrammar imports the compressor classes from here."""
+    from repro.core import specgrammar
+    return specgrammar.parse_fleet(spec, n)

@@ -20,7 +20,7 @@ experiments, the module also implements the *federated* execution mode
 client sampling via :class:`Participation` masks -- only the sampled subset
 S_t compresses and communicates, absent workers keep their control variates
 h_i stale -- through the masked variants :meth:`EFBV.worker_update_masked` /
-:meth:`EFBV.step_federated` and the :func:`run_federated` driver, which also
+:meth:`EFBV.step_federated` and the :func:`run_reference` driver, which also
 takes stochastic (minibatch-resampled) local gradients.  With an all-ones
 mask every masked op reduces bitwise to its unmasked twin, so full
 participation reproduces the original trajectories bit-for-bit (pinned by
@@ -42,7 +42,7 @@ Array = jax.Array
 PyTree = Any
 
 #: fold_in tag for the per-round participation-mask key.  All execution paths
-#: (reference run_federated, shard_map trainer, FSDP trainer, the differential
+#: (the reference driver, shard_map trainer, FSDP trainer, the differential
 #: harness) derive the mask from fold_in(round_key, PARTICIPATION_FOLD) so the
 #: sampled subset S_t is identical everywhere; worker compressor keys are
 #: untouched, which is what keeps p = 1 bit-identical to full participation.
@@ -130,7 +130,7 @@ def participation_key(round_key: Array) -> Array:
 
 def downlink_key(round_key: Array) -> Array:
     """The shared derivation of the broadcast key from a round key.  All
-    execution paths (run_bidirectional, both trainers, the differential
+    execution paths (the reference driver, both trainers, the differential
     harness) use this, so the master's compressor draw -- and therefore the
     broadcast every worker decodes -- is identical everywhere."""
     return jax.random.fold_in(round_key, DOWNLINK_FOLD)
@@ -165,19 +165,14 @@ class Pipeline:
 
     @staticmethod
     def parse(spec: str) -> "Pipeline":
-        """Parse the CLI syntax: '' | 'off' | 'depth:k' (k in {0, 1})."""
-        if not spec or spec == "off":
-            return Pipeline()
-        name, _, arg = spec.partition(":")
-        if name == "depth" and arg:
-            try:
-                depth = int(arg)
-            except ValueError:
-                raise ValueError(f"pipeline spec {spec!r} (want off | "
-                                 "depth:0 | depth:1)") from None
-            return Pipeline(depth=depth)
-        raise ValueError(f"pipeline spec {spec!r} (want off | depth:0 | "
-                         "depth:1)")
+        """Parse the CLI syntax: '' | 'off' | 'depth:k' (k in {0, 1}).
+
+        Thin delegate into the unified spec grammar
+        (:mod:`repro.core.specgrammar`), which also provides the lossless
+        ``format_pipeline`` inverse; depth validation stays in
+        :meth:`__post_init__`."""
+        from repro.core import specgrammar
+        return Pipeline(depth=specgrammar.parse_pipeline(spec))
 
     @property
     def is_off(self) -> bool:
@@ -222,13 +217,17 @@ class Downlink:
     def parse(spec: str) -> Optional["Downlink"]:
         """CLI syntax: '' | 'none' -> None (uncompressed dense broadcast);
         otherwise any zoo compressor spec, e.g. 'qsgd:16', 'block_topk:256,16',
-        optionally '@lam' for the downlink scaling ('topk:64@0.9')."""
-        if not spec or spec == "none":
+        optionally '@lam' for the downlink scaling ('topk:64@0.9').
+
+        Thin delegate into the unified spec grammar
+        (:mod:`repro.core.specgrammar`), which also provides the lossless
+        ``format_downlink`` inverse."""
+        from repro.core import specgrammar
+        parsed = specgrammar.parse_downlink(spec)
+        if parsed is None:
             return None
-        comp_spec, _, lam_s = spec.partition("@")
-        from repro.core.compressors import make_compressor
-        return Downlink(compressor=make_compressor(comp_spec),
-                        lam=float(lam_s) if lam_s else 1.0)
+        compressor, lam = parsed
+        return Downlink(compressor=compressor, lam=lam)
 
     def _is_lossless(self, wire_dtype: str) -> bool:
         from repro.core.compressors import Identity
@@ -742,9 +741,9 @@ def run_reference(
 
     Each simpler mode reduces *bitwise* to the corresponding specialization:
     the masked ops are arithmetic identities at m = 1 and the Identity/f32
-    downlink assigns w = x verbatim, so the deprecated shims :func:`run`,
-    :func:`run_federated` and :func:`run_bidirectional` stay bit-identical
-    to their historical trajectories (pinned by tests/test_spec.py).
+    downlink assigns w = x verbatim, so the spec-driven path
+    (``repro.core.build(spec).reference()``) stays bit-identical to a direct
+    call supplying only the relevant arguments (pinned by tests/test_spec.py).
     """
     part = participation if participation is not None else Participation()
     depth = 0 if pipeline is None else pipeline.depth
@@ -803,100 +802,3 @@ def run_reference(
     (x, w, state), metrics = jax.lax.scan(body, (x0, w0, state0), keys)
     return ReferenceRun(x=x, state=state, w=w,
                         metrics=metrics if record is not None else None)
-
-
-# ------------------------------------------------------------------------------
-# deprecated drivers, kept as thin bit-identical shims over run_reference
-# ------------------------------------------------------------------------------
-
-def _warn_deprecated(old: str, hint: str) -> None:
-    import warnings
-
-    warnings.warn(
-        f"repro.core.efbv.{old} is deprecated: {hint} (see docs/api.md for "
-        "the ExperimentSpec migration table)", DeprecationWarning,
-        stacklevel=3)
-
-
-def run(
-    *,
-    algo: EFBV,
-    grad_fn: Callable[[PyTree], PyTree],  # x -> per-worker grads (n-leading)
-    x0: PyTree,
-    gamma: float,
-    steps: int,
-    key: Array,
-    prox: Callable[[float, PyTree], PyTree] = prox_zero,
-    n: int,
-    record: Optional[Callable[[PyTree], Array]] = None,
-) -> Tuple[PyTree, EFBVState, Optional[Array]]:
-    """Deprecated shim: exact-gradient, full-participation Algorithm 1.
-
-    Use ``repro.core.build(spec).reference()`` / :func:`run_reference`; this
-    wrapper stays bit-identical to the unified driver (the masked step at an
-    all-ones mask and the key plumbing are arithmetic identities)."""
-    _warn_deprecated("run", "use repro.core.build(spec).reference() or "
-                     "run_reference")
-    res = run_reference(algo=algo, grad_fn=lambda _k, x: grad_fn(x), x0=x0,
-                        gamma=gamma, steps=steps, key=key, n=n, prox=prox,
-                        record=record)
-    return res.x, res.state, res.metrics
-
-
-def run_federated(
-    *,
-    algo: EFBV,
-    grad_fn: Callable[[Array, PyTree], PyTree],  # (key, x) -> n-leading grads
-    x0: PyTree,
-    gamma: float,
-    steps: int,
-    key: Array,
-    n: int,
-    participation: Optional[Participation] = None,
-    prox: Callable[[float, PyTree], PyTree] = prox_zero,
-    record: Optional[Callable[[PyTree], Array]] = None,
-) -> Tuple[PyTree, EFBVState, Optional[Array]]:
-    """Deprecated shim: Algorithm 1 under per-round client sampling +
-    stochastic local gradients (docs/algorithms.md).
-
-    Use ``repro.core.build(spec).reference()`` / :func:`run_reference` --
-    bit-identical: both draw the mask from :func:`participation_key` and the
-    minibatch key from fold_in(round_key, RESAMPLE_FOLD), and the full-
-    participation fast path (:meth:`EFBV.step`) equals
-    :meth:`EFBV.step_federated` at an all-ones mask bitwise."""
-    _warn_deprecated("run_federated", "use repro.core.build(spec).reference()"
-                     " or run_reference(participation=...)")
-    res = run_reference(algo=algo, grad_fn=grad_fn, x0=x0, gamma=gamma,
-                        steps=steps, key=key, n=n,
-                        participation=participation, prox=prox, record=record)
-    return res.x, res.state, res.metrics
-
-
-def run_bidirectional(
-    *,
-    algo: "EFBV",
-    downlink: Downlink,
-    grad_fn: Callable[[Array, PyTree], PyTree],  # (key, w) -> n-leading grads
-    x0: PyTree,
-    gamma: float,
-    steps: int,
-    key: Array,
-    n: int,
-    participation: Optional[Participation] = None,
-    prox: Callable[[float, PyTree], PyTree] = prox_zero,
-    record: Optional[Callable[[PyTree], Array]] = None,
-    wire_dtype: str = "float32",
-) -> Tuple[PyTree, PyTree, Optional[Array]]:
-    """Deprecated shim: EF-BV with a bidirectional compressed wire
-    (:class:`Downlink` broadcast channel), optionally federated.
-
-    Use ``repro.core.build(spec).reference()`` / :func:`run_reference` --
-    this wrapper IS the unified driver with ``downlink`` supplied, returning
-    the historical ``(x, w, metrics)`` triple."""
-    _warn_deprecated("run_bidirectional", "use repro.core.build(spec)"
-                     ".reference() or run_reference(downlink=...)")
-    res = run_reference(algo=algo, grad_fn=grad_fn, x0=x0, gamma=gamma,
-                        steps=steps, key=key, n=n,
-                        participation=participation, downlink=downlink,
-                        prox=prox, record=record, wire_dtype=wire_dtype)
-    return res.x, res.w, res.metrics

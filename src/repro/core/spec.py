@@ -19,9 +19,9 @@ execution cross-product --
 refuse mismatched resumes and by the CI bench to key its trajectory rows).
 
 :func:`build` turns a spec into a :class:`Run`: the single entry point
-whose ``.reference()`` subsumes the historical ``run`` / ``run_federated``
-/ ``run_bidirectional`` drivers (now deprecated shims over
-:func:`repro.core.efbv.run_reference`), whose ``.train_step()`` dispatches
+whose ``.reference()`` drives :func:`repro.core.efbv.run_reference` (the
+one lax.scan driver; the historical run / run_federated / run_bidirectional
+entry points are gone), whose ``.train_step()`` dispatches
 the shard_map vs FSDP trainers, whose ``.round_bits()`` delegates to the
 exact wire accounting, and whose ``.tuned`` delegates to the paper's
 auto-tuning (:func:`repro.core.theory.tune_for`).  Every future scenario is

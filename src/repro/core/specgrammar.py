@@ -1,0 +1,214 @@
+"""One grammar for every compressor-spec mini-language (docs/api.md).
+
+Four spec syntaxes grew up around the ``'name[:a[,b]]'`` compressor atoms of
+:func:`repro.core.compressors.make_compressor`, one per subsystem:
+
+====================  =============================  ==========================
+grammar               example                        composed from atoms by
+====================  =============================  ==========================
+fleet                 ``'topk:64;qsgd:16'``          ``';'``-separated atoms,
+                                                     round-robin over n workers
+leaf-codec rules      ``'*embed*=qsgd:16;topk:8'``   ``';'``-separated
+                                                     ``pattern=atom`` entries
+                                                     (bare atom == catch-all
+                                                     pattern ``'*'``)
+downlink              ``'sign@0.9'``                 atom ``'@'`` server
+                                                     stepsize (default 1.0)
+pipeline              ``'off'`` | ``'depth:1'``      double-buffer depth
+====================  =============================  ==========================
+
+This module is the single parser *and* printer for all four.  The historical
+entry points -- :meth:`repro.core.efbv.Downlink.parse`,
+:meth:`repro.core.efbv.Pipeline.parse`,
+:func:`repro.core.compressors.make_fleet` and
+:func:`repro.distributed.wire.parse_leaf_rules` -- are thin delegates into
+the ``parse_*`` functions below, so error messages, parse results and hence
+:class:`~repro.core.spec.ExperimentSpec` fingerprints are identical to the
+per-module parsers they replace (pinned by tests/test_specgrammar.py).
+
+``format_*`` is the lossless inverse: for every parseable spec string ``s``,
+``parse_*(format_*(parse_*(s)))`` equals ``parse_*(s)`` exactly, and the
+formatted string is the canonical spelling (aliases normalized -- ``'none'``
+prints as ``'identity'`` -- whitespace dropped, default ``'@1.0'`` scalings
+and ``'*='`` catch-all markers made explicit only where the grammar needs
+them).  The compressor dataclasses are frozen with ``eq=True``, so the
+round-trip equality is plain ``==``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+from repro.core.contract import Compressor
+from repro.core.compressors import (
+    BlockTopK, CompKK, FracCompKK, FracTopK, Identity, MixKK, Natural, QSGD,
+    RandK, ScaledRandK, SignNorm, TopK, expand_fleet, make_compressor,
+)
+
+__all__ = [
+    "format_compressor", "format_downlink", "format_fleet",
+    "format_leaf_rules", "format_pipeline", "parse_compressor",
+    "parse_downlink", "parse_fleet", "parse_leaf_rules", "parse_pipeline",
+]
+
+
+# ---------------------------------------------------------------------------
+# atoms: 'name[:a[,b]]'
+# ---------------------------------------------------------------------------
+
+def parse_compressor(spec: str) -> Compressor:
+    """The atom parser (one zoo compressor); alias of
+    :func:`repro.core.compressors.make_compressor`, re-exported here so the
+    whole grammar is importable from one module."""
+    return make_compressor(spec)
+
+
+def _per_mille(frac: float) -> int:
+    return int(round(frac * 1000.0))
+
+
+def format_compressor(comp: Compressor) -> str:
+    """Canonical atom spelling of a zoo compressor; the exact inverse of
+    :func:`parse_compressor` (``parse(format(c)) == c`` for every compressor
+    the atom grammar can produce).  Jointly-defined compressors (m-nice) have
+    no spec spelling and are rejected."""
+    if isinstance(comp, Identity):
+        return "identity"
+    if isinstance(comp, TopK):
+        return f"topk:{comp.k}"
+    if isinstance(comp, RandK):
+        return f"randk:{comp.k}"
+    if isinstance(comp, ScaledRandK):
+        return f"scaled_randk:{comp.k}"
+    if isinstance(comp, CompKK):
+        return f"comp:{comp.k},{comp.kp}"
+    if isinstance(comp, MixKK):
+        return f"mix:{comp.k},{comp.kp}"
+    if isinstance(comp, BlockTopK):
+        return f"block_topk:{comp.block},{comp.kb}"
+    if isinstance(comp, SignNorm):
+        return "sign"
+    if isinstance(comp, Natural):
+        return "natural"
+    if isinstance(comp, QSGD):
+        return f"qsgd:{comp.s}"
+    # fraction-style atoms spell per-mille integers ("frac_topk:50" = 5%)
+    if isinstance(comp, FracCompKK):
+        return f"frac_comp:{_per_mille(comp.frac)},{_per_mille(comp.fracp)}"
+    if isinstance(comp, FracTopK):
+        return f"frac_topk:{_per_mille(comp.frac)}"
+    raise ValueError(f"compressor {comp!r} has no spec-string spelling")
+
+
+# ---------------------------------------------------------------------------
+# fleet: ';'-separated atoms assigned round-robin to n workers
+# ---------------------------------------------------------------------------
+
+def parse_fleet(spec: str, n: int) -> Tuple[Compressor, ...]:
+    """';'-separated atoms -> length-n worker fleet (round-robin when the
+    list is shorter than n, explicit when exactly n)."""
+    members = tuple(make_compressor(s.strip())
+                    for s in spec.split(";") if s.strip())
+    return expand_fleet(members, n)
+
+
+def format_fleet(members: Sequence[Compressor]) -> str:
+    """Canonical fleet spelling: ``parse_fleet(format_fleet(f), len(f)) == f``."""
+    return ";".join(format_compressor(c) for c in members)
+
+
+# ---------------------------------------------------------------------------
+# leaf-codec rules: ';'-separated 'pattern=atom' entries, first match wins
+# ---------------------------------------------------------------------------
+
+def parse_leaf_rules(spec: str) -> Tuple[Tuple[str, Compressor], ...]:
+    """';'-separated ``pattern=compressor_spec`` entries -> (pattern,
+    Compressor) rules; a bare atom (no '=') is the catch-all rule with
+    pattern ``'*'``.  Jointly-defined compressors (m-nice) are rejected:
+    their draws couple all workers, not leaves."""
+    rules = []
+    for entry in spec.split(";"):
+        entry = entry.strip()
+        if not entry:
+            continue
+        if "=" in entry:
+            pat, _, comp_spec = entry.partition("=")
+            pat, comp_spec = pat.strip(), comp_spec.strip()
+            if not pat or not comp_spec:
+                raise ValueError(
+                    f"leaf-codec rule {entry!r} needs both a leaf-path "
+                    "pattern and a compressor spec around the '='")
+        else:
+            pat, comp_spec = "*", entry
+        comp = make_compressor(comp_spec)
+        if getattr(comp, "joint", False):
+            raise ValueError(
+                "jointly-defined compressors (m-nice) cannot be leaf-codec "
+                "rules: their draws couple all workers")
+        rules.append((pat, comp))
+    return tuple(rules)
+
+
+def format_leaf_rules(rules: Sequence[Tuple[str, Compressor]]) -> str:
+    """Canonical rule spelling (every pattern explicit, incl. '*'):
+    ``parse_leaf_rules(format_leaf_rules(r)) == r``."""
+    return ";".join(f"{pat}={format_compressor(c)}" for pat, c in rules)
+
+
+# ---------------------------------------------------------------------------
+# downlink: atom '@' server stepsize
+# ---------------------------------------------------------------------------
+
+def parse_downlink(spec: str) -> Optional[Tuple[Compressor, float]]:
+    """``'' | 'none'`` -> None (uncompressed dense broadcast); otherwise an
+    atom with an optional ``'@lam'`` downlink scaling -> ``(compressor,
+    lam)``.  The Downlink dataclass itself lives in repro.core.efbv; its
+    ``parse`` wraps this pair."""
+    if not spec or spec == "none":
+        return None
+    comp_spec, _, lam_s = spec.partition("@")
+    return make_compressor(comp_spec), float(lam_s) if lam_s else 1.0
+
+
+def format_downlink(downlink: Any) -> str:
+    """Canonical downlink spelling of None, a ``(compressor, lam)`` pair or
+    any object with ``.compressor`` / ``.lam`` (i.e. a Downlink): the
+    default scaling 1.0 is omitted, so ``format(parse(s))`` re-parses to
+    the same pair."""
+    if downlink is None:
+        return "none"
+    if isinstance(downlink, tuple):
+        comp, lam = downlink
+    else:
+        comp, lam = downlink.compressor, downlink.lam
+    atom = format_compressor(comp)
+    return atom if lam == 1.0 else f"{atom}@{lam!r}"
+
+
+# ---------------------------------------------------------------------------
+# pipeline: 'off' | 'depth:k'
+# ---------------------------------------------------------------------------
+
+def parse_pipeline(spec: str) -> int:
+    """``'' | 'off' | 'depth:k'`` -> the double-buffer depth as an int.  The
+    Pipeline dataclass (repro.core.efbv) wraps the depth and enforces the
+    implemented range; this function only speaks the grammar, so 'depth:7'
+    parses here and is rejected by the dataclass."""
+    if not spec or spec == "off":
+        return 0
+    name, _, arg = spec.partition(":")
+    if name == "depth" and arg:
+        try:
+            return int(arg)
+        except ValueError:
+            raise ValueError(f"pipeline spec {spec!r} (want off | "
+                             "depth:0 | depth:1)") from None
+    raise ValueError(f"pipeline spec {spec!r} (want off | depth:0 | "
+                     "depth:1)")
+
+
+def format_pipeline(pipeline: Any) -> str:
+    """Canonical pipeline spelling of an int depth or any object with a
+    ``.depth`` (i.e. a Pipeline): depth 0 prints as 'off'."""
+    depth = pipeline if isinstance(pipeline, int) else pipeline.depth
+    return "off" if depth == 0 else f"depth:{depth}"

@@ -796,29 +796,13 @@ def parse_leaf_rules(spec: str) -> Tuple[Tuple[str, Any], ...]:
 
     Leaves matching no rule keep the experiment's base compressor, so the
     default entry is optional.  Jointly-defined compressors (m-nice) are
-    rejected: their draws couple all workers, not leaves."""
-    from repro.core.compressors import make_compressor
-    rules = []
-    for entry in spec.split(";"):
-        entry = entry.strip()
-        if not entry:
-            continue
-        if "=" in entry:
-            pat, _, comp_spec = entry.partition("=")
-            pat, comp_spec = pat.strip(), comp_spec.strip()
-            if not pat or not comp_spec:
-                raise ValueError(
-                    f"leaf-codec rule {entry!r} needs both a leaf-path "
-                    "pattern and a compressor spec around the '='")
-        else:
-            pat, comp_spec = "*", entry
-        comp = make_compressor(comp_spec)
-        if getattr(comp, "joint", False):
-            raise ValueError(
-                "jointly-defined compressors (m-nice) cannot be leaf-codec "
-                "rules: their draws couple all workers")
-        rules.append((pat, comp))
-    return tuple(rules)
+    rejected: their draws couple all workers, not leaves.
+
+    Thin delegate into the unified spec grammar (repro.core.specgrammar),
+    which also provides the lossless ``format_leaf_rules`` inverse; imported
+    lazily because this module is layout-only."""
+    from repro.core import specgrammar
+    return specgrammar.parse_leaf_rules(spec)
 
 
 def resolve_leaf(rules, path: str, default):

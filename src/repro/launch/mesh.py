@@ -47,6 +47,107 @@ def make_mesh(shape: Sequence[int], axes: Optional[Sequence[str]] = None):
     return compat.make_mesh(tuple(shape), tuple(axes))
 
 
+def multihost_worker_shape(n_workers: int, num_processes: int
+                           ) -> Tuple[int, int]:
+    """Split a worker count into (num_processes, workers_per_process).
+
+    The leading worker axis of a multi-host mesh must tile exactly across
+    processes -- a worker shard that straddled two hosts would turn every
+    phase-1 shard_map into a cross-host collective."""
+    if num_processes < 1:
+        raise ValueError(f"num_processes must be >= 1, got {num_processes}")
+    if n_workers % num_processes:
+        raise ValueError(
+            f"{n_workers} workers cannot tile {num_processes} processes: "
+            f"the leading worker axis must be divisible by the process "
+            f"count so each host owns whole workers")
+    return num_processes, n_workers // num_processes
+
+
+def make_multihost_mesh(shape: Sequence[int],
+                        axes: Optional[Sequence[str]] = None, *,
+                        num_processes: int = 1,
+                        devices: Optional[Sequence] = None):
+    """A mesh whose device layout is PROCESS-MAJOR: process p's devices fill
+    rows [p * rows_per_process, (p+1) * rows_per_process) of the leading
+    mesh axis, contiguously.
+
+    On a real multi-host cluster every jax process contributes its local
+    devices; sorting the global device list by (process_index, id) and
+    reshaping row-major means each host's devices land in one contiguous
+    block of the leading (worker) axis -- so the phase-1 worker collectives
+    of the EF-BV trainers stay host-local wherever the axis splits cleanly.
+    On a single process with fake XLA host devices (CPU CI) the same
+    construction simulates the multi-host layout: pass ``num_processes`` to
+    validate the geometry, the device order is already process-major.
+
+    Axis-name defaults match :func:`make_mesh`.  Requires the leading axis
+    divisible by ``num_processes`` (each process owns whole rows) and
+    ``prod(shape)`` total devices.
+    """
+    import jax
+    from jax.sharding import Mesh
+
+    shape = tuple(shape)
+    if axes is None:
+        defaults = ("pod", "data", "model")
+        if len(shape) > len(defaults):
+            raise ValueError(
+                f"make_multihost_mesh has default axis names for up to "
+                f"{len(defaults)} mesh dims {defaults}, got shape {shape} "
+                f"with {len(shape)} dims -- pass axes= explicitly")
+        axes = defaults[-len(shape):]
+    axes = tuple(axes)
+    multihost_worker_shape(shape[0], num_processes)
+
+    if devices is None:
+        devices = sorted(jax.devices(),
+                         key=lambda d: (d.process_index, d.id))
+    devices = list(devices)
+    total = int(np.prod(shape))
+    if len(devices) != total:
+        raise ValueError(
+            f"mesh shape {shape} needs {total} devices, got {len(devices)}")
+    per_process = total // num_processes
+    owners = [getattr(d, "process_index", 0) for d in devices]
+    if len(set(owners)) > 1:
+        # real multi-host: device i must belong to process i // per_process.
+        # (Single-process fake host devices -- the simulated multi-process
+        # CPU regime -- all report process 0; there the contiguous blocks
+        # ARE the simulated processes and only the geometry is checked.)
+        for i, owner in enumerate(owners):
+            if owner != i // per_process:
+                raise ValueError(
+                    f"device list is not process-major: device {i} belongs "
+                    f"to process {owner}, expected process "
+                    f"{i // per_process} -- sort by (process_index, id) "
+                    f"before building the mesh")
+    dev_array = np.asarray(devices, dtype=object).reshape(shape)
+    try:
+        return Mesh(dev_array, axes,
+                    axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except (AttributeError, TypeError):  # old jax: no axis_types kwarg
+        return Mesh(dev_array, axes)
+
+
+def process_worker_slice(shape: Sequence[int], num_processes: int,
+                         process_index: int) -> range:
+    """The linear worker indices process ``process_index`` owns under the
+    process-major layout of :func:`make_multihost_mesh` (its slice of the
+    global batch, for per-host data pipelines).  The model axis, if any, is
+    the trailing mesh dim and does not change worker numbering."""
+    shape = tuple(shape)
+    # all axes except the trailing 'model' axis are worker axes; a 1-d mesh
+    # is all workers (mesh_worker_count convention in core/spec.py)
+    n = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+    multihost_worker_shape(shape[0], num_processes)
+    if not 0 <= process_index < num_processes:
+        raise ValueError(f"process_index {process_index} out of range for "
+                         f"{num_processes} processes")
+    per = n // num_processes
+    return range(process_index * per, (process_index + 1) * per)
+
+
 def worker_axes(mesh) -> Tuple[str, ...]:
     """The EF-BV 'worker' axes of a mesh = every axis except 'model'.
 

@@ -44,6 +44,78 @@ def moe_init(key, d: int, ff: int, n_experts: int) -> Tuple[Dict, Dict]:
     return params, specs
 
 
+EXPERT_LEAVES = ("wg", "wu", "wd")
+
+
+def _is_moe_subtree(node) -> bool:
+    return (isinstance(node, dict)
+            and "router" in node
+            and all(k in node for k in EXPERT_LEAVES))
+
+
+def expert_activity_mask(moe_grads: Dict) -> Array:
+    """Which experts this round's gradients actually touched.
+
+    Capacity-bounded dispatch scatters a ZERO buffer row to every expert no
+    token routed to (see :func:`_dispatch_group`), so an unrouted expert's
+    wg/wu/wd gradient slab is exactly zero -- its activity is readable off
+    the gradients with no routing side-channel.  Returns a boolean mask of
+    shape ``(..., E)`` (leading dims = any stacked-layer axes of the expert
+    leaves, e.g. ``(L, E)`` for a stacked transformer): True where ANY of
+    the three expert slabs carries a nonzero entry.  Router gradients are
+    dense (every token differentiates through the softmax) and do not enter
+    the mask."""
+    masks = []
+    for name in EXPERT_LEAVES:
+        g = moe_grads[name]
+        # (..., E, a, b) -> (..., E): any nonzero in the per-expert slab
+        masks.append(jnp.any(g != 0, axis=(-2, -1)))
+    return jnp.logical_or(jnp.logical_or(masks[0], masks[1]), masks[2])
+
+
+def zero_inactive_expert_grads(grads, mask=None):
+    """Zero the wg/wu/wd gradient slabs of inactive experts, worker-side.
+
+    This is the enforcement half of the expert-sparsity contract the
+    compressed wire relies on (docs/finetuning.md#expert-sparsity): leaves
+    under any MoE subtree keep only the slabs of experts in ``mask``
+    (default: :func:`expert_activity_mask` derived from the gradients
+    themselves, under which this is mathematically the identity -- the
+    dispatch already produced exact zeros).  Composed with a top-k leaf
+    codec on the expert leaves, the masked gradient's payload carries only
+    routed-expert entries.  Non-MoE subtrees pass through untouched."""
+    def walk(node):
+        if _is_moe_subtree(node):
+            m = expert_activity_mask(node) if mask is None else mask
+            out = dict(node)
+            for name in EXPERT_LEAVES:
+                g = node[name]
+                out[name] = g * m[..., None, None].astype(g.dtype)
+            return out
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(grads)
+
+
+def fixed_routing_params(params):
+    """Pin the router: zero every MoE router leaf, so all logits tie and
+    ``jax.lax.top_k`` deterministically routes every token to experts
+    ``(0, .., k-1)`` (ties break by lowest index).  The deterministic-routing
+    regime the expert-sparsity wire tests pin oracle == shard_map under."""
+    def walk(node):
+        if _is_moe_subtree(node):
+            out = dict(node)
+            out["router"] = jnp.zeros_like(node["router"])
+            return out
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(params)
+
+
 def _auto_axes():
     """Names of non-'model' mesh axes currently under GSPMD (auto) control;
     empty when no mesh is ambient or inside a fully-manual shard_map."""

@@ -117,7 +117,7 @@ class LogReg:
     def minibatch_grads(self, key: Array, x: Array, batch: int) -> Array:
         """Per-worker STOCHASTIC gradients, shape (n, d): each worker draws a
         uniform (with replacement) minibatch of ``batch`` samples from its own
-        shard, the federated stochastic-gradient regime of run_federated.
+        shard, the federated stochastic-gradient regime of run_reference.
         Unbiased: E over the draw equals :meth:`grads`."""
         Ni = self.A.shape[1]
         keys = jax.random.split(key, self.n)

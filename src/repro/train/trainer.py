@@ -172,6 +172,7 @@ def make_train_step(
     downlink: Optional[Downlink] = None,
     participation: Optional[Participation] = None,
     pipeline: Optional[Pipeline] = None,
+    grad_transform: Optional[Callable[[PyTree], PyTree]] = None,
 ) -> Callable[[TrainState, Any, jax.Array], Tuple[TrainState, dict]]:
     """Build the jitted multi-pod train step.
 
@@ -183,7 +184,7 @@ def make_train_step(
     and bit-packed codecs ignore it).
 
     With ``downlink`` the step runs *bidirectional* compression
-    (core/efbv.py::Downlink / run_bidirectional, same math here): workers
+    (core/efbv.py::Downlink / run_reference, same math here): workers
     evaluate gradients at the master's downlink control variate w -- their
     shared reconstruction of the model -- and the round ends with ONE
     compressed broadcast C_s(x^{t+1} - w^t) through the downlink codec,
@@ -199,6 +200,14 @@ def make_train_step(
     subset) and threads it through the shard_map as a worker-sharded (n,)
     array; absent workers' messages are gated to decode-zero and their h_i
     stay stale.  None / 'full' keeps the original unmasked code path.
+
+    ``grad_transform`` (optional) rewrites each worker's fp32 gradient tree
+    BEFORE Algorithm 1's compress step -- the worker-side hook of the MoE
+    expert-sparsity contract (``repro.models.moe.zero_inactive_expert_grads``
+    composes the routed-expert mask with the wire codec so the payload only
+    carries routed experts; docs/finetuning.md#expert-sparsity).  It must be
+    a per-worker pure function of one gradient pytree; None is the exact
+    historical step.
 
     ``pipeline`` (depth 1) switches on the one-round-stale two-phase
     schedule (docs/algorithms.md#pipelined-rounds): the master applies the
@@ -229,6 +238,8 @@ def make_train_step(
         (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             params_for_grad, batch_i)
         grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
         message, h_i_new = compress_local(algo, kw, grads, h_i, mode=agg_mode,
                                           wire_dtype=wire_dtype, mask=m,
                                           worker=widx, stream=stream)
@@ -427,12 +438,14 @@ def make_train_step_fsdp(
     downlink: Optional[Downlink] = None,
     participation: Optional[Participation] = None,
     pipeline: Optional[Pipeline] = None,
+    grad_transform: Optional[Callable[[PyTree], PyTree]] = None,
 ) -> Callable[[TrainState, Any, jax.Array], Tuple[TrainState, dict]]:
     """Pure-GSPMD train step: vmap over the worker axis for per-worker grads,
     FSDP-sharded params/optimizer state, same EF-BV wire as the shard_map
     trainer (compress_local / combine_global / broadcast_global are shared,
     incl. the federated participation masking, the compressed downlink
-    broadcast and the pipelined one-round-stale schedule -- see
+    broadcast, the worker-side ``grad_transform`` hook and the pipelined
+    one-round-stale schedule -- see
     :func:`make_train_step` for the ``pipeline`` double-buffer semantics;
     phase 1 runs under vmap here, so the streaming kernel variant stays
     off)."""
@@ -454,7 +467,10 @@ def make_train_step_fsdp(
         def one(wbatch):
             (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
                 params, wbatch)
-            return loss, aux, jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            if grad_transform is not None:
+                grads = grad_transform(grads)
+            return loss, aux, grads
 
         loss, aux, grads = jax.vmap(one)(wb)
         return loss, aux, grads, keys

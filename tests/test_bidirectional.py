@@ -29,7 +29,7 @@ from harness import (assert_bit_identical, codec_impls,
                      run_federated_trajectory)
 from repro.core import (
     BlockTopK, Downlink, EFBV, Identity, Natural, Participation, QSGD, RandK,
-    SignNorm, TopK, make_compressor, make_fleet, run, run_bidirectional,
+    SignNorm, TopK, make_compressor, make_fleet, run_reference,
     theory, tune_for,
 )
 from repro.core.compressors import MNice, expand_fleet
@@ -393,10 +393,10 @@ def test_fleet_run_converges_on_quadratic():
     fleet = make_fleet("topk:8;randk:16;qsgd:16", n)
     t = tune_for(fleet, d, n, L=L, Ltilde=Lt)
     algo = EFBV.make(fleet, d=d, n=n)
-    _, _, m = run(algo=algo,
-                  grad_fn=lambda x: jnp.einsum("nij,j->ni", Q, x) - b,
-                  x0=jnp.zeros(d), gamma=t.gamma, steps=3000, key=KEY, n=n,
-                  record=lambda x: jnp.sum((x - x_star) ** 2))
+    m = run_reference(algo=algo,
+                      grad_fn=lambda _k, x: jnp.einsum("nij,j->ni", Q, x) - b,
+                      x0=jnp.zeros(d), gamma=t.gamma, steps=3000, key=KEY,
+                      n=n, record=lambda x: jnp.sum((x - x_star) ** 2)).metrics
     # worst-case mixed-fleet tuning is conservative (r close to 1 with the
     # unbiased members' omega): ask for 3 orders of magnitude, not exactness
     assert float(m[-1]) < 1e-3 * float(m[0]), (float(m[0]), float(m[-1]))
@@ -413,11 +413,11 @@ def test_fleet_bidirectional_run_converges():
 
     fleet = make_fleet("topk:8;qsgd:16", n)
     algo = EFBV.make(fleet, d=d, n=n)
-    x, w, m = run_bidirectional(
+    m = run_reference(
         algo=algo, downlink=Downlink(TopK(16)),
         grad_fn=lambda k, x: jnp.einsum("nij,j->ni", Q, x) - b,
         x0=jnp.zeros(d), gamma=0.05, steps=4000, key=KEY, n=n,
-        record=lambda x: jnp.sum((x - x_star) ** 2))
+        record=lambda x: jnp.sum((x - x_star) ** 2)).metrics
     assert float(m[-1]) < 1e-5 * max(float(jnp.sum(x_star ** 2)), 1.0)
 
 

@@ -180,7 +180,7 @@ def test_mnice_efbv_converges():
     """EF-BV under partial participation (DIANA-style nu=1, lam=1/(1+omega))
     still converges linearly on a strongly convex problem."""
     from repro.core.compressors import MNice
-    from repro.core import EFBV, run, tune
+    from repro.core import EFBV, run_reference, tune
     import numpy as np
     n, d = 8, 12
     key = jax.random.key(2)
@@ -194,7 +194,8 @@ def test_mnice_efbv_converges():
     t = tune(comp.eta(d), comp.omega(d), comp.omega_av(d, n), mode="diana",
              L=4.0, Ltilde=4.0)
     algo = EFBV(comp, lam=t.lam, nu=t.nu)
-    x, _, m = run(algo=algo, grad_fn=grads, x0=jnp.zeros(d), gamma=t.gamma,
-                  steps=4000, key=jax.random.key(4), n=n,
-                  record=lambda x: jnp.sum((x - x_star) ** 2))
+    m = run_reference(algo=algo, grad_fn=lambda _k, x: grads(x),
+                      x0=jnp.zeros(d), gamma=t.gamma, steps=4000,
+                      key=jax.random.key(4), n=n,
+                      record=lambda x: jnp.sum((x - x_star) ** 2)).metrics
     assert float(m[-1]) < 1e-6 * float(jnp.sum(x_star**2)), float(m[-1])

@@ -8,11 +8,17 @@ import pytest
 
 from repro.core import (
     CompKK, EFBV, Identity, RandK, TopK, prox_l1, prox_l2, proximal_step,
-    run, tune_for,
+    run_reference, tune_for,
 )
 from repro.problems import LogReg, make_synthetic
 
 KEY = jax.random.key(0)
+
+
+def keyless(grad_fn):
+    """Adapt an exact-gradient x -> grads function to run_reference's
+    (resample_key, x) signature (the key is ignored)."""
+    return lambda _k, x: grad_fn(x)
 
 
 def quad_problem(n=8, d=16, seed=0):
@@ -39,8 +45,8 @@ def test_identity_compressor_is_gd():
     """With C = Id, EF-BV reverts to exact gradient descent (Remark 2)."""
     grads, x_star, mu, L, Lt = quad_problem()
     algo = EFBV(Identity(), lam=1.0, nu=1.0)
-    x, _, _ = run(algo=algo, grad_fn=grads, x0=jnp.zeros(16), gamma=1.0 / L,
-                  steps=300, key=KEY, n=8)
+    x = run_reference(algo=algo, grad_fn=keyless(grads), x0=jnp.zeros(16),
+                      gamma=1.0 / L, steps=300, key=KEY, n=8).x
     assert float(jnp.linalg.norm(x - x_star)) < 1e-4
 
 
@@ -125,10 +131,10 @@ def test_linear_convergence_at_theory_rate():
     t = tune_for(comp, 16, n=8, mode="efbv", L=L, Ltilde=Lt, mu=mu)
     algo = EFBV(comp, lam=t.lam, nu=t.nu)
     steps = 2500
-    x, _, metrics = run(algo=algo, grad_fn=grads, x0=jnp.zeros(16),
+    res = run_reference(algo=algo, grad_fn=keyless(grads), x0=jnp.zeros(16),
                         gamma=t.gamma, steps=steps, key=KEY, n=8,
                         record=lambda x: jnp.sum((x - x_star) ** 2))
-    final = float(metrics[-1])
+    final = float(res.metrics[-1])
     initial = float(jnp.sum(x_star**2))
     assert final < 1e-8 * initial, (final, initial)
 
@@ -140,9 +146,9 @@ def test_variance_reduction_h_tracks_gradients():
     comp = CompKK(2, 8)
     t = tune_for(comp, 16, n=8, mode="efbv", L=L, Ltilde=Lt)
     algo = EFBV(comp, lam=t.lam, nu=t.nu)
-    x, st, _ = run(algo=algo, grad_fn=grads, x0=jnp.zeros(16), gamma=t.gamma,
-                   steps=8000, key=KEY, n=8)
-    res = float(jnp.mean(jnp.sum((grads(x) - st.h) ** 2, -1)))
+    ref = run_reference(algo=algo, grad_fn=keyless(grads), x0=jnp.zeros(16),
+                        gamma=t.gamma, steps=8000, key=KEY, n=8)
+    res = float(jnp.mean(jnp.sum((grads(ref.x) - ref.state.h) ** 2, -1)))
     assert res < 1e-6, res
 
 
@@ -168,9 +174,9 @@ def test_logreg_efbv_beats_ef21_bits():
         t = tune_for(comp, d, prob.n, mode=mode, L=prob.L(),
                      Ltilde=prob.L_tilde())
         algo = EFBV(comp, lam=t.lam, nu=t.nu)
-        _, _, m = run(algo=algo, grad_fn=prob.grads, x0=jnp.zeros(d),
-                      gamma=t.gamma, steps=4000, key=KEY, n=prob.n,
-                      record=lambda x: prob.f(x) - fstar)
+        m = run_reference(algo=algo, grad_fn=keyless(prob.grads),
+                          x0=jnp.zeros(d), gamma=t.gamma, steps=4000, key=KEY,
+                          n=prob.n, record=lambda x: prob.f(x) - fstar).metrics
         res[mode] = float(m[-1])
     assert res["efbv"] < res["ef21"], res
 
@@ -179,35 +185,36 @@ def test_bidirectional_compression_converges():
     """Beyond-paper: master-side broadcast compression (the Downlink
     channel, EF21-BC-style) on top of EF-BV still converges to the exact
     solution."""
-    from repro.core import Downlink, run_bidirectional, TopK
+    from repro.core import Downlink, TopK
     grads, x_star, mu, L, Lt = quad_problem()
     comp = TopK(4)
     t = tune_for(comp, 16, n=8, mode="efbv", L=L, Ltilde=Lt)
     algo = EFBV(comp, lam=t.lam, nu=t.nu)
-    x, w, m = run_bidirectional(
+    res = run_reference(
         algo=algo, downlink=Downlink(TopK(6)),
-        grad_fn=lambda k, x: grads(x), x0=jnp.zeros(16),
+        grad_fn=keyless(grads), x0=jnp.zeros(16),
         gamma=t.gamma * 0.5,  # broadcast error feedback tolerates a smaller step
         steps=6000, key=KEY, n=8,
         record=lambda x: jnp.sum((x - x_star) ** 2))
-    assert float(m[-1]) < 1e-7 * float(jnp.sum(x_star**2)), float(m[-1])
+    assert float(res.metrics[-1]) < 1e-7 * float(jnp.sum(x_star**2))
     # the workers' reconstruction has converged to the same point
-    assert float(jnp.sum((w - x_star) ** 2)) < 1e-6 * float(jnp.sum(x_star**2))
+    assert float(jnp.sum((res.w - x_star) ** 2)) < 1e-6 * float(jnp.sum(x_star**2))
 
 
 def test_bidirectional_identity_downlink_is_bitwise_run():
     """Identity downlink + full participation reproduces the unidirectional
-    run() trajectory BIT-FOR-BIT (the downlink assigns w = x verbatim and
-    every key derivation is shared)."""
-    from repro.core import Downlink, Identity, run_bidirectional
+    trajectory BIT-FOR-BIT (the downlink assigns w = x verbatim and every
+    key derivation is shared)."""
+    from repro.core import Downlink, Identity
     grads, x_star, mu, L, Lt = quad_problem()
     comp = TopK(4)
     t = tune_for(comp, 16, n=8, mode="efbv", L=L, Ltilde=Lt)
     algo = EFBV(comp, lam=t.lam, nu=t.nu)
-    kw = dict(algo=algo, x0=jnp.zeros(16), gamma=t.gamma, steps=40, key=KEY,
-              n=8, record=lambda x: jnp.sum((x - x_star) ** 2))
-    _, _, m_uni = run(grad_fn=grads, **kw)
-    x_bi, w_bi, m_bi = run_bidirectional(
-        downlink=Downlink(Identity()), grad_fn=lambda k, x: grads(x), **kw)
-    np.testing.assert_array_equal(np.asarray(m_uni), np.asarray(m_bi))
-    np.testing.assert_array_equal(np.asarray(x_bi), np.asarray(w_bi))
+    kw = dict(algo=algo, grad_fn=keyless(grads), x0=jnp.zeros(16),
+              gamma=t.gamma, steps=40, key=KEY, n=8,
+              record=lambda x: jnp.sum((x - x_star) ** 2))
+    uni = run_reference(**kw)
+    bi = run_reference(downlink=Downlink(Identity()), **kw)
+    np.testing.assert_array_equal(np.asarray(uni.metrics),
+                                  np.asarray(bi.metrics))
+    np.testing.assert_array_equal(np.asarray(bi.x), np.asarray(bi.w))

@@ -22,7 +22,7 @@ from harness import (assert_bit_identical, codec_impls, quadratic_grads,
                      run_codec_trajectory, run_federated_trajectory)
 from repro.core import (
     BlockTopK, EFBV, Natural, Participation, QSGD, RandK, SignNorm, TopK,
-    run, run_federated, theory, tune, tune_for, tune_partial,
+    run_reference, theory, tune, tune_for, tune_partial,
 )
 from repro.core.compressors import MNice
 from repro.core.efbv import participation_key
@@ -84,20 +84,20 @@ def test_step_federated_full_mask_is_bitwise_step():
         x = x - 0.05 * g_a
 
 
-def test_run_federated_full_equals_run_bitwise():
+def test_run_reference_all_present_mask_equals_fast_path_bitwise():
+    """fixed:n participation samples an all-ones mask, so the masked
+    step_federated path must reproduce the unmasked EFBV.step fast path
+    bit-for-bit over a whole trajectory."""
     grad_fn = quadratic_grads(8, 16, seed=3)
     algo = EFBV(RandK(4), lam=0.5, nu=0.8)
-    x_a, st_a, m_a = run(algo=algo, grad_fn=grad_fn, x0=jnp.zeros(16),
-                         gamma=0.03, steps=25, key=KEY, n=8,
-                         record=lambda x: jnp.sum(x * x))
-    x_b, st_b, m_b = run_federated(
-        algo=algo, grad_fn=lambda k, x: grad_fn(x), x0=jnp.zeros(16),
-        gamma=0.03, steps=25, key=KEY, n=8,
-        participation=Participation.parse("full"),
-        record=lambda x: jnp.sum(x * x))
-    assert_bit_identical(x_a, x_b, "x")
-    assert_bit_identical(tuple(st_a), tuple(st_b), "state")
-    assert_bit_identical(m_a, m_b, "metrics")
+    kw = dict(algo=algo, grad_fn=lambda k, x: grad_fn(x), x0=jnp.zeros(16),
+              gamma=0.03, steps=25, key=KEY, n=8,
+              record=lambda x: jnp.sum(x * x))
+    a = run_reference(participation=Participation.parse("full"), **kw)
+    b = run_reference(participation=Participation.parse("fixed:8"), **kw)
+    assert_bit_identical(a.x, b.x, "x")
+    assert_bit_identical(tuple(a.state), tuple(b.state), "state")
+    assert_bit_identical(a.metrics, b.metrics, "metrics")
 
 
 @pytest.mark.parametrize("mode", ["dense_psum", "sparse_allgather"])
@@ -301,11 +301,11 @@ def test_federated_convergence_bernoulli_half():
     comp = TopK(4)
     t = tune_partial(comp.eta(16), comp.omega(16), 0.5, n=8, L=L, Ltilde=Lt)
     algo = EFBV(comp, lam=t.lam, nu=t.nu)
-    x, _, m = run_federated(
+    m = run_reference(
         algo=algo, grad_fn=lambda k, x: grads(x), x0=jnp.zeros(16),
         gamma=t.gamma, steps=25000, key=KEY, n=8,
         participation=Participation.parse("bernoulli:0.5"),
-        record=lambda x: jnp.sum((x - x_star) ** 2))
+        record=lambda x: jnp.sum((x - x_star) ** 2)).metrics
     # exact solution: with exact local gradients the messages C(grad_i - h_i)
     # vanish at the fixed point, so sampling noise vanishes with them
     assert float(m[-1]) < 1e-5 * float(jnp.sum(x_star ** 2)), float(m[-1])
@@ -328,11 +328,11 @@ def test_minibatch_grads_unbiased_and_converges():
     t = tune_partial(comp.eta(d), comp.omega(d), 0.5, n=prob.n,
                      L=prob.L(), Ltilde=prob.L_tilde())
     algo = EFBV(comp, lam=t.lam, nu=t.nu)
-    _, _, m = run_federated(
+    m = run_reference(
         algo=algo, grad_fn=lambda k, x: prob.minibatch_grads(k, x, 8),
         x0=jnp.zeros(d), gamma=t.gamma, steps=20000, key=KEY, n=prob.n,
         participation=Participation.parse("bernoulli:0.5"),
-        record=lambda x: prob.f(x) - fstar)
+        record=lambda x: prob.f(x) - fstar).metrics
     f0 = float(prob.f(jnp.zeros(d)) - fstar)
     assert float(jnp.mean(m[-100:])) < 0.15 * f0, (float(jnp.mean(m[-100:])), f0)
 

@@ -8,16 +8,15 @@ Four obligations, all acceptance-critical:
    exercises round-trips losslessly.
 2. *Inconsistent specs are rejected loudly* with actionable messages
    (sparse wire + heterogeneous fleet, oversized fixed participation, ...).
-3. *The deprecated shims are bit-identical to their spec-driven
-   replacements*: run / run_federated / run_bidirectional vs
-   build(spec).reference(), and the three historical harness legs vs the
-   spec-driven run_trajectory.
+3. *The spec-driven path is bit-identical to direct driver calls*:
+   build(spec).reference() vs run_reference with the spec's pieces passed
+   by hand, and the three historical harness legs vs the spec-driven
+   run_trajectory.
 4. *Checkpoints carry the spec*: the embedded fingerprint gates resume.
 """
 
 import dataclasses
 import json
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -29,8 +28,7 @@ from harness import (run_bidirectional_trajectory, run_codec_trajectory,
                      run_federated_trajectory, run_trajectory,
                      assert_bit_identical)
 from repro.core import (Downlink, ExperimentSpec, Participation, SpecError,
-                        build, make_compressor, run, run_bidirectional,
-                        run_federated, run_reference)
+                        build, make_compressor, run_reference)
 
 # every codec spec exercised by tests/test_wire_codecs.py's registry test,
 # plus the fleet / downlink / participation axes the suite uses
@@ -152,32 +150,28 @@ def test_parse_bad_values_rejected():
 
 
 # ---------------------------------------------------------------------------
-# 3a. deprecated reference drivers == spec-driven replacement, bitwise
+# 3a. spec-driven reference == direct run_reference calls, bitwise
 # ---------------------------------------------------------------------------
 
-def _silence():
-    warnings.simplefilter("ignore", DeprecationWarning)
-
-
-def test_run_shim_bit_identical_to_spec_reference():
-    """The historical run() == build(spec).reference() bit-for-bit."""
-    _silence()
+def test_spec_reference_bit_identical_to_direct_run_reference():
+    """build(spec).reference() == a hand-assembled run_reference call
+    (exact gradients, full participation) bit-for-bit -- incl. the
+    fold_in(key(seed), 0x5EED) root-key derivation."""
     spec = ExperimentSpec(compressor="comp:2,16", problem="quadratic",
                           n=6, d=32, steps=15, seed=0, gamma=0.04)
     r = build(spec)
     prob = r.problem_instance()
     res = r.reference(record=prob.f)
-    x, state, m = run(algo=r.algo, grad_fn=prob.grads, x0=jnp.zeros(32),
-                      gamma=0.04, steps=15,
-                      key=jax.random.fold_in(jax.random.key(0), 0x5EED),
-                      n=6, record=prob.f)
+    ref = run_reference(algo=r.algo, grad_fn=lambda _k, x: prob.grads(x),
+                        x0=jnp.zeros(32), gamma=0.04, steps=15,
+                        key=jax.random.fold_in(jax.random.key(0), 0x5EED),
+                        n=6, record=prob.f)
     assert_bit_identical((res.x, res.state.h, res.metrics),
-                         (x, state.h, m), "run shim")
+                         (ref.x, ref.state.h, ref.metrics), "spec reference")
     assert res.w is None
 
 
-def test_run_federated_shim_bit_identical_to_spec_reference():
-    _silence()
+def test_spec_federated_reference_bit_identical_to_direct_run_reference():
     spec = ExperimentSpec(compressor="qsgd:8", problem="logreg",
                           participation="bernoulli:0.5", resample=True,
                           n=5, d=24, steps=10, seed=1, gamma=0.05)
@@ -185,38 +179,28 @@ def test_run_federated_shim_bit_identical_to_spec_reference():
     prob = r.problem_instance()
     gf = lambda k, x: prob.minibatch_grads(k, x, max(1, prob.A.shape[1] // 8))  # noqa: E731
     res = r.reference(record=prob.f)
-    x, state, m = run_federated(
+    ref = run_reference(
         algo=r.algo, grad_fn=gf, x0=jnp.zeros(24), gamma=0.05, steps=10,
         key=jax.random.fold_in(jax.random.key(1), 0x5EED), n=5,
         participation=r.participation, record=prob.f)
     assert_bit_identical((res.x, res.state.h, res.metrics),
-                         (x, state.h, m), "run_federated shim")
+                         (ref.x, ref.state.h, ref.metrics), "federated spec")
 
 
-def test_run_bidirectional_shim_bit_identical_to_spec_reference():
-    _silence()
+def test_spec_bidirectional_reference_bit_identical_to_direct_run_reference():
     spec = ExperimentSpec(compressor="qsgd:8", downlink="block_topk:8,2",
                           participation="fixed:3", problem="quadratic",
                           n=5, d=24, steps=10, seed=2, gamma=0.03)
     r = build(spec)
     prob = r.problem_instance()
     res = r.reference(record=prob.f)
-    x, w, m = run_bidirectional(
+    ref = run_reference(
         algo=r.algo, downlink=r.downlink,
         grad_fn=lambda _k, x: prob.grads(x), x0=jnp.zeros(24), gamma=0.03,
         steps=10, key=jax.random.fold_in(jax.random.key(2), 0x5EED), n=5,
         participation=r.participation, record=prob.f)
-    assert_bit_identical((res.x, res.w, res.metrics), (x, w, m),
-                         "run_bidirectional shim")
-
-
-def test_shims_emit_deprecation_warnings():
-    spec = ExperimentSpec(n=2, d=8, steps=1, gamma=0.1)
-    r = build(spec)
-    prob = r.problem_instance()
-    with pytest.warns(DeprecationWarning, match="run_reference"):
-        run(algo=r.algo, grad_fn=prob.grads, x0=jnp.zeros(8), gamma=0.1,
-            steps=1, key=jax.random.key(0), n=2)
+    assert_bit_identical((res.x, res.w, res.metrics),
+                         (ref.x, ref.w, ref.metrics), "bidirectional spec")
 
 
 def test_run_reference_full_equals_federated_full_bitwise():

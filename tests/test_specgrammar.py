@@ -1,0 +1,223 @@
+"""The unified spec grammar (core/specgrammar.py): four mini-languages, one
+parser/printer module.
+
+Obligations pinned here:
+
+1. *Verbatim round-trips* -- for every compressor / fleet / leaf-rule /
+   downlink / pipeline spec string used anywhere in this suite (and in the
+   committed ``examples/specs/*.json`` files), the unified grammar parses it
+   to the same value as the historical entry points it replaced, and
+   ``parse(format(parse(s))) == parse(s)`` losslessly.
+2. *Delegates are thin* -- ``Downlink.parse`` / ``Pipeline.parse`` /
+   ``make_fleet`` / ``wire.parse_leaf_rules`` agree exactly with the
+   ``specgrammar`` functions they wrap, error messages included.
+3. *Formatting is canonical* -- aliases normalize (``none`` -> ``identity``),
+   default ``@1.0`` downlink scalings are omitted, leaf-rule catch-alls print
+   their explicit ``*=`` pattern.
+"""
+
+import json
+import pathlib
+
+import pytest
+
+from repro.core import Downlink, make_compressor, specgrammar
+from repro.core.compressors import Identity, MNice, QSGD, TopK, make_fleet
+from repro.core.efbv import Pipeline
+from repro.distributed import wire
+
+SPECS_DIR = pathlib.Path(__file__).resolve().parents[1] / "examples" / "specs"
+
+# Every atom spelling exercised in this suite (tests/test_spec.py CODEC_SPECS
+# plus the zoo aliases).
+CODEC_SPECS = [
+    "identity", "none", "topk:8", "randk:4", "scaled_randk:4", "comp:2,8",
+    "mix:2,4", "block_topk:16,2", "block_topk:256,16", "sign", "natural",
+    "qsgd:16", "frac_topk:50", "frac_comp:20,400",
+]
+
+# Fleet strings used across tests/test_spec.py, test_bidirectional.py,
+# test_wire_codecs.py and docs/wire_format.md.
+FLEET_SPECS = [
+    "topk:7;qsgd:16;sign", "frac_topk:50;qsgd:16", "topk:16;qsgd:16",
+    "topk:16", "topk:16;", "topk:7;randk:9;sign", "topk:5;qsgd:8",
+    "topk:4;sign", "topk:8;randk:16;qsgd:16", "topk:8;qsgd:16",
+    "topk:8;randk:8;qsgd:16", "topk:64;qsgd:16",
+]
+
+# Leaf-codec rule strings used across test_tree_wire.py, test_serve_delta.py
+# and the docs.
+LEAF_RULE_SPECS = [
+    "*embed*=qsgd:16;*norm*=identity", "*embed*=qsgd:16", "*=sign",
+    "embed*=qsgd:16;bias=identity", "embed*=qsgd:16;*norm*=identity;block_topk:256,16",
+    "", "   ;  ",
+]
+
+# Downlink strings from tests/test_spec.py DOWNLINK_SPECS + launch/serve.py.
+DOWNLINK_SPECS = ["", "none", "qsgd:16", "block_topk:16,2", "topk:48",
+                  "sign@0.9", "topk:64@0.9", "identity"]
+
+PIPELINE_SPECS = ["", "off", "depth:0", "depth:1"]
+
+
+# ---------------------------------------------------------------------------
+# 1. atoms: parse == make_compressor, format∘parse lossless
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", CODEC_SPECS)
+def test_atom_parse_matches_make_compressor_and_round_trips(spec):
+    comp = specgrammar.parse_compressor(spec)
+    assert comp == make_compressor(spec)
+    canon = specgrammar.format_compressor(comp)
+    assert specgrammar.parse_compressor(canon) == comp
+
+
+def test_atom_format_normalizes_the_none_alias():
+    assert specgrammar.format_compressor(make_compressor("none")) == "identity"
+
+
+def test_atom_format_rejects_joint_compressors():
+    with pytest.raises(ValueError, match="no spec-string spelling"):
+        specgrammar.format_compressor(MNice(n=4, m=2))
+
+
+def test_atom_unknown_name_error_verbatim():
+    with pytest.raises(ValueError) as e:
+        specgrammar.parse_compressor("nope:3")
+    assert "unknown compressor 'nope'; known:" in str(e.value)
+
+
+# ---------------------------------------------------------------------------
+# 2. fleets: parse == make_fleet delegate, format∘parse lossless
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", FLEET_SPECS)
+def test_fleet_parse_matches_make_fleet_and_round_trips(spec):
+    n = 8
+    fleet = specgrammar.parse_fleet(spec, n)
+    assert fleet == make_fleet(spec, n)
+    assert len(fleet) == n
+    canon = specgrammar.format_fleet(fleet)
+    assert specgrammar.parse_fleet(canon, n) == fleet
+
+
+def test_fleet_empty_error_verbatim():
+    with pytest.raises(ValueError, match="empty compressor fleet"):
+        make_fleet(" ; ", 4)
+
+
+def test_fleet_too_long_error_verbatim():
+    with pytest.raises(ValueError, match="fleet of 3 members for only 2 workers"):
+        make_fleet("sign;sign;sign", 2)
+
+
+# ---------------------------------------------------------------------------
+# 3. leaf-codec rules: parse == wire.parse_leaf_rules delegate
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", LEAF_RULE_SPECS)
+def test_leaf_rules_parse_matches_wire_and_round_trips(spec):
+    rules = specgrammar.parse_leaf_rules(spec)
+    assert rules == wire.parse_leaf_rules(spec)
+    canon = specgrammar.format_leaf_rules(rules)
+    assert specgrammar.parse_leaf_rules(canon) == rules
+
+
+def test_leaf_rules_bare_atom_is_catch_all_and_formats_explicitly():
+    rules = specgrammar.parse_leaf_rules("embed*=qsgd:16;sign")
+    assert rules == (("embed*", QSGD(16)), ("*", make_compressor("sign")))
+    assert specgrammar.format_leaf_rules(rules) == "embed*=qsgd:16;*=sign"
+
+
+def test_leaf_rules_missing_half_error_verbatim():
+    with pytest.raises(ValueError, match="needs both a leaf-path pattern"):
+        wire.parse_leaf_rules("=qsgd:16")
+    with pytest.raises(ValueError, match="needs both a leaf-path pattern"):
+        specgrammar.parse_leaf_rules("embed*=")
+
+
+def test_leaf_rules_joint_compressor_error_verbatim():
+    # the string grammar cannot even name a joint compressor ...
+    with pytest.raises(ValueError, match="unknown compressor 'mnice'"):
+        wire.parse_leaf_rules("embed*=mnice:4,2")
+    # ... and the formatter refuses to invent a spelling for one
+    with pytest.raises(ValueError, match="no spec-string spelling"):
+        specgrammar.format_leaf_rules((("embed*", MNice(n=4, m=2)),))
+
+
+# ---------------------------------------------------------------------------
+# 4. downlink: parse == Downlink.parse delegate
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", DOWNLINK_SPECS)
+def test_downlink_parse_matches_delegate_and_round_trips(spec):
+    pair = specgrammar.parse_downlink(spec)
+    dl = Downlink.parse(spec)
+    if pair is None:
+        assert dl is None
+    else:
+        assert dl == Downlink(compressor=pair[0], lam=pair[1])
+    canon = specgrammar.format_downlink(pair)
+    assert specgrammar.parse_downlink(canon) == pair
+    # the Downlink object formats identically to the raw pair
+    assert specgrammar.format_downlink(dl) == canon
+
+
+def test_downlink_format_canonical_spellings():
+    assert specgrammar.format_downlink(None) == "none"
+    assert specgrammar.format_downlink((QSGD(16), 1.0)) == "qsgd:16"
+    assert specgrammar.format_downlink((TopK(64), 0.9)) == "topk:64@0.9"
+    assert specgrammar.parse_downlink("topk:64@0.9") == (TopK(64), 0.9)
+
+
+# ---------------------------------------------------------------------------
+# 5. pipeline: parse == Pipeline.parse delegate
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", PIPELINE_SPECS)
+def test_pipeline_parse_matches_delegate_and_round_trips(spec):
+    depth = specgrammar.parse_pipeline(spec)
+    assert Pipeline.parse(spec) == Pipeline(depth=depth)
+    canon = specgrammar.format_pipeline(depth)
+    assert specgrammar.parse_pipeline(canon) == depth
+    assert specgrammar.format_pipeline(Pipeline(depth=depth)) == canon
+
+
+def test_pipeline_grammar_vs_dataclass_split():
+    # the grammar accepts any int depth; the dataclass enforces the
+    # implemented range (so the 'not implemented' message survives verbatim)
+    assert specgrammar.parse_pipeline("depth:2") == 2
+    with pytest.raises(ValueError, match="pipeline depth 2 not implemented"):
+        Pipeline.parse("depth:2")
+
+
+@pytest.mark.parametrize("bad", ["depth:", "async", "depth:x"])
+def test_pipeline_bad_spec_error_verbatim(bad):
+    with pytest.raises(ValueError) as e:
+        Pipeline.parse(bad)
+    assert f"pipeline spec {bad!r} (want off | depth:0 | depth:1)" in str(e.value)
+
+
+# ---------------------------------------------------------------------------
+# 6. every committed spec file parses through the unified grammar losslessly
+# ---------------------------------------------------------------------------
+
+def test_committed_spec_files_round_trip_through_the_grammar():
+    files = sorted(SPECS_DIR.glob("*.json"))
+    assert files, "no committed spec files found"
+    for path in files:
+        payload = json.loads(path.read_text())
+        comp_spec = payload.get("compressor", "identity")
+        n = int(payload.get("n", 1))
+        fleet = specgrammar.parse_fleet(comp_spec, n)
+        assert specgrammar.parse_fleet(
+            specgrammar.format_fleet(fleet), n) == fleet
+        pair = specgrammar.parse_downlink(payload.get("downlink", ""))
+        assert specgrammar.parse_downlink(
+            specgrammar.format_downlink(pair)) == pair
+        rules = specgrammar.parse_leaf_rules(payload.get("leaf_codecs", ""))
+        assert specgrammar.parse_leaf_rules(
+            specgrammar.format_leaf_rules(rules)) == rules
+        depth = specgrammar.parse_pipeline(payload.get("pipeline", "off"))
+        assert specgrammar.parse_pipeline(
+            specgrammar.format_pipeline(depth)) == depth
