@@ -8,7 +8,7 @@ export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test-tier1 test-all test-slow bench bench-micro smoke smoke-federated \
 	smoke-bidirectional smoke-spec smoke-pipelined smoke-tree smoke-serve \
-	smoke-finetune docs-test docs-check
+	smoke-finetune docs-test docs-check lint sanitize-smoke
 
 test-tier1:
 	JAX_PLATFORMS=cpu $(PY) -m pytest -x -q
@@ -33,6 +33,25 @@ docs-test:
 
 docs-check: docs-test
 	$(PY) tools/check_links.py docs README.md
+
+# the repo-invariant static analyzer (docs/static_analysis.md): AST rules
+# over src/ + tests/ pinned against the committed golden counts, the docs
+# link/doctest census, and the dense-free proof for every registered pack
+# kernel.  Mirrors the CI `lint` job.
+lint:
+	$(PY) -m repro.analysis src/ tests/ --golden ANALYSIS_GOLDEN.json
+	$(PY) -m repro.analysis --docs
+	JAX_PLATFORMS=cpu $(PY) -m repro.analysis --hlo-gate
+
+# dynamic sanitizer (repro.analysis.sanitize): one smoke step of each
+# trainer under jax_debug_nans + forced Pallas interpret mode
+sanitize-smoke:
+	JAX_PLATFORMS=cpu $(PY) -m repro.launch.train --arch qwen2-0.5b --smoke \
+	    --mesh 2x2 --steps 2 --global-batch 8 --seq 32 \
+	    --compressor block_topk:256,16 --agg sparse_allgather --sanitize
+	JAX_PLATFORMS=cpu $(PY) -m repro.launch.finetune \
+	    --spec examples/specs/finetune_moe.json --steps 2 \
+	    --global-batch 8 --seq 32 --eval-every 2 --sanitize
 
 smoke:
 	JAX_PLATFORMS=cpu $(PY) -m repro.launch.train --arch qwen2-0.5b --smoke \

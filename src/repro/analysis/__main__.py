@@ -1,0 +1,116 @@
+"""CLI: ``python -m repro.analysis`` (also the ``repro-analysis`` script).
+
+Modes (combinable; exit code is non-zero if any requested mode fails):
+
+  python -m repro.analysis src/ tests/          # AST rules over .py trees
+  python -m repro.analysis --docs               # link check + doctest census
+  python -m repro.analysis --hlo-gate           # dense-free kernel proofs
+  python -m repro.analysis src/ --golden ANALYSIS_GOLDEN.json
+  python -m repro.analysis src/ tests/ --write-golden ANALYSIS_GOLDEN.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis import framework
+from repro.analysis import rules as _rules  # noqa: F401  (populates RULES)
+
+
+def _parse_args(argv):
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis",
+        description="repo-invariant static analysis (rules: %s)"
+                    % ", ".join(sorted(framework.RULES)))
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories of .py sources to lint")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable findings report on stdout")
+    ap.add_argument("--rules", default="",
+                    help="comma-separated subset of rules to run")
+    ap.add_argument("--golden", default="",
+                    help="compare finding counts against this golden file")
+    ap.add_argument("--write-golden", default="",
+                    help="write finding counts to this golden file and exit 0")
+    ap.add_argument("--docs", nargs="*", metavar="PATH",
+                    help="run the docs analysis (link check + doctest "
+                         "census) over PATHs (default: docs README.md)")
+    ap.add_argument("--hlo-gate", nargs="*", metavar="KERNEL",
+                    help="prove registered pack kernels dense-free "
+                         "(default: all registered kernels)")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = _parse_args(sys.argv[1:] if argv is None else argv)
+    status = 0
+    ran_anything = False
+
+    if args.docs is not None:
+        from repro.analysis import docs as docs_mod
+
+        ran_anything = True
+        status = max(status, docs_mod.main(list(args.docs)))
+
+    if args.hlo_gate is not None:
+        from repro.analysis import hlo
+
+        ran_anything = True
+        reports = hlo.gate(list(args.hlo_gate) or None)
+        for r in reports:
+            line = (f"dense-free {r.kernel}: d={r.d} tile={r.tile} "
+                    f"max_inner={r.max_inner} -> "
+                    + ("PROVEN" if r.ok else "VIOLATED"))
+            print(line)
+            for v in r.violations:
+                print(f"  {v}", file=sys.stderr)
+        if not all(r.ok for r in reports):
+            status = max(status, 1)
+
+    if args.paths:
+        ran_anything = True
+        rules = None
+        if args.rules:
+            names = [n.strip() for n in args.rules.split(",") if n.strip()]
+            unknown = [n for n in names if n not in framework.RULES]
+            if unknown:
+                print(f"unknown rules: {', '.join(unknown)} "
+                      f"(known: {', '.join(sorted(framework.RULES))})",
+                      file=sys.stderr)
+                return 2
+            rules = {n: framework.RULES[n] for n in names}
+        result = framework.analyze_paths(args.paths, rules)
+        if args.write_golden:
+            framework.write_golden(result, args.write_golden)
+            print(f"wrote {args.write_golden}: {result.counts()}")
+            return status
+        if args.json:
+            print(json.dumps(result.as_dict(), indent=1, sort_keys=True))
+        else:
+            for f in result.findings + result.errors:
+                print(f.format())
+            c = result.counts()
+            print(f"repro.analysis: {c['files']} files, "
+                  f"{len(result.findings) + len(result.errors)} findings, "
+                  f"{len(result.suppressed)} suppressed "
+                  f"({len(c['rules'])} rules active)")
+        if result.findings or result.errors:
+            status = max(status, 1)
+        if args.golden:
+            diffs = framework.compare_golden(result, args.golden)
+            for d in diffs:
+                print(f"golden drift: {d}", file=sys.stderr)
+            if diffs:
+                status = max(status, 1)
+
+    if not ran_anything:
+        print("nothing to do: give source paths and/or --docs/--hlo-gate "
+              "(see --help)", file=sys.stderr)
+        return 2
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

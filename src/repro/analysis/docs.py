@@ -1,0 +1,106 @@
+"""Docs analysis: offline link checking + doctest discovery.
+
+The link checker (formerly ``tools/check_links.py``, which remains as a
+thin shim) validates every markdown link target:
+
+  * relative links must resolve to an existing file or directory
+    (anchors are stripped; pure-anchor links are checked against the
+    file's own headings);
+  * http(s) links are only syntax-checked (CI runs offline).
+
+Doctest discovery parses every ``>>>`` example in the same markdown set
+with :class:`doctest.DocTestParser` -- a malformed example (bad prompt
+continuation, unparseable source) fails here instead of silently being
+skipped by the pytest collector, and the per-file example counts make an
+empty docs-test run (collector misconfiguration) loud.
+"""
+
+from __future__ import annotations
+
+import doctest
+import re
+import sys
+from pathlib import Path
+from typing import List, Tuple
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#+\s+(.*)$", re.MULTILINE)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug."""
+    s = re.sub(r"[`*_]", "", heading.strip().lower())
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def check_file(md: Path) -> List[str]:
+    text = md.read_text()
+    anchors = {slugify(h) for h in HEADING_RE.findall(text)}
+    errors = []
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        if not path_part:  # same-file anchor
+            if anchor and slugify(anchor) not in anchors:
+                errors.append(f"{md}: dangling anchor #{anchor}")
+            continue
+        resolved = (md.parent / path_part).resolve()
+        if not resolved.exists():
+            errors.append(f"{md}: broken link -> {target}")
+    return errors
+
+
+def discover_doctests(md: Path) -> Tuple[int, List[str]]:
+    """-> (number of ``>>>`` examples, parse errors) for one markdown file."""
+    text = md.read_text()
+    parser = doctest.DocTestParser()
+    n = 0
+    errors: List[str] = []
+    try:
+        for item in parser.parse(text, name=str(md)):
+            if isinstance(item, doctest.Example):
+                n += 1
+    except ValueError as e:
+        errors.append(f"{md}: malformed doctest: {e}")
+    return n, errors
+
+
+def iter_md_files(argv: List[str]) -> Tuple[List[Path], List[str]]:
+    files: List[Path] = []
+    missing: List[str] = []
+    for a in argv:
+        p = Path(a)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.exists():
+            files.append(p)
+        else:
+            missing.append(a)
+    return files, missing
+
+
+def main(argv: List[str]) -> int:
+    if not argv:
+        argv = ["docs", "README.md"]
+    files, missing = iter_md_files(argv)
+    for a in missing:
+        print(f"check_links: no such path {a}", file=sys.stderr)
+    if missing:
+        return 2
+    errors = [e for f in files for e in check_file(f)]
+    n_examples = 0
+    for f in files:
+        n, errs = discover_doctests(f)
+        n_examples += n
+        errors.extend(errs)
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_links: {len(files)} files, {n_examples} doctest examples, "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,236 @@
+"""The lint framework: rule registry, suppressions, runner, reports.
+
+A *rule* is a function from a parsed :class:`Module` to a list of
+:class:`Finding`\\ s, registered under a stable kebab-case name via the
+:func:`rule` decorator.  The runner parses every ``.py`` file under the
+given paths once, hands the module to each registered rule, then applies
+per-line suppressions:
+
+    x = jnp.dot(a, b)  # repro: noqa(low-precision-accumulation)
+
+A suppression silences exactly the named rule on exactly that line --
+and an *unused* suppression (no finding of that rule on that line) is
+itself reported as ``unused-suppression``, so stale noqa comments cannot
+accumulate after the underlying code is fixed.
+
+Findings are reported human-readable (``path:line:col: rule: message``)
+or as JSON (``--json``); per-rule finding/suppression counts can be
+pinned against a committed golden file (``--golden``) so any drift in
+the analyzer or the tree shows up as a diff, not a vibe.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import json
+import re
+import tokenize
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+#: pseudo-rule name for stale suppression comments (always active; not a
+#: registered rule -- it cannot itself be suppressed)
+UNUSED_SUPPRESSION = "unused-suppression"
+
+_NOQA_RE = re.compile(r"#\s*repro:\s*noqa\(([^)]*)\)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic: a rule firing at a source location."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule}: {self.message}"
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Module:
+    """A parsed source file, as handed to every rule."""
+
+    path: Path
+    src: str
+    tree: ast.Module
+
+    @property
+    def parts(self) -> Tuple[str, ...]:
+        return self.path.parts
+
+    def finding(self, rule: str, node: ast.AST, message: str) -> Finding:
+        return Finding(rule=rule, path=str(self.path),
+                       line=getattr(node, "lineno", 1),
+                       col=getattr(node, "col_offset", 0) + 1,
+                       message=message)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    name: str
+    doc: str
+    check: Callable[[Module], List[Finding]]
+
+
+#: the registry: rule name -> Rule.  Populated by importing repro.analysis
+#: .rules (the @rule decorator); the runner iterates this.
+RULES: Dict[str, Rule] = {}
+
+
+def rule(name: str, doc: str):
+    """Register ``fn(module) -> [Finding]`` under ``name``."""
+    def deco(fn):
+        if name in RULES:
+            raise ValueError(f"duplicate rule name {name!r}")
+        RULES[name] = Rule(name=name, doc=doc, check=fn)
+        return fn
+    return deco
+
+
+def parse_suppressions(src: str) -> Dict[int, Dict[str, bool]]:
+    """line -> {rule_name: used_flag} from ``repro: noqa`` comments.
+
+    Tokenized, not line-scanned: a noqa spelled inside a string literal or
+    docstring (e.g. documentation showing the syntax) is not a suppression.
+    """
+    out: Dict[int, Dict[str, bool]] = {}
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(src).readline))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        return out  # analyze_file reports the parse error separately
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = _NOQA_RE.search(tok.string)
+        if not m:
+            continue
+        names = [n.strip() for n in m.group(1).split(",") if n.strip()]
+        if names:
+            out[tok.start[0]] = {n: False for n in names}
+    return out
+
+
+@dataclasses.dataclass
+class AnalysisResult:
+    findings: List[Finding]
+    suppressed: List[Finding]
+    files: int
+    errors: List[Finding]
+
+    def counts(self) -> dict:
+        """The golden-file payload: per-rule finding + suppression counts."""
+        def tally(fs: Iterable[Finding]) -> Dict[str, int]:
+            out: Dict[str, int] = {}
+            for f in fs:
+                out[f.rule] = out.get(f.rule, 0) + 1
+            return dict(sorted(out.items()))
+        return {"files": self.files,
+                "rules": sorted(RULES),
+                "findings": tally(self.findings + self.errors),
+                "suppressions": tally(self.suppressed)}
+
+    def as_dict(self) -> dict:
+        return {**self.counts(),
+                "details": [f.as_dict() for f in self.findings + self.errors]}
+
+
+def iter_py_files(paths: Iterable[str]) -> List[Path]:
+    files: List[Path] = []
+    for a in paths:
+        p = Path(a)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py" and p.exists():
+            files.append(p)
+    # dedupe while keeping order (overlapping path args)
+    seen = set()
+    out = []
+    for f in files:
+        if f not in seen:
+            seen.add(f)
+            out.append(f)
+    return out
+
+
+def analyze_file(path: Path, rules: Optional[Dict[str, Rule]] = None
+                 ) -> Tuple[List[Finding], List[Finding], List[Finding]]:
+    """-> (findings, suppressed findings, parse errors) for one file."""
+    rules = RULES if rules is None else rules
+    src = path.read_text()
+    try:
+        tree = ast.parse(src, filename=str(path))
+    except SyntaxError as e:
+        return [Finding(rule="parse-error", path=str(path),
+                        line=e.lineno or 1, col=(e.offset or 0) + 1,
+                        message=f"syntax error: {e.msg}")], [], []
+    mod = Module(path=path, src=src, tree=tree)
+    noqa = parse_suppressions(src)
+    kept: List[Finding] = []
+    suppressed: List[Finding] = []
+    for r in rules.values():
+        for f in r.check(mod):
+            line_noqa = noqa.get(f.line)
+            if line_noqa is not None and f.rule in line_noqa:
+                line_noqa[f.rule] = True
+                suppressed.append(f)
+            else:
+                kept.append(f)
+    unused: List[Finding] = []
+    for line, names in sorted(noqa.items()):
+        for name, used in names.items():
+            if name not in rules and name not in RULES:
+                unused.append(Finding(
+                    rule=UNUSED_SUPPRESSION, path=str(path), line=line, col=1,
+                    message=f"noqa names unknown rule {name!r} "
+                            f"(known: {', '.join(sorted(RULES))})"))
+            elif not used:
+                unused.append(Finding(
+                    rule=UNUSED_SUPPRESSION, path=str(path), line=line, col=1,
+                    message=f"suppression of {name!r} matches no finding on "
+                            "this line -- delete the stale noqa"))
+    kept.extend(unused)
+    kept.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return kept, suppressed, []
+
+
+def analyze_paths(paths: Iterable[str],
+                  rules: Optional[Dict[str, Rule]] = None) -> AnalysisResult:
+    files = iter_py_files(paths)
+    findings: List[Finding] = []
+    suppressed: List[Finding] = []
+    errors: List[Finding] = []
+    for f in files:
+        kept, sup, err = analyze_file(f, rules)
+        findings.extend(kept)
+        suppressed.extend(sup)
+        errors.extend(err)
+    return AnalysisResult(findings=findings, suppressed=suppressed,
+                          files=len(files), errors=errors)
+
+
+def compare_golden(result: AnalysisResult, golden_path: str) -> List[str]:
+    """Differences between a fresh run and the committed golden counts."""
+    try:
+        golden = json.loads(Path(golden_path).read_text())
+    except (OSError, ValueError) as e:
+        return [f"golden file {golden_path}: unreadable ({e})"]
+    fresh = result.counts()
+    diffs = []
+    for key in ("files", "rules", "findings", "suppressions"):
+        if golden.get(key) != fresh.get(key):
+            diffs.append(f"golden {key} = {golden.get(key)!r} but fresh run "
+                         f"has {fresh.get(key)!r}")
+    return diffs
+
+
+def write_golden(result: AnalysisResult, golden_path: str) -> None:
+    Path(golden_path).write_text(
+        json.dumps(result.counts(), indent=1, sort_keys=True) + "\n")

@@ -1,0 +1,816 @@
+"""The repo-specific rules (docs/static_analysis.md has the catalog).
+
+Each rule encodes one invariant the EF-BV reproduction otherwise enforces
+by reviewer folklore:
+
+* ``prng-reuse``                 -- compressor-independence discipline (the
+  omega/n variance reduction needs independent draws; a silently reused key
+  correlates workers without failing a test), plus the named ``*_FOLD``
+  registry of core/efbv.py for stream separation.
+* ``low-precision-accumulation`` -- the mamba2 batch-invariance bug class:
+  matmuls/reductions over bf16/f16 operands accumulate in bf16 unless
+  ``preferred_element_type`` / an f32 upcast is given.
+* ``hot-path-ravel``             -- ravel/unravel in kernels/, distributed/,
+  train/ is a wasted HBM pass; the pytree-native wire exists to avoid it.
+* ``spec-fingerprint-stability`` -- ExperimentSpec/ServeSpec fields must be
+  frozen scalars, and every post-v1 field must serialize-to-nothing at its
+  default so pre-existing fingerprints stay byte-identical.
+* ``pallas-kernel-hygiene``      -- kernels must not close over enclosing
+  function state (tracers), must declare in_specs/out_specs, and must not
+  build f64 values from python floats.
+* ``shard-map-spec-consistency`` -- literal in_specs/out_specs arity vs the
+  callee signature; axis names vs the ('pod', 'data', 'model') mesh.
+"""
+
+from __future__ import annotations
+
+import ast
+import builtins
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.framework import Finding, Module, rule
+
+# --------------------------------------------------------------------------
+# shared AST helpers
+# --------------------------------------------------------------------------
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'jax.random.normal' for nested Attributes, 'self.key' etc; None if
+    the expression is not a plain dotted name."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _kwarg(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _iter_scopes(tree: ast.Module):
+    """Yield (scope_node, body) for the module and every function."""
+    yield tree, tree.body
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node, node.body
+
+
+def _scope_nodes(scope: ast.AST):
+    """All nodes belonging to ``scope`` itself, not descending into nested
+    function/class scopes (those are visited as scopes of their own)."""
+    stack = list(ast.iter_child_nodes(scope))
+    while stack:
+        n = stack.pop()
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.ClassDef)):
+            continue
+        yield n
+        stack.extend(ast.iter_child_nodes(n))
+
+
+def _stmt_calls(stmt: ast.stmt) -> List[ast.Call]:
+    """All calls inside a simple statement, in source order."""
+    calls = [n for n in ast.walk(stmt) if isinstance(n, ast.Call)]
+    calls.sort(key=lambda c: (c.lineno, c.col_offset))
+    return calls
+
+
+# --------------------------------------------------------------------------
+# R1: prng-reuse
+# --------------------------------------------------------------------------
+
+_SAMPLERS = frozenset({
+    "normal", "uniform", "bernoulli", "randint", "permutation", "choice",
+    "bits", "categorical", "gumbel", "exponential", "truncated_normal",
+    "laplace", "rademacher", "beta", "gamma", "poisson", "dirichlet",
+    "cauchy", "logistic", "maxwell", "multivariate_normal", "orthogonal",
+    "t", "loggamma", "chisquare", "geometric", "binomial", "ball",
+})
+_DERIVERS = frozenset({"key", "PRNGKey", "split", "fold_in", "clone",
+                       "wrap_key_data"})
+#: fold_in data below this is an index (leaf j, worker i, step t) -- the
+#: idiomatic per-element derivation.  At or above it, the literal is a magic
+#: stream-separation tag that belongs in core/efbv.py's *_FOLD registry.
+_FOLD_LITERAL_FLOOR = 256
+
+
+def _jr_name(func: ast.expr) -> Optional[str]:
+    """The jax.random function name of a call target, or None."""
+    if isinstance(func, ast.Attribute) and func.attr in (_SAMPLERS | _DERIVERS):
+        base = _dotted(func.value)
+        if base and ("random" in base.split(".") or
+                     base.split(".")[-1] in ("jr", "jrandom")):
+            return func.attr
+    return None
+
+
+def _key_arg(call: ast.Call) -> Optional[ast.expr]:
+    if call.args:
+        return call.args[0]
+    return _kwarg(call, "key")
+
+
+class _R1State:
+    __slots__ = ("status",)
+
+    def __init__(self, status: Optional[Dict[str, Tuple[str, int]]] = None):
+        self.status = dict(status or {})  # name -> ("consumed", line)
+
+    def copy(self) -> "_R1State":
+        return _R1State(self.status)
+
+    def merge(self, *others: "_R1State") -> None:
+        for o in others:
+            for name, st in o.status.items():
+                if name not in self.status or st[0] == "consumed":
+                    self.status[name] = st
+
+
+def _r1_calls(mod: Module, node: ast.AST, state: _R1State,
+              findings: List[Finding], loop_carried: bool) -> None:
+    for call in _stmt_calls(node) if isinstance(node, ast.stmt) \
+            else sorted((n for n in ast.walk(node)
+                         if isinstance(n, ast.Call)),
+                        key=lambda c: (c.lineno, c.col_offset)):
+        fname = _jr_name(call.func)
+        if fname is None:
+            continue
+        if fname == "fold_in":
+            data = call.args[1] if len(call.args) > 1 else _kwarg(call, "data")
+            if (isinstance(data, ast.Constant) and type(data.value) is int
+                    and data.value >= _FOLD_LITERAL_FLOOR):
+                findings.append(mod.finding(
+                    "prng-reuse", call,
+                    f"literal fold constant {data.value:#x} bypasses the "
+                    "registered *_FOLD names (core/efbv.py); give the stream "
+                    "a named registry constant"))
+            continue  # fold_in derives, it does not consume the base key
+        if fname in _SAMPLERS or fname == "split":
+            target = _key_arg(call)
+            name = _dotted(target) if target is not None else None
+            if name is None:
+                continue
+            prior = state.status.get(name)
+            if prior is not None and prior[0] == "consumed":
+                where = ("reused across loop iterations"
+                         if loop_carried else
+                         f"already consumed at line {prior[1]}")
+                findings.append(mod.finding(
+                    "prng-reuse", call,
+                    f"key {name!r} {where} and is consumed again by "
+                    f"jax.random.{fname} without an interleaving "
+                    "split/fold_in -- correlated draws break the "
+                    "compressor-independence the omega/n variance "
+                    "reduction relies on"))
+            state.status[name] = ("consumed", call.lineno)
+
+
+def _r1_bind(stmt: ast.stmt, state: _R1State) -> None:
+    """Apply a statement's assignment effect on the key-tracking state."""
+    targets: List[ast.expr] = []
+    value: Optional[ast.expr] = None
+    if isinstance(stmt, ast.Assign):
+        targets, value = stmt.targets, stmt.value
+    elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+        targets, value = [stmt.target], stmt.value
+    elif isinstance(stmt, ast.AugAssign):
+        targets, value = [stmt.target], None
+    if value is None and not targets:
+        return
+    derives = (isinstance(value, ast.Call)
+               and _jr_name(value.func) in _DERIVERS)
+    for t in targets:
+        names = ([_dotted(e) for e in t.elts]
+                 if isinstance(t, (ast.Tuple, ast.List)) else [_dotted(t)])
+        for n in names:
+            if n is None:
+                continue
+            if derives:
+                state.status.pop(n, None)  # fresh key
+            else:
+                state.status.pop(n, None)  # rebound to a non-key value
+
+
+def _terminates(stmts: List[ast.stmt]) -> bool:
+    """Does this branch body unconditionally leave the join point?"""
+    return bool(stmts) and isinstance(
+        stmts[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break))
+
+
+def _r1_block(mod: Module, stmts: Iterable[ast.stmt], state: _R1State,
+              findings: List[Finding], loop_carried: bool = False) -> None:
+    for stmt in stmts:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue  # separate scope, scanned on its own
+        if isinstance(stmt, ast.If):
+            _r1_calls(mod, stmt.test, state, findings, loop_carried)
+            b1, b2 = state.copy(), state.copy()
+            _r1_block(mod, stmt.body, b1, findings, loop_carried)
+            _r1_block(mod, stmt.orelse, b2, findings, loop_carried)
+            # a branch ending in return/raise/continue/break never reaches
+            # the join: an `if cond: return sampler(key)` guard does NOT
+            # poison the fall-through path's use of the key
+            live = [b for b, stmts in ((b1, stmt.body), (b2, stmt.orelse))
+                    if not _terminates(stmts)]
+            if live:
+                state.status = live[0].status
+                state.merge(*live[1:])
+            continue
+        if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+            head = stmt.iter if isinstance(stmt, (ast.For, ast.AsyncFor)) \
+                else stmt.test
+            _r1_calls(mod, head, state, findings, loop_carried)
+            if isinstance(stmt, (ast.For, ast.AsyncFor)):
+                _r1_bind(ast.Assign(targets=[stmt.target],
+                                    value=ast.Constant(value=None)), state)
+            # pass 1: findings within a single iteration
+            body_state = state.copy()
+            _r1_block(mod, stmt.body, body_state, findings, loop_carried)
+            # pass 2 (fixpoint trick): a key consumed in iteration 1 and not
+            # re-derived before its next consumption fires here -- the
+            # loop-carried reuse a single linear pass cannot see
+            seen = {(f.line, f.col) for f in findings}
+            extra: List[Finding] = []
+            tail_state = body_state.copy()
+            _r1_block(mod, stmt.body, tail_state, extra, loop_carried=True)
+            findings.extend(f for f in extra
+                            if (f.line, f.col) not in seen)
+            _r1_block(mod, stmt.orelse, tail_state, findings, loop_carried)
+            state.merge(tail_state)
+            continue
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                _r1_calls(mod, item.context_expr, state, findings,
+                          loop_carried)
+            _r1_block(mod, stmt.body, state, findings, loop_carried)
+            continue
+        if isinstance(stmt, ast.Try):
+            _r1_block(mod, stmt.body, state, findings, loop_carried)
+            for h in stmt.handlers:
+                _r1_block(mod, h.body, state.copy(), findings, loop_carried)
+            _r1_block(mod, stmt.orelse, state, findings, loop_carried)
+            _r1_block(mod, stmt.finalbody, state, findings, loop_carried)
+            continue
+        _r1_calls(mod, stmt, state, findings, loop_carried)
+        _r1_bind(stmt, state)
+
+
+@rule("prng-reuse",
+      "a jax.random key consumed twice without an interleaving split/"
+      "fold_in, and literal fold constants bypassing the *_FOLD registry")
+def check_prng_reuse(mod: Module) -> List[Finding]:
+    findings: List[Finding] = []
+    for _scope, body in _iter_scopes(mod.tree):
+        _r1_block(mod, body, _R1State(), findings)
+    return findings
+
+
+# --------------------------------------------------------------------------
+# R2: low-precision-accumulation
+# --------------------------------------------------------------------------
+
+_LOW_DTYPES = {"bfloat16", "float16", "f16", "bf16", "half"}
+_HIGH_DTYPES = {"float32", "float64", "f32", "f64", "single", "double"}
+_CONTRACTIONS = {"dot", "matmul", "einsum", "tensordot", "vdot", "inner"}
+_REDUCTIONS = {"sum", "mean", "cumsum", "nansum", "average"}
+
+
+def _dtype_class(node: Optional[ast.expr]) -> Optional[str]:
+    """'low' / 'high' / None for a dtype-like expression."""
+    if node is None:
+        return None
+    name = None
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        name = node.value
+    elif isinstance(node, (ast.Name, ast.Attribute)):
+        d = _dotted(node)
+        name = d.split(".")[-1] if d else None
+    if name in _LOW_DTYPES:
+        return "low"
+    if name in _HIGH_DTYPES:
+        return "high"
+    return None
+
+
+def _is_lowp(e: ast.expr, tainted: Set[str]) -> bool:
+    if isinstance(e, ast.Name):
+        return e.id in tainted
+    if isinstance(e, ast.Attribute):
+        return _dotted(e) in tainted
+    if isinstance(e, ast.Call):
+        if isinstance(e.func, ast.Attribute) and e.func.attr == "astype":
+            cls = _dtype_class(e.args[0] if e.args else None)
+            if cls == "low":
+                return True
+            if cls == "high":
+                return False
+            return False  # dynamic dtype (.astype(x.dtype)): not statically low
+        cls = _dtype_class(_kwarg(e, "dtype"))
+        if cls == "low":
+            return True
+        if cls == "high":
+            return False
+        return False
+    if isinstance(e, ast.BinOp):
+        return _is_lowp(e.left, tainted) or _is_lowp(e.right, tainted)
+    if isinstance(e, ast.UnaryOp):
+        return _is_lowp(e.operand, tainted)
+    if isinstance(e, ast.Subscript):
+        return _is_lowp(e.value, tainted)
+    if isinstance(e, (ast.Tuple, ast.List)):
+        return any(_is_lowp(x, tainted) for x in e.elts)
+    return False
+
+
+@rule("low-precision-accumulation",
+      "matmul/einsum/sum/mean over bf16/f16 operands without "
+      "preferred_element_type or an f32 operand upcast")
+def check_low_precision(mod: Module) -> List[Finding]:
+    findings: List[Finding] = []
+    for scope, _body in _iter_scopes(mod.tree):
+        if not isinstance(scope, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Module)):
+            continue
+        events: List[Tuple[int, int, str, ast.AST]] = []
+        for n in _scope_nodes(scope):
+            if isinstance(n, ast.Assign):
+                events.append((n.lineno, n.col_offset, "assign", n))
+            elif isinstance(n, ast.BinOp) and isinstance(n.op, ast.MatMult):
+                events.append((n.lineno, n.col_offset, "matmul", n))
+            elif isinstance(n, ast.Call):
+                events.append((n.lineno, n.col_offset, "call", n))
+        events.sort(key=lambda e: (e[0], e[1]))
+        tainted: Set[str] = set()
+        for _line, _col, kind, n in events:
+            if kind == "assign":
+                names = []
+                for t in n.targets:
+                    names.extend([_dotted(e) for e in t.elts]
+                                 if isinstance(t, (ast.Tuple, ast.List))
+                                 else [_dotted(t)])
+                low = _is_lowp(n.value, tainted)
+                for nm in names:
+                    if nm is None:
+                        continue
+                    (tainted.add if low else tainted.discard)(nm)
+                continue
+            if kind == "matmul":
+                if _is_lowp(n.left, tainted) or _is_lowp(n.right, tainted):
+                    findings.append(mod.finding(
+                        "low-precision-accumulation", n,
+                        "'@' on a bf16/f16 operand accumulates in low "
+                        "precision (the mamba2 batch-invariance bug class); "
+                        "upcast the operands to f32 or use "
+                        "jax.lax.dot_general with preferred_element_type"))
+                continue
+            call = n
+            fname = None
+            if isinstance(call.func, ast.Attribute):
+                fname = call.func.attr
+            elif isinstance(call.func, ast.Name):
+                fname = call.func.id
+            if fname in _CONTRACTIONS:
+                if _kwarg(call, "preferred_element_type") is not None:
+                    continue
+                operands = [a for a in call.args
+                            if not (isinstance(a, ast.Constant)
+                                    and isinstance(a.value, str))]
+                if any(_is_lowp(a, tainted) for a in operands):
+                    findings.append(mod.finding(
+                        "low-precision-accumulation", call,
+                        f"{fname} over a bf16/f16 operand without "
+                        "preferred_element_type accumulates in low "
+                        "precision; pass preferred_element_type=jnp.float32 "
+                        "or upcast the operands"))
+            elif fname in _REDUCTIONS:
+                if _dtype_class(_kwarg(call, "dtype")) == "high":
+                    continue
+                operands = list(call.args)
+                if (isinstance(call.func, ast.Attribute)
+                        and _dotted(call.func.value) not in
+                        ("jnp", "np", "jax.numpy", "numpy")):
+                    operands.append(call.func.value)  # x.sum() method form
+                if any(_is_lowp(a, tainted) for a in operands):
+                    findings.append(mod.finding(
+                        "low-precision-accumulation", call,
+                        f"{fname} over a bf16/f16 operand accumulates in "
+                        "low precision; pass dtype=jnp.float32 or upcast "
+                        "the operand first"))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# R3: hot-path-ravel
+# --------------------------------------------------------------------------
+
+_HOT_DIRS = {"kernels", "distributed", "train"}
+
+
+@rule("hot-path-ravel",
+      "ravel/ravel_pytree/unravel inside kernels/, distributed/, train/ -- "
+      "the wasted-HBM-pass class the pytree-native wire eliminates")
+def check_hot_path_ravel(mod: Module) -> List[Finding]:
+    if not _HOT_DIRS & set(mod.parts):
+        return []
+    findings: List[Finding] = []
+    for n in ast.walk(mod.tree):
+        if not isinstance(n, ast.Call):
+            continue
+        fname = (n.func.attr if isinstance(n.func, ast.Attribute)
+                 else n.func.id if isinstance(n.func, ast.Name) else None)
+        if fname and "ravel" in fname:
+            findings.append(mod.finding(
+                "hot-path-ravel", n,
+                f"{fname} in a hot path costs a full dense HBM pass per "
+                "call; the per-leaf TreeWire codecs exist so payloads never "
+                "round-trip through a flat vector"))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# R4: spec-fingerprint-stability
+# --------------------------------------------------------------------------
+
+#: the spec_version-1 field set: these serialized from PR 1 on, so they are
+#: allowed (required, even) to appear in every to_dict() output.  Any field
+#: NOT in this set postdates shipped fingerprints and must delete itself
+#: from the dict at its default value.
+SPEC_V1_FIELDS = frozenset({
+    "compressor", "mode", "agg", "wire_dtype", "downlink", "participation",
+    "resample", "backend", "problem", "smoke", "mesh", "n", "d", "steps",
+    "gamma", "seed",
+})
+_SPEC_CLASSES = ("ExperimentSpec", "ServeSpec")
+
+
+def _is_frozen_dataclass(cls: ast.ClassDef) -> bool:
+    for dec in cls.decorator_list:
+        if isinstance(dec, ast.Call):
+            name = _dotted(dec.func) or ""
+            if name.split(".")[-1] == "dataclass":
+                kw = _kwarg(dec, "frozen")
+                if isinstance(kw, ast.Constant) and kw.value is True:
+                    return True
+    return False
+
+
+def _dataclass_fields(cls: ast.ClassDef) -> List[Tuple[str, Optional[ast.expr],
+                                                       ast.AST]]:
+    out = []
+    for stmt in cls.body:
+        if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target,
+                                                          ast.Name):
+            ann = ast.dump(stmt.annotation)
+            if "ClassVar" in ann:
+                continue
+            out.append((stmt.target.id, stmt.value, stmt))
+    return out
+
+
+def _to_dict_deletes(cls: ast.ClassDef) -> Optional[Dict[str, object]]:
+    """field -> compared-default for every ``if self.X == v: del d["X"]``
+    guard in the class's to_dict; None when the class has no to_dict."""
+    fn = next((s for s in cls.body
+               if isinstance(s, ast.FunctionDef) and s.name == "to_dict"),
+              None)
+    if fn is None:
+        return None
+    deletes: Dict[str, object] = {}
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.If):
+            continue
+        t = node.test
+        if not (isinstance(t, ast.Compare) and len(t.ops) == 1
+                and isinstance(t.ops[0], ast.Eq)
+                and isinstance(t.comparators[0], ast.Constant)):
+            continue
+        lhs = _dotted(t.left)
+        if not (lhs and lhs.startswith("self.")):
+            continue
+        field = lhs[len("self."):]
+        for inner in ast.walk(node):
+            if isinstance(inner, ast.Delete):
+                for tgt in inner.targets:
+                    if (isinstance(tgt, ast.Subscript)
+                            and isinstance(tgt.slice, ast.Constant)
+                            and tgt.slice.value == field):
+                        deletes[field] = t.comparators[0].value
+    return deletes
+
+
+@rule("spec-fingerprint-stability",
+      "ExperimentSpec/ServeSpec fields must be frozen hashable scalars and "
+      "post-v1 fields must serialize-to-nothing at their defaults")
+def check_spec_stability(mod: Module) -> List[Finding]:
+    findings: List[Finding] = []
+    for cls in ast.walk(mod.tree):
+        if not (isinstance(cls, ast.ClassDef) and cls.name in _SPEC_CLASSES):
+            continue
+        if not _is_frozen_dataclass(cls):
+            findings.append(mod.finding(
+                "spec-fingerprint-stability", cls,
+                f"{cls.name} must be @dataclasses.dataclass(frozen=True): "
+                "specs are jit-static and fingerprint-hashed"))
+        fields = _dataclass_fields(cls)
+        for name, default, node in fields:
+            if default is None:
+                findings.append(mod.finding(
+                    "spec-fingerprint-stability", node,
+                    f"{cls.name}.{name} has no default; every spec field "
+                    "needs a scalar default so old spec files keep loading"))
+            elif not (isinstance(default, ast.Constant)
+                      and isinstance(default.value,
+                                     (str, int, float, bool, type(None)))):
+                findings.append(mod.finding(
+                    "spec-fingerprint-stability", node,
+                    f"{cls.name}.{name} default is not an immutable JSON "
+                    "scalar; mutable/computed defaults break hashing and "
+                    "lossless serialization"))
+        if cls.name != "ExperimentSpec":
+            continue
+        deletes = _to_dict_deletes(cls)
+        if deletes is None:
+            findings.append(mod.finding(
+                "spec-fingerprint-stability", cls,
+                "ExperimentSpec has no to_dict(): the fingerprint "
+                "serialization contract cannot be checked"))
+            continue
+        for name, default, node in fields:
+            if name in SPEC_V1_FIELDS:
+                continue
+            if name not in deletes:
+                findings.append(mod.finding(
+                    "spec-fingerprint-stability", node,
+                    f"field {name!r} postdates spec_version 1 but to_dict() "
+                    "never deletes it at its default -- every pre-existing "
+                    "fingerprint and BENCH row key would change; add "
+                    f"'if self.{name} == <default>: del d[\"{name}\"]'"))
+            elif (isinstance(default, ast.Constant)
+                  and deletes[name] != default.value):
+                findings.append(mod.finding(
+                    "spec-fingerprint-stability", node,
+                    f"to_dict() drops {name!r} when it equals "
+                    f"{deletes[name]!r} but the field default is "
+                    f"{default.value!r}; a default-constructed spec would "
+                    "serialize the field and shift every fingerprint"))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# R5: pallas-kernel-hygiene
+# --------------------------------------------------------------------------
+
+_ARRAY_CTORS = {"zeros": 1, "ones": 1, "array": 1, "asarray": 1, "full": 2,
+                "arange": 1}
+_BUILTINS = frozenset(dir(builtins))
+
+
+def _is_kernel_def(fn: ast.AST) -> bool:
+    if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return False
+    if fn.name.endswith("_kernel"):
+        return True
+    return any(a.arg.endswith("_ref") for a in fn.args.args)
+
+
+def _local_names(fn: ast.FunctionDef) -> Set[str]:
+    names = {a.arg for a in (fn.args.args + fn.args.kwonlyargs
+                             + fn.args.posonlyargs)}
+    if fn.args.vararg:
+        names.add(fn.args.vararg.arg)
+    if fn.args.kwarg:
+        names.add(fn.args.kwarg.arg)
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store):
+            names.add(n.id)
+        elif isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and n is not fn:
+            names.add(n.name)
+        elif isinstance(n, ast.comprehension):
+            for t in ast.walk(n.target):
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+    return names
+
+
+@rule("pallas-kernel-hygiene",
+      "kernels must not close over enclosing-function values (tracers), "
+      "must declare in_specs/out_specs, and must not widen to f64")
+def check_pallas_hygiene(mod: Module) -> List[Finding]:
+    if "kernels" not in mod.parts:
+        return []
+    findings: List[Finding] = []
+    module_names = {n.name for n in mod.tree.body
+                    if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.ClassDef))}
+    for n in mod.tree.body:
+        if isinstance(n, (ast.Import, ast.ImportFrom)):
+            for alias in n.names:
+                module_names.add((alias.asname or alias.name).split(".")[0])
+        elif isinstance(n, ast.Assign):
+            for t in n.targets:
+                if isinstance(t, ast.Name):
+                    module_names.add(t.id)
+
+    # (a) closure-over-tracer proxy: a kernel nested in a function must not
+    # read names bound by that enclosing function (pass compile-time
+    # constants through functools.partial keywords instead)
+    for outer in ast.walk(mod.tree):
+        if not isinstance(outer, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        outer_locals = _local_names(outer)
+        for stmt in ast.walk(outer):
+            if stmt is outer or not _is_kernel_def(stmt):
+                continue
+            if not any(stmt is s or stmt in ast.walk(s)
+                       for s in outer.body):
+                continue
+            kernel_locals = _local_names(stmt)
+            for used in ast.walk(stmt):
+                if not (isinstance(used, ast.Name)
+                        and isinstance(used.ctx, ast.Load)):
+                    continue
+                nm = used.id
+                if (nm in kernel_locals or nm in module_names
+                        or nm in _BUILTINS):
+                    continue
+                if nm in outer_locals:
+                    findings.append(mod.finding(
+                        "pallas-kernel-hygiene", used,
+                        f"kernel {stmt.name!r} closes over {nm!r} from the "
+                        "enclosing function -- traced values leak into the "
+                        "kernel; bind compile-time constants via "
+                        "functools.partial keyword-only params"))
+
+    # (b) every pallas_call declares its memory layout
+    for call in ast.walk(mod.tree):
+        if not isinstance(call, ast.Call):
+            continue
+        fname = (call.func.attr if isinstance(call.func, ast.Attribute)
+                 else call.func.id if isinstance(call.func, ast.Name)
+                 else None)
+        if fname != "pallas_call":
+            continue
+        for req in ("in_specs", "out_specs"):
+            if _kwarg(call, req) is None:
+                findings.append(mod.finding(
+                    "pallas-kernel-hygiene", call,
+                    f"pallas_call without {req}: every ref must declare its "
+                    "memory space/tiling (BlockSpec) -- implicit ANY specs "
+                    "hide VMEM pressure and break the dense-free proofs"))
+
+    # (c) no f64 construction inside kernel bodies
+    for fn in ast.walk(mod.tree):
+        if not _is_kernel_def(fn):
+            continue
+        for n in ast.walk(fn):
+            if isinstance(n, (ast.Name, ast.Attribute)):
+                d = _dotted(n)
+                if d and d.split(".")[-1] in ("float64", "f64", "double"):
+                    findings.append(mod.finding(
+                        "pallas-kernel-hygiene", n,
+                        "f64 inside a kernel: TPU has no f64 vector unit "
+                        "and interpret mode would silently diverge"))
+            elif isinstance(n, ast.Call):
+                fname = (n.func.attr if isinstance(n.func, ast.Attribute)
+                         else n.func.id if isinstance(n.func, ast.Name)
+                         else None)
+                if fname not in _ARRAY_CTORS:
+                    continue
+                dtype_pos = _ARRAY_CTORS[fname]
+                has_dtype = (len(n.args) > dtype_pos
+                             or _kwarg(n, "dtype") is not None)
+                has_float = any(isinstance(a, ast.Constant)
+                                and type(a.value) is float
+                                for a in ast.walk(n))
+                if not has_dtype and has_float:
+                    findings.append(mod.finding(
+                        "pallas-kernel-hygiene", n,
+                        f"{fname} from a python float literal without an "
+                        "explicit dtype widens to f64 under x64; pass "
+                        "dtype= explicitly"))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# R6: shard-map-spec-consistency
+# --------------------------------------------------------------------------
+
+#: the repo's mesh axis vocabulary (launch/mesh.py: trailing axes of this
+#: tuple; 'model' is the non-worker axis)
+MESH_AXES = ("pod", "data", "model")
+_COLLECTIVES = {"psum", "pmean", "pmax", "pmin", "all_gather", "axis_index",
+                "ppermute", "pshuffle", "all_to_all", "psum_scatter"}
+
+
+def _spec_strings(node: ast.expr) -> List[ast.Constant]:
+    """String constants inside P(...) calls under ``node``."""
+    out = []
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            fname = (n.func.id if isinstance(n.func, ast.Name)
+                     else n.func.attr if isinstance(n.func, ast.Attribute)
+                     else None)
+            if fname in ("P", "PartitionSpec"):
+                for a in n.args:
+                    for c in ast.walk(a):
+                        if (isinstance(c, ast.Constant)
+                                and isinstance(c.value, str)):
+                            out.append(c)
+    return out
+
+
+@rule("shard-map-spec-consistency",
+      "literal in_specs/out_specs arity vs the callee signature; P() and "
+      "collective axis names vs the ('pod','data','model') mesh")
+def check_shard_map_specs(mod: Module) -> List[Finding]:
+    findings: List[Finding] = []
+    defs = {n.name: n for n in ast.walk(mod.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    for call in ast.walk(mod.tree):
+        if not isinstance(call, ast.Call):
+            continue
+        fname = (call.func.attr if isinstance(call.func, ast.Attribute)
+                 else call.func.id if isinstance(call.func, ast.Name)
+                 else None)
+        if fname != "shard_map":
+            continue
+        in_specs = _kwarg(call, "in_specs") or (
+            call.args[2] if len(call.args) > 2 else None)
+        out_specs = _kwarg(call, "out_specs") or (
+            call.args[3] if len(call.args) > 3 else None)
+        manual = _kwarg(call, "manual_axes")
+
+        # literal axis names must belong to the mesh vocabulary
+        literal_axes: Set[str] = set()
+        for spec_node in (in_specs, out_specs, manual):
+            if spec_node is None:
+                continue
+            for c in _spec_strings(spec_node):
+                literal_axes.add(c.value)
+                if c.value not in MESH_AXES:
+                    findings.append(mod.finding(
+                        "shard-map-spec-consistency", c,
+                        f"axis {c.value!r} is not a mesh axis; the device "
+                        f"meshes name trailing axes of {MESH_AXES}"))
+            if isinstance(spec_node, (ast.Tuple, ast.List)) is False:
+                continue
+        if isinstance(manual, (ast.Tuple, ast.List)):
+            for c in ast.walk(manual):
+                if isinstance(c, ast.Constant) and isinstance(c.value, str):
+                    literal_axes.add(c.value)
+
+        # arity: literal in_specs tuple vs a same-file callee signature
+        callee = None
+        if call.args and isinstance(call.args[0], ast.Name):
+            callee = defs.get(call.args[0].id)
+        if callee is not None and isinstance(in_specs, (ast.Tuple, ast.List)):
+            n_specs = len(in_specs.elts)
+            total = len(callee.args.args) + len(callee.args.posonlyargs)
+            required = total - len(callee.args.defaults)
+            if not (required <= n_specs <= total) and not callee.args.vararg:
+                findings.append(mod.finding(
+                    "shard-map-spec-consistency", in_specs,
+                    f"in_specs has {n_specs} entries but callee "
+                    f"{callee.name!r} takes "
+                    + (f"{required}" if required == total
+                       else f"{required}..{total}")
+                    + " positional args -- shard_map would fail (or "
+                    "silently broadcast) at trace time"))
+
+        # collective axis names inside the callee body
+        if callee is None:
+            continue
+        for n in ast.walk(callee):
+            if not isinstance(n, ast.Call):
+                continue
+            cname = (n.func.attr if isinstance(n.func, ast.Attribute)
+                     else n.func.id if isinstance(n.func, ast.Name)
+                     else None)
+            if cname not in _COLLECTIVES:
+                continue
+            ax = _kwarg(n, "axis_name")
+            if ax is None:
+                pos = 0 if cname == "axis_index" else 1
+                ax = n.args[pos] if len(n.args) > pos else None
+            if not (isinstance(ax, ast.Constant)
+                    and isinstance(ax.value, str)):
+                continue
+            allowed = literal_axes or set(MESH_AXES)
+            if ax.value not in allowed:
+                findings.append(mod.finding(
+                    "shard-map-spec-consistency", ax,
+                    f"{cname} over axis {ax.value!r} inside "
+                    f"{callee.name!r}, but the shard_map specs only name "
+                    f"axes {sorted(allowed)} -- the collective would "
+                    "cross an axis the body is not manual over"))
+    return findings

@@ -59,6 +59,12 @@ DOWNLINK_FOLD = 0xD0401B17
 #: zero vector, participation-masked to zero), drawn once from
 #: fold_in(key(0), PIPELINE_FOLD) so every execution path primes identically.
 PIPELINE_FOLD = 0xF1FE11E
+#: fold_in tag for the reference driver's run key: Run.reference() derives
+#: its trajectory key from fold_in(key(seed), REFERENCE_FOLD) so it is
+#: decorrelated from the problem-data key (jax.random.key(seed) raw).  The
+#: value predates this name; changing it would shift every recorded
+#: reference trajectory.
+REFERENCE_FOLD = 0x5EED
 
 
 @dataclasses.dataclass(frozen=True)

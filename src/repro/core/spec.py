@@ -702,7 +702,8 @@ class Run:
                 gamma = self._tune(L=prob.L(), Ltilde=prob.L_tilde()).gamma
         if key is None:
             # decorrelated from the problem-data key (jax.random.key(seed))
-            key = jax.random.fold_in(jax.random.key(spec.seed), 0x5EED)
+            key = jax.random.fold_in(jax.random.key(spec.seed),
+                                     efbv.REFERENCE_FOLD)
 
         return efbv.run_reference(
             algo=self.algo, grad_fn=gf, x0=x0, gamma=gamma, steps=spec.steps,

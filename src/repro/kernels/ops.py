@@ -20,7 +20,12 @@ Array = jax.Array
 
 
 def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
+    # sanitize mode (repro.analysis.sanitize) forces interpret even on TPU:
+    # interpret mode raises on out-of-bounds ref indexing where the hardware
+    # silently clamps
+    from repro.analysis import sanitize
+
+    return sanitize.active() or jax.default_backend() != "tpu"
 
 
 def _to_slabs(x: Array, block: int, tile: int = K.TILE_NB

@@ -75,11 +75,20 @@ def parse_args(argv=None):
                          "with fake host devices on CPU)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--sanitize", action="store_true",
+                    help="debug run: jax_debug_nans + Pallas interpret mode "
+                         "with out-of-bounds checking "
+                         "(repro.analysis.sanitize; see make sanitize-smoke)")
     return ap.parse_args(argv)
 
 
 def main(argv=None):
     args = parse_args(argv)
+    if args.sanitize:
+        from repro.analysis import sanitize
+
+        sanitize.enable()
+        print("[finetune] sanitize mode: jax_debug_nans + Pallas interpret")
 
     from repro.core import ExperimentSpec, SpecError
     from repro.train.loop import FinetuneLoop, FinetuneSettings

@@ -1,153 +1,11 @@
-"""Roofline-term extraction from compiled executables.
+"""Back-compat shim: roofline extraction moved to :mod:`repro.analysis.hlo`."""
 
-collective_bytes is not in cost_analysis(); we parse the post-SPMD HLO text
-and sum the *output* bytes of every communication op (all-gather, all-reduce,
-reduce-scatter, all-to-all, collective-permute), per op kind.  Shapes in the
-optimized HLO are per-device, so the totals are per-device wire bytes per
-step -- exactly the numerator of the collective roofline term.
-"""
-
-from __future__ import annotations
-
-import dataclasses
-import re
-from typing import Dict, Optional
-
-# v5e hardware constants (assignment)
-PEAK_FLOPS_BF16 = 197e12       # per chip
-HBM_BW = 819e9                 # bytes/s per chip
-ICI_BW = 50e9                  # bytes/s per link
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16,
-}
-
-_COLL_RE = re.compile(
-    r"=\s*(?:\(([^)]*)\)|(\w+\[[\d,]*\]))\S*\s+"
-    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute|"
-    r"all-gather-start|all-reduce-start|collective-permute-start)\(")
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-
-
-def _shape_bytes(shape_str: str) -> int:
-    total = 0
-    for m in _SHAPE_RE.finditer(shape_str):
-        dt, dims = m.group(1), m.group(2)
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-def collective_bytes(hlo_text: str) -> Dict[str, int]:
-    """Per-collective-kind output bytes (per device)."""
-    out: Dict[str, int] = {}
-    for line in hlo_text.splitlines():
-        m = _COLL_RE.search(line)
-        if not m:
-            continue
-        shape_str = m.group(1) or m.group(2)
-        kind = m.group(3).replace("-start", "")
-        out[kind] = out.get(kind, 0) + _shape_bytes(shape_str)
-    return out
-
-
-@dataclasses.dataclass
-class Roofline:
-    """The three roofline terms (seconds) + raw numerators."""
-
-    hlo_flops: float
-    hlo_bytes: float
-    coll_bytes: float
-    coll_breakdown: Dict[str, int]
-    n_chips: int
-    xla_flops: float = 0.0  # raw cost_analysis (undercounts scan bodies)
-    xla_bytes: float = 0.0
-
-    @property
-    def t_compute(self) -> float:
-        # cost_analysis flops are whole-program per-device after SPMD
-        return self.hlo_flops / PEAK_FLOPS_BF16
-
-    @property
-    def t_memory(self) -> float:
-        return self.hlo_bytes / HBM_BW
-
-    @property
-    def t_collective(self) -> float:
-        return self.coll_bytes / ICI_BW
-
-    @property
-    def bottleneck(self) -> str:
-        terms = {"compute": self.t_compute, "memory": self.t_memory,
-                 "collective": self.t_collective}
-        return max(terms, key=terms.get)
-
-    def as_dict(self) -> Dict:
-        return {
-            "hlo_flops_per_device": self.hlo_flops,
-            "hlo_bytes_per_device": self.hlo_bytes,
-            "coll_bytes_per_device": self.coll_bytes,
-            "coll_breakdown": self.coll_breakdown,
-            "t_compute_s": self.t_compute,
-            "t_memory_s": self.t_memory,
-            "t_collective_s": self.t_collective,
-            "bottleneck": self.bottleneck,
-            "n_chips": self.n_chips,
-            "xla_cost_analysis_flops": self.xla_flops,
-            "xla_cost_analysis_bytes": self.xla_bytes,
-        }
-
-
-def analyze(compiled, n_chips: int, hlo_text: Optional[str] = None) -> Roofline:
-    """Roofline terms from the compiled artifact.
-
-    Primary source: the trip-count-aware HLO cost model (repro.launch.hlo_cost)
-    -- XLA-CPU's cost_analysis() counts while-loop (lax.scan) bodies once
-    instead of x trip-count, which under-reports every scan-over-layers model
-    here by ~n_layers.  The raw cost_analysis numbers are retained in
-    ``xla_flops`` / ``xla_bytes`` for reference.
-    """
-    from repro.launch import hlo_cost as HC
-
-    cost = compiled.cost_analysis() or {}
-    if isinstance(cost, list):  # older API returned [dict]
-        cost = cost[0] if cost else {}
-    txt = hlo_text if hlo_text is not None else compiled.as_text()
-    c = HC.hlo_cost(txt)
-    r = Roofline(
-        hlo_flops=c.flops,
-        hlo_bytes=c.hbm_bytes,
-        coll_bytes=c.coll_bytes,
-        coll_breakdown={k: int(v) for k, v in c.coll_breakdown.items()},
-        n_chips=n_chips,
-    )
-    r.xla_flops = float(cost.get("flops", 0.0))
-    r.xla_bytes = float(cost.get("bytes accessed", 0.0))
-    return r
-
-
-def memory_stats(compiled) -> Optional[Dict[str, float]]:
-    try:
-        ma = compiled.memory_analysis()
-    except Exception:
-        return None
-    if ma is None:
-        return None
-    keys = ["argument_size_in_bytes", "output_size_in_bytes",
-            "temp_size_in_bytes", "generated_code_size_in_bytes",
-            "alias_size_in_bytes"]
-    out = {}
-    for k in keys:
-        v = getattr(ma, k, None)
-        if v is not None:
-            out[k] = float(v)
-    if not out and isinstance(ma, dict):
-        out = {k: float(v) for k, v in ma.items()}
-    return out or None
+from repro.analysis.hlo import (  # noqa: F401
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    Roofline,
+    analyze,
+    collective_bytes,
+    memory_stats,
+)

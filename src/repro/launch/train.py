@@ -132,6 +132,10 @@ def parse_args(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--heterogeneity", type=float, default=0.5)
+    ap.add_argument("--sanitize", action="store_true",
+                    help="debug run: jax_debug_nans + Pallas interpret mode "
+                         "with out-of-bounds checking "
+                         "(repro.analysis.sanitize; see make sanitize-smoke)")
     return ap.parse_args(argv)
 
 
@@ -173,6 +177,11 @@ def spec_from_args(args, n: int) -> ExperimentSpec:
 
 def main(argv=None):
     args = parse_args(argv)
+    if args.sanitize:
+        from repro.analysis import sanitize
+
+        sanitize.enable()
+        print("[train] sanitize mode: jax_debug_nans + Pallas interpret")
     try:
         if args.spec:
             with open(args.spec) as f:

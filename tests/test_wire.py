@@ -235,7 +235,7 @@ def test_sparse_allgather_equals_dense_psum(comp):
     grads = {"w": jax.random.normal(KEY, (n,) + shape)}
     h = {"w": jnp.zeros((n,) + shape)}
     h_avg = {"w": jnp.zeros(shape)}
-    keys = jax.random.split(KEY, n)
+    keys = jax.random.split(KEY, n)  # repro: noqa(prng-reuse) -- deterministic fixture, draws need not be independent
     dense = efbv_aggregate_reference(algo, keys, grads, h, h_avg,
                                      mode="dense_psum")
     sparse = efbv_aggregate_reference(algo, keys, grads, h, h_avg,

@@ -1,73 +1,16 @@
 #!/usr/bin/env python
-"""Offline link checker for the markdown docs.
-
-Validates every markdown link target in the given files/directories:
-
-  * relative links must resolve to an existing file or directory
-    (anchors are stripped; pure-anchor links are checked against the
-    file's own headings);
-  * http(s) links are only syntax-checked (CI runs offline).
-
-Exit code 1 with a per-link report when anything dangles.
-
-Usage: python tools/check_links.py docs README.md
-"""
+"""Thin shim: the link checker lives in repro.analysis.docs now
+(``python -m repro.analysis --docs``); this keeps the old CI invocation
+``python tools/check_links.py docs README.md`` working."""
 
 from __future__ import annotations
 
-import re
 import sys
 from pathlib import Path
 
-LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
-HEADING_RE = re.compile(r"^#+\s+(.*)$", re.MULTILINE)
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-
-def slugify(heading: str) -> str:
-    """GitHub-style anchor slug."""
-    s = re.sub(r"[`*_]", "", heading.strip().lower())
-    s = re.sub(r"[^\w\- ]", "", s)
-    return s.replace(" ", "-")
-
-
-def check_file(md: Path) -> list[str]:
-    text = md.read_text()
-    anchors = {slugify(h) for h in HEADING_RE.findall(text)}
-    errors = []
-    for target in LINK_RE.findall(text):
-        if target.startswith(("http://", "https://", "mailto:")):
-            continue
-        path_part, _, anchor = target.partition("#")
-        if not path_part:  # same-file anchor
-            if anchor and slugify(anchor) not in anchors:
-                errors.append(f"{md}: dangling anchor #{anchor}")
-            continue
-        resolved = (md.parent / path_part).resolve()
-        if not resolved.exists():
-            errors.append(f"{md}: broken link -> {target}")
-    return errors
-
-
-def main(argv: list[str]) -> int:
-    if not argv:
-        argv = ["docs", "README.md"]
-    files: list[Path] = []
-    for a in argv:
-        p = Path(a)
-        if p.is_dir():
-            files.extend(sorted(p.rglob("*.md")))
-        elif p.exists():
-            files.append(p)
-        else:
-            print(f"check_links: no such path {a}", file=sys.stderr)
-            return 2
-    errors = [e for f in files for e in check_file(f)]
-    for e in errors:
-        print(e, file=sys.stderr)
-    print(f"check_links: {len(files)} files, "
-          f"{'FAIL' if errors else 'ok'} ({len(errors)} broken)")
-    return 1 if errors else 0
-
+from repro.analysis.docs import check_file, main, slugify  # noqa: E402,F401
 
 if __name__ == "__main__":
     sys.exit(main(sys.argv[1:]))
